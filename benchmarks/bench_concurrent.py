@@ -1,0 +1,67 @@
+"""Paper Fig. 5/6: the full-system workload — concurrent inserts, deletes
+and searches with periodic background StreamingMerge; reports user-facing
+latencies and recall (CPU-scale rendition of the week-long experiment)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.index import brute_force, recall_at_k
+from repro.core.system import bootstrap_system
+
+from .common import DIM, dataset, emit, queryset
+
+
+def main(quick: bool = False):
+    n = 1024 if quick else 2048
+    updates = 512 if quick else 2048
+    pts = dataset(n * 3)
+    q = queryset(32)
+    cfg = SystemConfig(
+        index=IndexConfig(capacity=n * 8, dim=DIM, R=24, L_build=32,
+                          L_search=48, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=n // 8, merge_threshold=n // 4,
+        temp_capacity=n, insert_batch=64)
+    sys_ = bootstrap_system(pts[:n], np.arange(n), cfg)
+    live = dict(enumerate(pts[:n]))
+    rng = np.random.default_rng(2)
+
+    ins_lat, del_lat, search_lat, recalls = [], [], [], []
+    next_id = n
+    for i in range(updates):
+        t = time.perf_counter()
+        sys_.insert(next_id, pts[n + (next_id % (2 * n))])
+        ins_lat.append(time.perf_counter() - t)
+        live[next_id] = pts[n + (next_id % (2 * n))]
+        next_id += 1
+        victim = int(rng.choice(sorted(live)))
+        t = time.perf_counter()
+        sys_.delete(victim)
+        del_lat.append(time.perf_counter() - t)
+        live.pop(victim)
+        if (i + 1) % (updates // 4) == 0:
+            t = time.perf_counter()
+            ids, _ = sys_.search(q, k=5)
+            search_lat.append(time.perf_counter() - t)
+            keys = np.asarray(sorted(live))
+            mat = np.stack([live[k] for k in keys])
+            gt = brute_force(jnp.asarray(mat), jnp.ones(len(keys), bool),
+                             jnp.asarray(q), 5)
+            recalls.append(float(recall_at_k(
+                jnp.asarray(ids), jnp.asarray(keys[np.asarray(gt)]))))
+
+    emit("fig6_insert_latency", float(np.median(ins_lat)),
+         f"p90={np.percentile(ins_lat, 90) * 1e6:.0f}us")
+    emit("fig6_delete_latency", float(np.median(del_lat)),
+         f"p90={np.percentile(del_lat, 90) * 1e6:.0f}us")
+    emit("fig5_search_latency", float(np.median(search_lat)),
+         "recall_mean=%.3f merges=%d" % (np.mean(recalls),
+                                         sys_.stats.merges))
+
+
+if __name__ == "__main__":
+    main()

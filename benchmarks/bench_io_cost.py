@@ -1,0 +1,29 @@
+"""Paper §6.2 "I/O Cost of Search": hop count (the SSD-read proxy) and
+distance computations per query — a tiny fraction of brute force."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lti import build_lti, search_lti
+
+from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+
+
+def main(quick: bool = False):
+    n = 1500 if quick else 3000
+    pts, q = dataset(n), queryset()
+    cfg, pq = default_cfg(n), default_pq()
+    lti = build_lti(pts, cfg, pq)
+    for L in ((48,) if quick else (32, 48, 64, 96)):
+        def s():
+            return search_lti(lti, jnp.asarray(q), cfg, k=5, L=L)
+
+        (ids, d, hops, cmps), secs = timed(s)
+        emit(f"io_cost_L{L}", secs / len(q),
+             "hops=%.0f cmps=%.0f frac_of_bruteforce=%.4f" % (
+                 float(hops.mean()), float(cmps.mean()),
+                 float(cmps.mean()) / n))
+
+
+if __name__ == "__main__":
+    main()

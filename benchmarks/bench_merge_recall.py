@@ -1,0 +1,52 @@
+"""Paper Fig. 4: recall evolution over StreamingMerge cycles (PQ distances
+throughout — expect a small initial dip, then stability)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.index import brute_force, recall_at_k
+from repro.core.lti import build_lti, search_lti
+from repro.core.merge import streaming_merge
+
+from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+
+
+def lti_recall(lti, cfg, q, k=5):
+    ids, d, hops, _ = search_lti(lti, jnp.asarray(q), cfg, k=k,
+                                 L=cfg.L_search)
+    mask = lti.graph.active & ~lti.graph.deleted
+    gt = brute_force(lti.graph.vectors, mask, jnp.asarray(q), k)
+    return float(recall_at_k(ids, gt)), float(hops.mean())
+
+
+def run(cycles=8, n=2000, frac=0.1):
+    pts, q = dataset(n), queryset()
+    cfg, pq = default_cfg(n), default_pq()
+    lti = build_lti(pts, cfg, pq)
+    rng = np.random.default_rng(4)
+    recalls = [lti_recall(lti, cfg, q)[0]]
+    n_chg = int(n * frac)
+    for _ in range(cycles):
+        live = np.flatnonzero(np.asarray(lti.graph.active))
+        victims = rng.choice(live, n_chg, replace=False)
+        dmask = np.zeros(cfg.capacity, bool)
+        dmask[victims] = True
+        vecs = np.asarray(lti.graph.vectors)[victims]
+        lti, _ = streaming_merge(lti, jnp.asarray(vecs),
+                                 jnp.ones(n_chg, bool), jnp.asarray(dmask),
+                                 cfg, pq, insert_chunk=128, block=1024)
+        recalls.append(lti_recall(lti, cfg, q)[0])
+    return recalls
+
+
+def main(quick: bool = False):
+    cycles = 3 if quick else 8
+    recalls, secs = timed(run, cycles=cycles)
+    emit("fig4_merge_recall", secs / cycles,
+         "r0=%.3f r1=%.3f final=%.3f" % (recalls[0], recalls[1],
+                                         recalls[-1]))
+
+
+if __name__ == "__main__":
+    main()

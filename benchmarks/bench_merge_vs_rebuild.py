@@ -1,0 +1,42 @@
+"""Paper Table 2 / Fig. 11: StreamingMerge cost vs full rebuild for 5%,
+10%, 50% change sets — the paper's core cost claim (merge ~ O(change))."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.lti import build_lti
+from repro.core.merge import streaming_merge
+
+from .common import dataset, default_cfg, default_pq, emit, timed
+
+
+def main(quick: bool = False):
+    n = 1500 if quick else 3000
+    pts = dataset(n)
+    cfg, pq = default_cfg(n), default_pq()
+    lti, t_build = timed(build_lti, pts, cfg, pq)
+    emit("tab2_full_rebuild", t_build, f"n={n}")
+    rng = np.random.default_rng(9)
+    fracs = (0.1,) if quick else (0.05, 0.1, 0.5)
+    for frac in fracs:
+        n_chg = int(n * frac)
+        live = np.flatnonzero(np.asarray(lti.graph.active))
+        victims = rng.choice(live, n_chg, replace=False)
+        dmask = np.zeros(cfg.capacity, bool)
+        dmask[victims] = True
+        vecs = np.asarray(lti.graph.vectors)[victims]
+
+        def merge():
+            out, _ = streaming_merge(
+                lti, jnp.asarray(vecs), jnp.ones(n_chg, bool),
+                jnp.asarray(dmask), cfg, pq, insert_chunk=128, block=1024)
+            return out
+
+        _, t_merge = timed(merge)
+        emit(f"tab2_merge_{int(frac * 100)}pct", t_merge,
+             f"rel_to_rebuild={t_merge / t_build:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 7: scaling.  Thread-count scaling becomes batch-size scaling
+(the TPU's parallelism axis): search throughput vs query batch, and merge
+runtime vs block size (the paper's merge-thread knob)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.lti import build_lti, search_lti
+from repro.core.merge import streaming_merge
+
+from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+
+
+def main(quick: bool = False):
+    n = 1500 if quick else 3000
+    pts = dataset(n)
+    cfg, pq = default_cfg(n), default_pq()
+    lti = build_lti(pts, cfg, pq)
+
+    batches = (8, 64) if quick else (8, 32, 128, 512)
+    for b in batches:
+        q = queryset(b)
+
+        def s():
+            return search_lti(lti, jnp.asarray(q), cfg, k=5,
+                              L=cfg.L_search)
+
+        s()  # warm the jit cache
+        _, secs = timed(s, repeats=3)
+        emit(f"fig7_search_batch_{b}", secs,
+             f"qps={b / secs:.0f}")
+
+    rng = np.random.default_rng(1)
+    n_chg = n // 10
+    victims = rng.choice(n, n_chg, replace=False)
+    dmask = np.zeros(cfg.capacity, bool)
+    dmask[victims] = True
+    vecs = np.asarray(lti.graph.vectors)[victims]
+    blocks = (512,) if quick else (256, 1024, 4096)
+    for blk in blocks:
+        def m():
+            out, _ = streaming_merge(
+                lti, jnp.asarray(vecs), jnp.ones(n_chg, bool),
+                jnp.asarray(dmask), cfg, pq, insert_chunk=128, block=blk)
+            return out
+
+        _, secs = timed(m)
+        emit(f"fig7_merge_block_{blk}", secs,
+             f"updates_per_sec={2 * n_chg / secs:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Shared benchmark utilities (CPU-scale datasets + recall measurement)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import IndexConfig, PQConfig
+from repro.core.index import brute_force, recall_at_k, search
+
+DIM = 32
+N = 3000
+
+
+def dataset(n=N, dim=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((32, dim)) * 3.0
+    which = rng.integers(0, 32, n)
+    return (centers[which] + rng.standard_normal((n, dim))).astype(
+        np.float32)
+
+
+def queryset(nq=64, dim=DIM, seed=1):
+    return dataset(nq, dim, seed)
+
+
+def default_cfg(n=N, dim=DIM, **kw):
+    base = dict(capacity=2 * n, dim=dim, R=28, L_build=40, L_search=60,
+                alpha=1.2)
+    base.update(kw)
+    return IndexConfig(**base)
+
+
+def default_pq(dim=DIM):
+    return PQConfig(dim=dim, m=8, ksub=64, kmeans_iters=6)
+
+
+def mem_recall(state, cfg, queries, k=5, L=None):
+    ids, d, hops, cmps = search(state, jnp.asarray(queries), cfg, k=k,
+                                L=L or cfg.L_search)
+    mask = state.active & ~state.deleted
+    gt = brute_force(state.vectors, mask, jnp.asarray(queries), k)
+    return float(recall_at_k(ids, gt)), hops, cmps
+
+
+def timed(fn, *args, repeats=1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    import jax
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,81 @@
+"""End-to-end serving driver: sustained concurrent insert/delete/search
+stream against a FreshDiskANN system with background merges — the paper's
+§6.2 steady-state experiment at CPU scale.
+
+    PYTHONPATH=src python examples/serve_ann.py --minutes 0.5
+"""
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.index import brute_force, recall_at_k
+from repro.core.system import bootstrap_system
+from repro.data.pipelines import vector_stream
+
+DIM = 32
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--minutes", type=float, default=0.5)
+    ap.add_argument("--points", type=int, default=2048)
+    args = ap.parse_args()
+    n = args.points
+
+    corpus = next(vector_stream(n, DIM, seed=1))
+    cfg = SystemConfig(
+        index=IndexConfig(capacity=8 * n, dim=DIM, R=24, L_build=32,
+                          L_search=48, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=64, kmeans_iters=6),
+        ro_snapshot_points=n // 8, merge_threshold=n // 4,
+        temp_capacity=n, insert_batch=64)
+    system = bootstrap_system(corpus, np.arange(n), cfg)
+    live = dict(enumerate(corpus))
+    upd = vector_stream(64, DIM, seed=7)
+    qs = vector_stream(16, DIM, seed=9)
+    rng = np.random.default_rng(0)
+
+    next_id = n
+    deadline = time.time() + args.minutes * 60
+    ins_lat, recalls = [], []
+    cycle = 0
+    while time.time() < deadline:
+        batch = next(upd)
+        for v in batch:                      # steady state: equal in/out
+            t = time.perf_counter()
+            system.insert(next_id, v)
+            ins_lat.append(time.perf_counter() - t)
+            live[next_id] = v
+            next_id += 1
+        victims = rng.choice(sorted(live), 64, replace=False)
+        for e in victims:
+            system.delete(int(e))
+            live.pop(int(e))
+        cycle += 1
+        if cycle % 4 == 0:
+            q = next(qs)
+            t = time.perf_counter()
+            ids, _ = system.search(q, k=5)
+            s_lat = time.perf_counter() - t
+            keys = np.asarray(sorted(live))
+            mat = np.stack([live[k] for k in keys])
+            gt = brute_force(jnp.asarray(mat), jnp.ones(len(keys), bool),
+                             jnp.asarray(q), 5)
+            rec = float(recall_at_k(jnp.asarray(ids),
+                                    jnp.asarray(keys[np.asarray(gt)])))
+            recalls.append(rec)
+            print(f"[steady-state] t={time.time() - deadline + args.minutes * 60:5.0f}s "
+                  f"size={system.size} recall@5={rec:.3f} "
+                  f"search={s_lat * 1e3:.0f}ms "
+                  f"ins_p50={np.median(ins_lat) * 1e3:.1f}ms "
+                  f"merges={system.stats.merges}")
+    print(f"final: mean recall {np.mean(recalls):.3f}, "
+          f"{system.stats.inserts} inserts, {system.stats.deletes} deletes, "
+          f"{system.stats.merges} merges")
+
+
+if __name__ == "__main__":
+    main()

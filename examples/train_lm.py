@@ -1,0 +1,70 @@
+"""End-to-end LM training driver: a ~100M-param qwen-family model trained
+for a few hundred steps on the synthetic token stream, with checkpointing
+and crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(CPU: use --small for a fast demonstration run.)
+"""
+import argparse
+
+import jax
+
+from repro.data.pipelines import lm_token_stream
+from repro.distributed.ctx import activation_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import TransformerConfig, init_params, lm_loss
+from repro.optim.adamw import adamw_init
+from repro.training.loop import run_training
+from repro.training.steps import make_train_step
+
+
+def config(small: bool) -> TransformerConfig:
+    if small:
+        return TransformerConfig(
+            name="lm-demo-small", n_layers=2, d_model=128, n_heads=4,
+            n_kv_heads=2, d_head=32, d_ff=256, vocab=2048, qk_norm=True,
+            pattern=("g",), q_chunk=64, kv_chunk=64, dtype="float32")
+    # ~100M params: 12L x 512 with a 32k vocab
+    return TransformerConfig(
+        name="lm-demo-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=4, d_head=64, d_ff=2048, vocab=32768, qk_norm=True,
+        pattern=("g",), q_chunk=128, kv_chunk=128, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = config(args.small)
+    if args.small:
+        args.seq = min(args.seq, 64)
+    mesh = make_host_mesh()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params")
+    opt = adamw_init(params)
+    step = make_train_step(
+        lambda p, b: lm_loss(p, b["tokens"], b["targets"], cfg), lr=1e-3)
+
+    def wrapped(p, o, b):
+        with activation_sharding(mesh):
+            return step(p, o, b)
+
+    jit_step = jax.jit(wrapped, donate_argnums=(0, 1))
+    params, opt, log = run_training(
+        mesh, jit_step, params, opt,
+        lambda s: lm_token_stream(args.batch, args.seq, cfg.vocab,
+                                  start_step=s),
+        n_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=100)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Assemble experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+Usage: PYTHONPATH=src python scripts/assemble_results.py [--md]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_arch  # noqa: E402
+
+PEAK = 197e12
+HBM_GB = 16 * 2**30
+
+# expected trips for data-dependent loops (beam search): the paper's own
+# operating point — ~"a little more than L" hops (L=100) -> 120 expansions.
+ANN_SEARCH_TRIP = 120
+
+
+def model_flops(arch_name, shape, kind, meta):
+    """6*N*D (dense) / 6*N_active*D (MoE) per step — 'useful' flops."""
+    try:
+        arch = get_arch(arch_name)
+    except KeyError:
+        return None
+    if arch.family != "lm":
+        return None
+    cfg = arch.full_config
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if kind == "train":
+        tokens = meta.get("batch", 0) * meta.get("seq", 0)
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = meta.get("batch", 0) * meta.get("seq", 0)
+        return 2.0 * n * tokens
+    if kind == "decode":
+        return 2.0 * n * meta.get("batch", 1)
+    return None
+
+
+def load_rows(out_dir="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+    if r["status"] == "SKIP":
+        return (f"| {arch} | {shape} | {mesh} | SKIP | — | — | — | — | — | "
+                f"{r['reason'][:60]} |")
+    if r["status"] != "OK":
+        return f"| {arch} | {shape} | {mesh} | FAIL | — | — | — | — | — | {r.get('error','')[:60]} |"
+    roof = r["roofline"]
+    peak = r["memory_analysis"]["peak_bytes"] / 2**30
+    tc, tm, tl = roof["t_compute"], roof["t_memory"], roof["t_collective"]
+    if roof.get("dynamic_loops") and r["kind"] == "ann_search":
+        # the whole cell IS the data-dependent beam search: scale by the
+        # paper's ~120 expansions/query operating point
+        note = f"dyn-loops x{ANN_SEARCH_TRIP} applied"
+        tc, tm, tl = (t * ANN_SEARCH_TRIP for t in (tc, tm, tl))
+    elif roof.get("dynamic_loops"):
+        # insert/merge: static block passes dominate; their embedded beam
+        # searches are counted once (slight underestimate)
+        note = "beam loops counted 1x"
+    else:
+        note = ""
+    bott = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+    try:
+        arch_o = get_arch(arch)
+        cell = arch_o.cell(shape)
+        mf = model_flops(arch, shape, r["kind"], cell.meta)
+    except Exception:
+        mf = None
+    n_chips = 512 if "2x16" in mesh else 256
+    useful = (f"{mf / (roof['flops'] * n_chips):.2f}"
+              if mf and roof["flops"] else "—")
+    step = max(tc, tm, tl)
+    mfu = (mf / n_chips / PEAK) / step if mf and step else None
+    mfu_s = f"{100 * mfu:.1f}%" if mfu else "—"
+    return (f"| {arch} | {shape} | {mesh} | OK | {peak:.1f} | "
+            f"{tc:.4f} | {tm:.4f} | {tl:.4f} | {bott} | "
+            f"useful={useful} mfu={mfu_s} {note} |")
+
+
+def main():
+    rows = load_rows()
+    print("| arch | shape | mesh | status | peak GiB/chip | t_comp s | "
+          "t_mem s | t_coll s | bottleneck | notes |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = {"pod16x16": 0, "pod2x16x16": 1}
+    rows.sort(key=lambda r: (r["arch"], r["shape"], order.get(r["mesh"], 2)))
+    for r in rows:
+        print(fmt_row(r))
+    n_ok = sum(r["status"] == "OK" for r in rows)
+    n_skip = sum(r["status"] == "SKIP" for r in rows)
+    n_fail = sum(r["status"] == "FAIL" for r in rows)
+    over = [f'{r["arch"]}x{r["shape"]}x{r["mesh"]}' for r in rows
+            if r["status"] == "OK"
+            and r["memory_analysis"]["peak_bytes"] > HBM_GB]
+    print(f"\nOK={n_ok} SKIP={n_skip} FAIL={n_fail}; "
+          f"over 16GiB/chip: {over or 'none'}")
+
+
+if __name__ == "__main__":
+    main()

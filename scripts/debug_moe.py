@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import re
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_arch
+from repro.launch.build import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_parse import analyze_text, parse_module, \
+    _shape_elems_bytes, _TRIP_RE
+from repro.configs.common import ArchSpec, Cell, lm_cells
+
+arch0 = get_arch("mixtral-8x7b")
+cfg = dataclasses.replace(arch0.full_config, n_layers=2)
+arch = ArchSpec("mixtral-2l", "lm", cfg, arch0.smoke_config, lm_cells(cfg))
+mesh = make_production_mesh()
+built = build_cell(arch, arch.cell("train_4k"), mesh)
+with mesh:
+    compiled = jax.jit(built.fn, donate_argnums=built.donate).lower(
+        *built.args).compile()
+txt = compiled.as_text()
+open("/tmp/moe_hlo.txt", "w").write(txt)
+
+# collective ops with metadata provenance, weighted by trip counts
+comps = parse_module(txt)
+entry = comps.pop("__entry_name__")
+sizes = {c: {o.name: _shape_elems_bytes(o.type_str)[1] for o in ops}
+         for c, ops in comps.items()}
+out = []
+
+def walk(cname, count):
+    for op in comps.get(cname, []):
+        if op.opcode == "while":
+            tm = _TRIP_RE.search(op.args_str)
+            trip = int(tm.group(1)) if tm else 1
+            bm = re.search(r"body=%?([\w.\-]+)", op.args_str)
+            if bm:
+                walk(bm.group(1), count * trip)
+            continue
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base in ("all-reduce", "all-gather", "all-to-all",
+                    "reduce-scatter", "collective-permute"):
+            b = sum(sizes[cname].get(o, 0) for o in op.operands)
+            m = re.search(r'op_name="([^"]+)"', op.args_str)
+            out.append((count * b, base, count,
+                        m.group(1) if m else "?"))
+
+walk(entry, 1.0)
+out.sort(reverse=True)
+total = sum(o[0] for o in out)
+print(f"total coll bytes: {total:.3e}")
+for b, kind, cnt, name in out[:25]:
+    print(f"{b/2**30:9.2f} GiB x{cnt:4.0f} {kind:18s} {name[:130]}")

@@ -1,0 +1,19 @@
+"""Regenerate the EXPERIMENTS.md roofline table from experiments/dryrun."""
+import io
+import re
+import subprocess
+import sys
+
+out = subprocess.run(
+    [sys.executable, "scripts/assemble_results.py"],
+    capture_output=True, text=True).stdout
+
+md = open("EXPERIMENTS.md").read()
+table = out.strip()
+md = re.sub(
+    r"<!-- ROOFLINE_TABLE -->.*?(?=\n\nReading the table:)",
+    "<!-- ROOFLINE_TABLE -->\n\n" + table,
+    md, flags=re.S)
+open("EXPERIMENTS.md", "w").write(md)
+print("EXPERIMENTS.md roofline table updated "
+      f"({table.count(chr(10))} lines)")

@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-iteration driver: lowers optimization variants of the three chosen
+cells and records roofline deltas into experiments/perf/*.json."""
+import json
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_arch
+from repro.launch import ann_steps
+from repro.launch.build import build_cell, _input_sds
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+
+
+def record(name, compiled):
+    import re
+    from collections import Counter
+    txt = compiled.as_text()
+    DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "u8": 1,
+          "f16": 2, "s8": 1}
+    sizes = Counter()
+    for m in re.finditer(r"= ([a-z0-9]+)\[([0-9,]+)\]", txt):
+        if m.group(1) not in DT:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            n *= int(d)
+        key = f"{m.group(1)}[{m.group(2)}]"
+        sizes[key] = n * DT[m.group(1)]
+    print(f"[perf] {name} top shapes:",
+          [(k, f"{v/2**30:.2f}GiB") for k, v in sizes.most_common(5)],
+          flush=True)
+    roof = analyze_compiled(compiled)
+    ma = compiled.memory_analysis()
+    out = {
+        "variant": name,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes
+                     - ma.alias_size_in_bytes) / 2**30,
+        "roofline": roof.as_dict(),
+    }
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{name}.json", "w") as f:
+        json.dump(out, f, indent=1)
+    r = out["roofline"]
+    print(f"[perf] {name}: peak={out['peak_gib']:.2f}GiB "
+          f"t_comp={r['t_compute']:.4f} t_mem={r['t_memory']:.4f} "
+          f"t_coll={r['t_collective']:.4f}", flush=True)
+    return out
+
+
+def merge_sdc():
+    arch = get_arch("freshdiskann-1b")
+    dep = arch.full_config
+    mesh = make_production_mesh()
+    cell = arch.cell("merge_1b")
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    lti = ann_steps.abstract_lti(dep.index, dep.pq, mesh)
+    batch = _input_sds(mesh, cell.specs(), {
+        "new_vecs": P(), "new_valid": P(), "delete_mask": P()})
+    n = len(mesh.devices.flat)
+    dmask = jax.ShapeDtypeStruct(
+        (dep.index.capacity * n,), jnp.bool_,
+        sharding=NamedSharding(mesh, P(tuple(mesh.axis_names))))
+    fn = ann_steps.make_distributed_merge(mesh, dep.index, dep.pq,
+                                          use_sdc=True)
+    with mesh:
+        compiled = jax.jit(fn, donate_argnums=(0,)).lower(
+            lti, batch["new_vecs"], batch["new_valid"], dmask).compile()
+    record("merge_1b_sdc", compiled)
+
+
+def lower_cell(arch_name, shape, tag, cfg_overrides=None):
+    import dataclasses
+    from repro.configs.common import ArchSpec, lm_cells
+    arch = get_arch(arch_name)
+    if cfg_overrides:
+        cfg = dataclasses.replace(arch.full_config, **cfg_overrides)
+        arch = ArchSpec(arch.name, arch.family, cfg, arch.smoke_config,
+                        lm_cells(cfg))
+    mesh = make_production_mesh()
+    built = build_cell(arch, arch.cell(shape), mesh)
+    with mesh:
+        compiled = jax.jit(built.fn, donate_argnums=built.donate).lower(
+            *built.args).compile()
+    record(tag, compiled)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "merge"):
+        merge_sdc()
+    if which in ("all", "mixtral"):
+        lower_cell("mixtral-8x7b", "train_4k", "mixtral_train_gathercombine")
+    if which in ("all", "qwen3"):
+        lower_cell("qwen3-14b", "train_4k", "qwen3_train_bf16p",
+                   {"attn_p_dtype": "bfloat16"})
+    if which in ("all", "qwen3_kv512"):
+        lower_cell("qwen3-14b", "train_4k", "qwen3_train_bf16p_kv512",
+                   {"attn_p_dtype": "bfloat16", "kv_chunk": 512})
+    if which == "qwen3_f32p":
+        lower_cell("qwen3-14b", "train_4k", "qwen3_train_accum2_f32p",
+                   {"attn_p_dtype": "float32"})
+    if which == "mixtral_prefill":
+        lower_cell("mixtral-8x7b", "prefill_32k",
+                   "mixtral_prefill_gathercombine")

@@ -1,0 +1,35 @@
+"""Architecture registry: ``get_arch(name)`` / ``list_archs()``.
+
+The 10 assigned architectures plus the paper's own billion-point deployment
+config (``freshdiskann-1b``).
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen3-14b": "qwen3_14b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "gemma3-12b": "gemma3_12b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+    "graphsage-reddit": "graphsage_reddit",
+    "fm": "fm",
+    "xdeepfm": "xdeepfm",
+    "sasrec": "sasrec",
+    "deepfm": "deepfm",
+    "freshdiskann-1b": "freshdiskann_1b",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "freshdiskann-1b"]
+
+
+def get_arch(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f".{_MODULES[name]}", __package__)
+    return mod.ARCH
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)

@@ -1,0 +1,163 @@
+"""Config protocol shared by every architecture module.
+
+Each ``configs/<arch>.py`` exposes ``ARCH: ArchSpec`` with:
+  * ``full_config``  — the exact published configuration;
+  * ``smoke_config`` — a reduced same-family config for CPU smoke tests;
+  * ``cells``        — the assigned input shapes as `Cell`s, each carrying
+    ``input_specs()`` (ShapeDtypeStruct stand-ins, no allocation) and a step
+    kind the launch layer dispatches on.
+
+A ``Cell.skip`` reason marks assigned-but-inapplicable combinations
+(documented in DESIGN.md §Arch-applicability); they still appear in the
+dry-run report as SKIP rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    shape: str                 # e.g. "train_4k"
+    kind: str                  # train|prefill|decode|serve|retrieval|
+    #                            train_full|train_sampled|train_batched
+    specs: Callable[[], Dict[str, Any]]   # input name -> ShapeDtypeStruct
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    skip: str = ""             # non-empty => documented skip
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                # lm | gnn | recsys
+    full_config: Any
+    smoke_config: Any
+    cells: Sequence[Cell]
+
+    def cell(self, shape: str) -> Cell:
+        for c in self.cells:
+            if c.shape == shape:
+                return c
+        raise KeyError(f"{self.name}: no shape {shape}")
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def lm_cells(cfg) -> list[Cell]:
+    """The four LM shapes.  long_500k is skipped for pure full-attention
+    configs (every pattern position global and no window)."""
+    full_attention = all(k == "g" for k in cfg.pattern)
+
+    def train_specs():
+        return {"tokens": S((256, 4096), jnp.int32),
+                "targets": S((256, 4096), jnp.int32)}
+
+    def prefill_specs():
+        return {"tokens": S((32, 32768), jnp.int32)}
+
+    def decode_specs(batch, seq):
+        from ..models.transformer import abstract_cache
+        return {"caches": abstract_cache(cfg, batch, seq),
+                "tokens": S((batch,), jnp.int32),
+                "pos": S((), jnp.int32)}
+
+    return [
+        Cell("train_4k", "train", train_specs,
+             {"batch": 256, "seq": 4096}),
+        Cell("prefill_32k", "prefill", prefill_specs,
+             {"batch": 32, "seq": 32768}),
+        Cell("decode_32k", "decode",
+             lambda: decode_specs(128, 32768),
+             {"batch": 128, "seq": 32768}),
+        Cell("long_500k", "decode",
+             lambda: decode_specs(1, 524288),
+             {"batch": 1, "seq": 524288},
+             skip=("pure full-attention arch: 500k decode needs "
+                   "sub-quadratic attention (DESIGN.md §Arch-applicability)"
+                   if full_attention else "")),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# GNN cells (graphsage)
+# ---------------------------------------------------------------------------
+
+def gnn_cells(cfg) -> list[Cell]:
+    def full(n, e, f):
+        return lambda: {
+            "feats": S((n, f), jnp.float32),
+            "src": S((e,), jnp.int32), "dst": S((e,), jnp.int32),
+            "labels": S((n,), jnp.int32), "mask": S((n,), jnp.bool_),
+        }
+
+    def sampled(n, e, b):
+        return lambda: {
+            "feats": S((n, 602), jnp.float32),
+            "offsets": S((n + 1,), jnp.int32),
+            "nbrs": S((e,), jnp.int32),
+            "seeds": S((b,), jnp.int32),
+            "labels": S((b,), jnp.int32),
+            "key": S((2,), jnp.uint32),
+        }
+
+    def molecule(g, n, e, f):
+        return lambda: {
+            "feats": S((g, n, f), jnp.float32),
+            "src": S((g, e), jnp.int32), "dst": S((g, e), jnp.int32),
+            "edge_mask": S((g, e), jnp.bool_),
+            "labels": S((g,), jnp.int32),
+        }
+
+    return [
+        Cell("full_graph_sm", "train_full", full(2708, 10556, 1433),
+             {"d_feat": 1433, "n_classes": 7}),
+        Cell("minibatch_lg", "train_sampled",
+             sampled(232965, 114615892, 1024),
+             {"d_feat": 602, "n_classes": 41, "fanout": (15, 10)}),
+        Cell("ogb_products", "train_full", full(2449029, 61859140, 100),
+             {"d_feat": 100, "n_classes": 47}),
+        Cell("molecule", "train_batched", molecule(128, 30, 64, 32),
+             {"d_feat": 32, "n_classes": 2}),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+def recsys_cells(cfg) -> list[Cell]:
+    sasrec = cfg.kind == "sasrec"
+
+    def ids(b):
+        if sasrec:
+            return {"seq": S((b, cfg.seq_len), jnp.int32)}
+        return {"ids": S((b, cfg.n_sparse), jnp.int32)}
+
+    def train(b):
+        if sasrec:
+            return lambda: {
+                "seq": S((b, cfg.seq_len), jnp.int32),
+                "pos": S((b, cfg.seq_len), jnp.int32),
+                "neg": S((b, cfg.seq_len), jnp.int32)}
+        return lambda: {**ids(b), "labels": S((b,), jnp.int32)}
+
+    def retrieval():
+        d = cfg.embed_dim
+        return {**ids(1),
+                "item_table": S((1_048_576, d), jnp.float32)}
+
+    return [
+        Cell("train_batch", "train", train(65536), {"batch": 65536}),
+        Cell("serve_p99", "serve", lambda: ids(512), {"batch": 512}),
+        Cell("serve_bulk", "serve", lambda: ids(262144), {"batch": 262144}),
+        Cell("retrieval_cand", "retrieval", retrieval,
+             {"batch": 1, "n_candidates": 1_048_576}),
+    ]

@@ -1,0 +1,83 @@
+"""Configuration objects for the FreshDiskANN core.
+
+All sizes are static so every core operation jit-compiles to fixed shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Parameters of a FreshVamana graph index (paper §4, §6.1).
+
+    Attributes:
+      capacity: maximum number of slots (N_max). Fixed at construction so all
+        arrays are static; the paper's R/L/alpha defaults come from §6.2.
+      dim: vector dimensionality.
+      R: maximum out-degree of the graph (paper: 64).
+      L_build: candidate-list size during build/insert (paper: L_c = 75).
+      L_search: default candidate-list size during search (paper: L_s = 100).
+      alpha: the alpha-RNG pruning threshold (paper: 1.2).
+      max_visits: cap on greedy-search expansions (bounds the while_loop).
+      dtype: storage dtype of full-precision vectors.
+    """
+
+    capacity: int
+    dim: int
+    R: int = 64
+    L_build: int = 75
+    L_search: int = 100
+    alpha: float = 1.2
+    max_visits: int = 0  # 0 -> derived: L + L//2 + 16
+    dtype: str = "float32"
+
+    def visits_bound(self, L: int) -> int:
+        if self.max_visits:
+            return self.max_visits
+        return int(L + L // 2 + 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    """Product-quantization parameters (paper §5: B = 32 bytes/vector)."""
+
+    dim: int
+    m: int = 32          # number of subspaces == bytes per vector (ksub<=256)
+    ksub: int = 256      # centroids per subspace
+    kmeans_iters: int = 12
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.dim % self.m != 0:
+            raise ValueError(f"dim={self.dim} not divisible by m={self.m}")
+
+    @property
+    def dsub(self) -> int:
+        return self.dim // self.m
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """FreshDiskANN system-level knobs (paper §5, §6.2)."""
+
+    index: IndexConfig
+    pq: PQConfig
+    # TempIndex limits: freeze RW->RO at `ro_snapshot_points`, trigger a
+    # StreamingMerge when the total staged points exceed `merge_threshold`
+    # (paper: 5M snapshots, 30M merge threshold for a ~1B LTI).
+    ro_snapshot_points: int = 4096
+    merge_threshold: int = 16384
+    temp_capacity: int = 65536
+    insert_batch: int = 256
+    # Merge internals.
+    merge_block: int = 1024       # nodes per sequential block pass ("SSD block")
+    rerank: bool = True           # exact rerank of the final candidate list
+    wal_dir: Optional[str] = None
+
+
+# The paper's operating point for the billion-scale deployment (§6.2).
+PAPER_BILLION = IndexConfig(
+    capacity=1_073_741_824, dim=128, R=64, L_build=75, L_search=100, alpha=1.2
+)

@@ -1,0 +1,164 @@
+r"""Deletion: lazy DeleteList + consolidation (Algorithm 4).
+
+``delete`` only marks nodes (paper §4.2 — deletes return in ~0.1us; deleted
+nodes stay navigable but are filtered from results).  ``consolidate_deletes``
+is the batched graph repair: every live node p with deleted out-neighbors gets
+
+    C  <-  (N_out(p) u  U_{v in N_out(p) n D} N_out(v)) \ D \ {p}
+    N_out(p)  <-  RobustPrune(p, C, alpha, R)
+
+The pass is blocked (``lax.map`` over node blocks) — the TPU rendition of the
+paper's sequential block-by-block SSD scan: one block of adjacency rows is
+streamed HBM->VMEM, repaired in parallel, written back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import IndexConfig
+from .distance import INVALID
+from .graph import GraphState, medoid
+from .prune import prune_node
+
+
+def delete(state: GraphState, slots: jax.Array) -> GraphState:
+    """Lazy delete: add to DeleteList (no graph edits)."""
+    ok = slots >= 0
+    safe = jnp.where(ok, slots, 0)
+    deleted = state.deleted.at[safe].set(
+        jnp.where(ok, True, state.deleted[safe]))
+    return state._replace(deleted=deleted)
+
+
+def _repair_block(adjacency, prune_table, deleted, usable, node_ids, alpha, R):
+    """Repair one block of nodes; returns new adjacency rows for the block."""
+
+    def one(p):
+        row = adjacency[p]                                        # [R]
+        safe = jnp.maximum(row, 0)
+        valid = row >= 0
+        nbr_del = valid & deleted[safe]
+        keep = jnp.where(valid & ~nbr_del, row, INVALID)
+        # neighbors of deleted neighbors
+        exp = adjacency[safe]                                     # [R, R]
+        exp = jnp.where(nbr_del[:, None], exp, INVALID)
+        cand = jnp.concatenate([keep, exp.reshape(-1)])           # [R + R*R]
+        new_row = prune_node(prune_table, p, cand, usable, alpha, R).ids
+        # Only live nodes with >=1 deleted neighbor change (Alg. 4 loop set).
+        live = usable[p]
+        return jnp.where(live & nbr_del.any(), new_row, row)
+
+    return jax.vmap(one)(node_ids)
+
+
+def consolidate_deletes(state: GraphState, cfg: IndexConfig,
+                        block: int = 256,
+                        prune_table: jax.Array | None = None) -> GraphState:
+    """Algorithm 4 over the whole index, then slot reclamation.
+
+    prune_table: distance table for RobustPrune — full-precision vectors by
+    default; the StreamingMerge delete phase passes PQ-decoded vectors instead
+    (paper §5.3 Delete Phase).
+    """
+    N = state.capacity
+    table = state.vectors if prune_table is None else prune_table
+    usable = state.active & ~state.deleted
+    n_blocks = -(-N // block)
+    pad = n_blocks * block
+    ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(n_blocks, block)
+
+    rows = jax.lax.map(
+        lambda b: _repair_block(state.adjacency, table, state.deleted,
+                                usable, b, cfg.alpha, cfg.R),
+        ids)
+    adjacency = rows.reshape(pad, cfg.R)[:N]
+    # Reclaim: deleted slots become free (edges cleared, flags reset).
+    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
+    active = state.active & ~state.deleted
+    start = jnp.where(
+        state.deleted[state.start] | ~state.active[state.start],
+        medoid(state.vectors, active), state.start).astype(jnp.int32)
+    return state._replace(
+        adjacency=adjacency, active=active,
+        deleted=jnp.zeros_like(state.deleted), start=start)
+
+
+def _repair_block_codes(adjacency, codes, tables, deleted, usable, node_ids,
+                        alpha, R, cap):
+    """SDC repair: distances from PQ codes; at most ``cap`` deleted
+    neighbors expanded per node (candidate width R + cap*R instead of
+    R + R^2 — random deletes of 5-10%% make >cap deleted neighbors
+    vanishingly rare, and overflow only costs a few candidate edges)."""
+    from .prune import prune_node_codes
+
+    def one(p):
+        row = adjacency[p]                                    # [R]
+        safe = jnp.maximum(row, 0)
+        valid = row >= 0
+        nbr_del = valid & deleted[safe]
+        keep = jnp.where(valid & ~nbr_del, row, INVALID)
+        take, idx = jax.lax.top_k(nbr_del.astype(jnp.int32), cap)
+        dn = jnp.where(take > 0, row[idx], 0)
+        exp = adjacency[dn]                                   # [cap, R]
+        exp = jnp.where((take > 0)[:, None], exp, INVALID)
+        cand = jnp.concatenate([keep, exp.reshape(-1)])       # [R + cap*R]
+        new_row = prune_node_codes(codes, tables, p, cand, usable,
+                                   alpha, R).ids
+        live = usable[p]
+        return jnp.where(live & nbr_del.any(), new_row, row)
+
+    return jax.vmap(one)(node_ids)
+
+
+def consolidate_deletes_codes(state: GraphState, cfg: IndexConfig,
+                              codes: jax.Array, tables: jax.Array,
+                              block: int = 1024,
+                              cap: int = 8) -> GraphState:
+    """Algorithm 4 with SDC distances (StreamingMerge delete phase at its
+    traffic-optimal operating point — see EXPERIMENTS.md §Perf)."""
+    N = state.capacity
+    usable = state.active & ~state.deleted
+    n_blocks = -(-N // block)
+    pad = n_blocks * block
+    ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(
+        n_blocks, block)
+    rows = jax.lax.map(
+        lambda b: _repair_block_codes(state.adjacency, codes, tables,
+                                      state.deleted, usable, b,
+                                      cfg.alpha, cfg.R, cap),
+        ids)
+    adjacency = rows.reshape(pad, cfg.R)[:N]
+    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
+    active = state.active & ~state.deleted
+    start = jnp.where(
+        state.deleted[state.start] | ~state.active[state.start],
+        medoid(state.vectors, active), state.start).astype(jnp.int32)
+    return state._replace(
+        adjacency=adjacency, active=active,
+        deleted=jnp.zeros_like(state.deleted), start=start)
+
+
+# ----------------------------------------------------------------------------
+# Naive baselines from §3.3 — used to reproduce Figure 1 (quality collapse).
+# ----------------------------------------------------------------------------
+
+def consolidate_policy_a(state: GraphState) -> GraphState:
+    """Delete Policy A: drop all edges incident to deleted nodes, add nothing."""
+    safe = jnp.maximum(state.adjacency, 0)
+    nbr_del = (state.adjacency >= 0) & state.deleted[safe]
+    adjacency = jnp.where(nbr_del, INVALID, state.adjacency)
+    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
+    active = state.active & ~state.deleted
+    start = jnp.where(state.deleted[state.start],
+                      medoid(state.vectors, active),
+                      state.start).astype(jnp.int32)
+    return state._replace(adjacency=adjacency, active=active,
+                          deleted=jnp.zeros_like(state.deleted), start=start)
+
+
+def consolidate_policy_b(state: GraphState, cfg: IndexConfig,
+                         block: int = 256) -> GraphState:
+    """Delete Policy B: local patching with the aggressive alpha=1 prune."""
+    cfg1 = IndexConfig(**{**cfg.__dict__, "alpha": 1.0})
+    return consolidate_deletes(state, cfg1, block=block)

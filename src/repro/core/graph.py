@@ -1,0 +1,80 @@
+"""Graph state for FreshVamana indices.
+
+The index is a fixed-capacity structure of dense arrays (TPU-friendly):
+  vectors   f32[capacity, dim]   point coordinates ("full precision data")
+  adjacency i32[capacity, R]     out-neighbors, INVALID (-1) padded
+  active    bool[capacity]       slot holds a live point
+  deleted   bool[capacity]       lazy-delete list membership (paper DeleteList)
+  start     i32                  entry point (medoid)
+
+Slots are allocated densely from 0; the system layer maps external ids to
+slots.  ``deleted`` nodes remain navigable (paper §4.2 lazy deletion) until
+``consolidate_deletes`` runs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import IndexConfig
+from .distance import INVALID, l2_sq_batch
+
+
+class GraphState(NamedTuple):
+    vectors: jax.Array     # [capacity, dim]
+    adjacency: jax.Array   # [capacity, R] int32
+    active: jax.Array      # [capacity] bool
+    deleted: jax.Array     # [capacity] bool
+    start: jax.Array       # scalar int32
+    n_total: jax.Array     # scalar int32: allocated slots (active or deleted)
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def R(self) -> int:
+        return self.adjacency.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+
+def empty_graph(cfg: IndexConfig) -> GraphState:
+    return GraphState(
+        vectors=jnp.zeros((cfg.capacity, cfg.dim), jnp.dtype(cfg.dtype)),
+        adjacency=jnp.full((cfg.capacity, cfg.R), INVALID, jnp.int32),
+        active=jnp.zeros((cfg.capacity,), bool),
+        deleted=jnp.zeros((cfg.capacity,), bool),
+        start=jnp.int32(0),
+        n_total=jnp.int32(0),
+    )
+
+
+def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:
+    """Index of the (sampled) medoid among ``mask``-active rows.
+
+    The medoid is the paper's navigating/start node.  For large N we estimate
+    against the masked mean (one pass) — identical to DiskANN's centroid-nearest
+    entry point.
+    """
+    m = mask.astype(jnp.float32)
+    mean = jnp.sum(vectors * m[:, None], axis=0) / jnp.maximum(jnp.sum(m), 1.0)
+    d = l2_sq_batch(mean[None, :], vectors)[0]
+    d = jnp.where(mask, d, jnp.inf)
+    return jnp.argmin(d).astype(jnp.int32)
+
+
+def degree_stats(state: GraphState) -> dict:
+    """Average/max out-degree over active nodes (used by the alpha ablation)."""
+    valid = (state.adjacency >= 0).sum(axis=1)
+    act = state.active & ~state.deleted
+    n = jnp.maximum(act.sum(), 1)
+    return {
+        "avg_degree": jnp.where(act, valid, 0).sum() / n,
+        "max_degree": jnp.where(act, valid, 0).max(),
+        "n_active": act.sum(),
+    }

@@ -1,0 +1,125 @@
+"""FreshVamana — the in-memory index (paper §4): build, insert, delete,
+consolidate, search.  Functional core over ``GraphState``; every entry point
+jit-compiles with static shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import IndexConfig
+from .distance import INVALID, gather_l2
+from .graph import GraphState, empty_graph, medoid
+from .insert import apply_back_edges, compute_insert_edges
+from .search import greedy_search, topk_results
+
+
+def _full_dist(vectors: jax.Array):
+    return lambda q: (lambda ids: gather_l2(q, vectors, ids))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "L", "reprune"))
+def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
+           cfg: IndexConfig, L: Optional[int] = None,
+           reprune: bool = False) -> GraphState:
+    """Insert a batch (Algorithm 2).  ``slots`` may contain INVALID (masked
+    lanes — used by the distributed routed insert).  With ``reprune`` the
+    points may already be in the graph (second build pass): their out-rows are
+    recomputed rather than appended."""
+    L = L or cfg.L_build
+    valid = slots >= 0
+    wslots = jnp.where(valid, slots, state.capacity)  # OOB -> dropped scatter
+    vectors = state.vectors.at[wslots].set(
+        vecs.astype(state.vectors.dtype), mode="drop")
+    active = state.active.at[wslots].set(True, mode="drop")
+    deleted = state.deleted.at[wslots].set(False, mode="drop")
+    st = state._replace(
+        vectors=vectors, active=active, deleted=deleted,
+        n_total=jnp.maximum(state.n_total,
+                            jnp.max(jnp.where(valid, slots, -1)) + 1))
+    usable = st.active & ~st.deleted
+    edges = compute_insert_edges(
+        state.adjacency if not reprune else st.adjacency,
+        st.active, usable, st.start, st.vectors,
+        jnp.where(valid, slots, INVALID), vecs,
+        _full_dist(st.vectors),
+        L=L, max_visits=cfg.visits_bound(L), alpha=cfg.alpha, R=cfg.R)
+    new_adj = jnp.where(valid[:, None], edges.new_adj, INVALID)
+    adjacency = st.adjacency.at[wslots].set(new_adj, mode="drop")
+    pairs_j = jnp.where(valid[:, None], edges.new_adj, INVALID).reshape(-1)
+    adjacency = apply_back_edges(
+        adjacency, st.vectors, usable, pairs_j, edges.pairs_p,
+        alpha=cfg.alpha, R=cfg.R)
+    return st._replace(adjacency=adjacency)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L"))
+def search(state: GraphState, queries: jax.Array, cfg: IndexConfig,
+           *, k: int, L: int):
+    """Batched search; returns (ids [B,k], dists [B,k], hops [B], cmps [B])."""
+    res = greedy_search(state.adjacency, state.active, state.start, queries,
+                        _full_dist(state.vectors),
+                        L=L, max_visits=cfg.visits_bound(L))
+    ids, d = topk_results(res, k, state.active & ~state.deleted)
+    return ids, d, res.n_hops, res.n_cmps
+
+
+def build(vectors: np.ndarray | jax.Array, cfg: IndexConfig,
+          batch: int = 256, passes: int = 1, seed: int = 0,
+          shuffle: bool = True) -> GraphState:
+    """Static build = streamed FreshVamana inserts (paper App. B: this is the
+    *FreshVamana build*; ``passes=2`` adds the Vamana-style refinement pass).
+
+    The batch size is capped at n//8: points inside one batch cannot see
+    each other (quiescent-consistency window), so a single-batch build
+    would degenerate to a star around the medoid."""
+    n, d = vectors.shape
+    assert n <= cfg.capacity and d == cfg.dim
+    batch = max(16, min(batch, n // 8)) if n >= 32 else max(1, n // 2)
+    vecs = jnp.asarray(vectors)
+    state = empty_graph(cfg)
+    state = state._replace(
+        vectors=state.vectors.at[:n].set(vecs.astype(state.vectors.dtype)))
+    # Entry point = medoid of the build set (active yet or not — vectors are
+    # stored; medoid over the first n rows).
+    mask = jnp.zeros((cfg.capacity,), bool).at[:n].set(True)
+    start = medoid(state.vectors, mask)
+    # Seed: the medoid point is active with no edges.
+    state = state._replace(
+        active=state.active.at[start].set(True),
+        start=start, n_total=jnp.int32(n))
+
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n) if shuffle else np.arange(n)
+    for pass_i in range(passes):
+        reprune = pass_i > 0
+        for lo in range(0, n, batch):
+            sl = order[lo:lo + batch]
+            pad = batch - len(sl)
+            slots = np.concatenate([sl, np.full(pad, INVALID)]).astype(np.int32)
+            bv = np.zeros((batch, d), np.float32)
+            bv[:len(sl)] = np.asarray(vectors)[sl]
+            state = insert(state, jnp.asarray(slots), jnp.asarray(bv), cfg,
+                           reprune=reprune)
+    return state
+
+
+def brute_force(vectors: jax.Array, mask: jax.Array, queries: jax.Array,
+                k: int) -> jax.Array:
+    """Exact k-NN over masked rows — ground truth for every recall number."""
+    from .distance import l2_sq_batch
+    d = l2_sq_batch(queries, vectors)
+    d = jnp.where(mask[None, :], d, jnp.inf)
+    return jax.lax.top_k(-d, k)[1]
+
+
+def recall_at_k(found_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """k-recall@k (Definition 1.1): |X ∩ G| / k averaged over queries."""
+    k = true_ids.shape[1]
+    eq = found_ids[:, :, None] == true_ids[:, None, :]
+    inter = eq.any(axis=2) & (found_ids >= 0)
+    return inter.sum(axis=1).mean() / k

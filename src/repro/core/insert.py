@@ -1,0 +1,201 @@
+"""Insert (Algorithm 2) — batched, with the paper's Delta back-edge structure.
+
+A batch of B new points is inserted in three fixed-shape stages:
+
+  1. candidate generation: GreedySearch(s, p, 1, L) per new point against the
+     *current* graph (vmapped);
+  2. RobustPrune over the visited set -> the new point's out-neighbors;
+  3. back-edges: the (target j, source p) pairs are the paper's Delta
+     structure.  They are grouped by target with a sort + segment-position
+     trick, then every affected node either appends (if still under the degree
+     budget R) or re-prunes N_out(j) + {p...} — exactly Algorithm 2's branch.
+
+Points inside one batch do not see each other (the paper's concurrent inserts
+under fine-grained locking have the same quiescent-consistency window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distance import INVALID
+from .prune import prune_node, robust_prune
+from .search import MakeDistFn, SearchResult, greedy_search
+
+
+class InsertEdges(NamedTuple):
+    new_adj: jax.Array   # [B, R] out-neighbors for the new points
+    pairs_j: jax.Array   # [B*R] back-edge targets (INVALID padded)
+    pairs_p: jax.Array   # [B*R] back-edge sources
+    search: SearchResult
+
+
+def compute_insert_edges(
+    adjacency: jax.Array,
+    navigable: jax.Array,      # bool[N] traversable (active; incl. lazy-deleted)
+    usable: jax.Array,         # bool[N] candidate-eligible (active & !deleted)
+    start: jax.Array,
+    prune_table: jax.Array,    # [N, d] vectors used for prune distances
+    new_slots: jax.Array,      # [B] slot ids of the new points (already stored)
+    new_vecs: jax.Array,       # [B, d]
+    make_dist_fn: MakeDistFn,
+    *,
+    L: int,
+    max_visits: int,
+    alpha: float,
+    R: int,
+) -> InsertEdges:
+    """Stages 1+2: search & prune.  Graph arrays are pre-insert (new points
+    are stored but have no in-edges, so searches cannot reach them)."""
+    res = greedy_search(adjacency, navigable, start, new_vecs,
+                        make_dist_fn, L=L, max_visits=max_visits)
+    # Candidate pool: V union final list (Alg. 2 uses V; the list adds only
+    # closer nodes, strictly improving the pool).
+    cand = jnp.concatenate([res.visited, res.ids], axis=1)          # [B, V+L]
+
+    def one(slot, vec, cand_ids):
+        safe = jnp.maximum(cand_ids, 0)
+        ok = (cand_ids >= 0) & usable[safe] & (cand_ids != slot)
+        return robust_prune(vec, cand_ids, prune_table[safe], ok, alpha, R).ids
+
+    new_adj = jax.vmap(one)(new_slots, new_vecs.astype(jnp.float32), cand)
+    B = new_slots.shape[0]
+    pairs_j = new_adj.reshape(B * R)
+    pairs_p = jnp.broadcast_to(new_slots[:, None], (B, R)).reshape(B * R)
+    pairs_p = jnp.where(pairs_j >= 0, pairs_p, INVALID)
+    return InsertEdges(new_adj, pairs_j, pairs_p, res)
+
+
+def group_pairs(pairs_j: jax.Array, pairs_p: jax.Array, n_slots: int,
+                d_max: int) -> tuple[jax.Array, jax.Array]:
+    """Group back-edge pairs by target: Delta buffer [N, d_max] + counts [N].
+
+    Sort by target, compute the position-within-group via searchsorted, then a
+    single scatter.  Overflow beyond d_max is dropped (counted by callers via
+    the returned counts, capped at d_max on read).
+    """
+    P = pairs_j.shape[0]
+    key = jnp.where(pairs_j >= 0, pairs_j, jnp.int32(n_slots))  # invalid last
+    order = jnp.argsort(key)
+    sj, sp = key[order], pairs_p[order]
+    first = jnp.searchsorted(sj, sj, side="left")
+    slot = jnp.arange(P, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (sj < n_slots) & (slot < d_max)
+    buf = jnp.full((n_slots, d_max), INVALID, jnp.int32)
+    buf = buf.at[jnp.where(keep, sj, n_slots), jnp.where(keep, slot, 0)].set(
+        sp, mode="drop")
+    cnt = jnp.zeros((n_slots,), jnp.int32).at[key].add(
+        (key < n_slots).astype(jnp.int32), mode="drop")
+    return buf, cnt
+
+
+def apply_back_edges_codes(
+    adjacency: jax.Array,
+    codes: jax.Array,        # [N, m] PQ codes
+    tables: jax.Array,       # [m, ksub, ksub] sdc tables
+    usable: jax.Array,
+    pairs_j: jax.Array,
+    pairs_p: jax.Array,
+    *,
+    alpha: float,
+    R: int,
+    d_max: int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Patch phase with SDC distances (see apply_back_edges)."""
+    from .prune import prune_node_codes
+
+    N = adjacency.shape[0]
+    P = pairs_j.shape[0]
+    d_max = d_max if d_max is not None else R
+    buf, cnt = group_pairs(pairs_j, pairs_p, N, d_max)
+    a_max = min(P, N)
+    _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
+
+    def one(adj, j):
+        row = adj[j]
+        extra = buf[j]
+        deg = (row >= 0).sum()
+        add = jnp.minimum(cnt[j], d_max)
+        combine = jnp.concatenate([row, extra])
+        app_order = jnp.argsort(~(combine >= 0))
+        appended = combine[app_order][:R]
+        pruned = prune_node_codes(codes, tables, j, combine, usable,
+                                  alpha, R).ids
+        needs_prune = deg + add > R
+        new_row = jnp.where(needs_prune, pruned, appended)
+        return jnp.where(cnt[j] > 0, new_row, row)
+
+    if a_max <= chunk:
+        rows = jax.vmap(lambda j: one(adjacency, j))(affected)
+        return adjacency.at[affected].set(rows)
+    n_chunks = -(-a_max // chunk)
+    pad = n_chunks * chunk - a_max
+    aff = jnp.concatenate(
+        [affected, jnp.full((pad,), N, jnp.int32)]).reshape(n_chunks, chunk)
+
+    def block(adj, js):
+        rows = jax.vmap(lambda j: one(adj, jnp.minimum(j, N - 1)))(js)
+        return adj.at[jnp.where(js < N, js, N)].set(rows, mode="drop"), None
+
+    adjacency, _ = jax.lax.scan(block, adjacency, aff)
+    return adjacency
+
+
+def apply_back_edges(
+    adjacency: jax.Array,
+    prune_table: jax.Array,
+    usable: jax.Array,
+    pairs_j: jax.Array,
+    pairs_p: jax.Array,
+    *,
+    alpha: float,
+    R: int,
+    d_max: int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Stage 3: apply Delta.  Affected nodes append or re-prune (Alg. 2).
+
+    Affected nodes are processed in chunks via ``lax.map`` — the Patch-phase
+    block pass of StreamingMerge (one block of rows streamed, patched, written
+    back) and a memory bound for plain batched inserts alike.
+    """
+    N = adjacency.shape[0]
+    P = pairs_j.shape[0]
+    d_max = d_max if d_max is not None else R
+    buf, cnt = group_pairs(pairs_j, pairs_p, N, d_max)
+    # Every affected node appears (<= P of them); top_k over the 0/1 indicator
+    # returns lowest-index ties first, so all 1s are captured when P <= a_max.
+    a_max = min(P, N)
+    _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
+
+    def one(adj, j):
+        row = adj[j]
+        extra = buf[j]
+        deg = (row >= 0).sum()
+        add = jnp.minimum(cnt[j], d_max)
+        combine = jnp.concatenate([row, extra])                    # [R + d_max]
+        # append path: valid entries first, truncated to R.
+        app_order = jnp.argsort(~(combine >= 0))                   # valids first
+        appended = combine[app_order][:R]
+        pruned = prune_node(prune_table, j, combine, usable, alpha, R).ids
+        needs_prune = deg + add > R
+        new_row = jnp.where(needs_prune, pruned, appended)
+        return jnp.where(cnt[j] > 0, new_row, row)
+
+    if a_max <= chunk:
+        rows = jax.vmap(lambda j: one(adjacency, j))(affected)
+        return adjacency.at[affected].set(rows)
+    n_chunks = -(-a_max // chunk)
+    pad = n_chunks * chunk - a_max
+    aff = jnp.concatenate(
+        [affected, jnp.full((pad,), N, jnp.int32)]).reshape(n_chunks, chunk)
+
+    def block(adj, js):
+        rows = jax.vmap(lambda j: one(adj, jnp.minimum(j, N - 1)))(js)
+        return adj.at[jnp.where(js < N, js, N)].set(rows, mode="drop"), None
+
+    adjacency, _ = jax.lax.scan(block, adjacency, aff)
+    return adjacency

@@ -1,0 +1,71 @@
+"""The Long-Term Index (LTI) — the storage-resident tier (paper §5.1).
+
+An LTI is a FreshVamana graph whose *navigation* distances come from PQ codes
+(the only per-point data kept in fast memory; ~32B/point), with full-precision
+vectors resident in the capacity tier ("SSD" = pod HBM here) used only for the
+final exact rerank of the candidate list — exactly DiskANN's search recipe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import pq as pqm
+from .config import IndexConfig, PQConfig
+from .graph import GraphState
+from .index import build as mem_build
+from .search import greedy_search, topk_results
+
+
+class LTIState(NamedTuple):
+    graph: GraphState      # adjacency + full-precision vectors + flags
+    codes: jax.Array       # [capacity, m] uint8 PQ codes
+    codebook: pqm.PQCodebook
+
+
+def _pq_dist(codes: jax.Array, codebook: pqm.PQCodebook):
+    def mk(q):
+        table = pqm.lut(codebook, q)
+        return lambda ids: pqm.adc_gather(codes, table, ids)
+    return mk
+
+
+def build_lti(vectors, cfg: IndexConfig, pq_cfg: PQConfig,
+              train_sample: int = 65536, batch: int = 256,
+              passes: int = 1, seed: int = 0) -> LTIState:
+    """Static DiskANN-style build: graph from full-precision distances,
+    PQ codebook trained on a sample, all points encoded."""
+    graph = mem_build(vectors, cfg, batch=batch, passes=passes, seed=seed)
+    n = vectors.shape[0]
+    sample = jnp.asarray(vectors[:min(n, train_sample)])
+    codebook = pqm.train_pq(sample, pq_cfg)
+    codes = jnp.zeros((cfg.capacity, pq_cfg.m), jnp.uint8)
+    codes = codes.at[:n].set(pqm.encode(codebook, jnp.asarray(vectors), pq_cfg))
+    return LTIState(graph, codes, codebook)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "rerank"))
+def search_lti(lti: LTIState, queries: jax.Array, cfg: IndexConfig,
+               *, k: int, L: int, rerank: bool = True):
+    """PQ-navigated beam search + exact rerank (paper §5.2 / DiskANN).
+
+    Returns (ids [B,k], dists [B,k], hops [B], cmps [B]).  ``hops`` is the
+    number of adjacency fetches — the paper's "~120 random 4KB reads" metric.
+    """
+    g = lti.graph
+    res = greedy_search(g.adjacency, g.active, g.start, queries,
+                        _pq_dist(lti.codes, lti.codebook),
+                        L=L, max_visits=cfg.visits_bound(L))
+    reportable = g.active & ~g.deleted
+    if rerank:
+        # Exact distances for the final L candidates ("full-precision vectors
+        # fetched from the capacity tier").
+        from .distance import gather_l2
+        exact = jax.vmap(lambda q, ids: gather_l2(q, g.vectors, ids))(
+            queries, res.ids)
+        res = res._replace(dists=exact)
+    ids, d = topk_results(res, k, reportable)
+    return ids, d, res.n_hops, res.n_cmps

@@ -1,0 +1,168 @@
+"""StreamingMerge (paper §5.3) — fold staged inserts + the DeleteList into the
+LTI in three phases, all distances from PQ codes.
+
+  Delete phase — Algorithm 4 over the LTI, block-by-block (sequential pass 1).
+  Insert phase — GreedySearch on the intermediate LTI per new point (PQ
+      navigation), RobustPrune for its out-edges, back-edges staged as the
+      Delta pair list of size O(|N|·R).
+  Patch phase — Delta grouped by target and applied block-wise with the
+      append-or-prune rule (sequential pass 2).
+
+Faithfulness notes: every distance below is computed from the PQ codes
+(decoded centroids), never from full-precision vectors — this is what produces
+the paper's small steady-state recall dip (Fig. 4), which our tests reproduce.
+In the paper phases 1/3 are sequential SSD passes; here they are ``lax.map``
+block streams (HBM->VMEM).  Insert-phase searches are vmapped chunks: new
+points have no in-edges until the Patch phase, so chunked execution is
+order-equivalent to the paper's sequential inserts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import pq as pqm
+from .config import IndexConfig, PQConfig
+from .delete import consolidate_deletes, consolidate_deletes_codes
+from .distance import INVALID
+from .insert import (apply_back_edges, apply_back_edges_codes,
+                     compute_insert_edges)
+from .lti import LTIState, _pq_dist
+from .prune import robust_prune_codes
+from .search import greedy_search
+
+
+class MergeStats(NamedTuple):
+    n_deleted: jax.Array
+    n_inserted: jax.Array
+    n_backedge_pairs: jax.Array
+    slots: jax.Array            # [Nn] slot assigned per staged row (INVALID ok)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pq_cfg", "insert_chunk",
+                                              "block", "use_sdc"))
+def streaming_merge(
+    lti: LTIState,
+    new_vecs: jax.Array,        # [Nn, d] staged TempIndex points (rows may be
+    new_valid: jax.Array,       # [Nn] bool  masked — fixed-shape staging)
+    delete_mask: jax.Array,     # [capacity] bool — DeleteList membership
+    cfg: IndexConfig,
+    pq_cfg: PQConfig,
+    *,
+    insert_chunk: int = 256,
+    block: int = 1024,
+    use_sdc: bool = False,
+) -> tuple[LTIState, MergeStats]:
+    """With ``use_sdc`` every prune distance comes straight from the PQ
+    codes via symmetric-distance tables (numerically identical to pruning
+    on decoded reconstructions, ~16x less HBM traffic, no decoded-table
+    buffer) — EXPERIMENTS.md §Perf iteration 1 on the merge cell."""
+    g = lti.graph
+    codebook = lti.codebook
+
+    # ---- Phase 1: Delete (sequential block pass over the LTI) -------------
+    # Prune distances use PQ codes only (paper: "we use the compressed PQ
+    # vectors ... to calculate the approximate distances").
+    n_del = (g.active & delete_mask).sum()
+    g = g._replace(deleted=g.deleted | (delete_mask & g.active))
+    if use_sdc:
+        tables = pqm.sdc_tables(codebook)
+        decoded = None
+        g = consolidate_deletes_codes(g, cfg, lti.codes, tables,
+                                      block=block)
+    else:
+        decoded = pqm.decode(codebook, lti.codes, pq_cfg).astype(jnp.float32)
+        g = consolidate_deletes(g, cfg, block=block, prune_table=decoded)
+
+    # ---- Phase 2: Insert (random reads against the intermediate LTI) ------
+    Nn = new_vecs.shape[0]
+    # Allocate free slots for the new points (top_k over the free indicator
+    # yields distinct, lowest-first free slots).
+    free = ~g.active
+    _, slots = jax.lax.top_k(free.astype(jnp.int32), Nn)
+    slots = jnp.where(new_valid & (free[slots]), slots, INVALID)
+    wslots = jnp.where(slots >= 0, slots, g.capacity)
+
+    new_codes = pqm.encode(codebook, new_vecs, pq_cfg)
+    codes = lti.codes.at[wslots].set(new_codes, mode="drop")
+    vectors = g.vectors.at[wslots].set(
+        new_vecs.astype(g.vectors.dtype), mode="drop")
+    active = g.active.at[wslots].set(True, mode="drop")
+    if not use_sdc:
+        decoded = decoded.at[wslots].set(
+            pqm.decode(codebook, new_codes, pq_cfg), mode="drop")
+    g = g._replace(vectors=vectors, active=active,
+                   n_total=jnp.maximum(g.n_total,
+                                       jnp.max(jnp.where(slots >= 0, slots, -1)) + 1))
+    usable = g.active & ~g.deleted
+
+    n_chunks = max(1, -(-Nn // insert_chunk))
+    pad = n_chunks * insert_chunk - Nn
+    c_slots = jnp.concatenate([slots, jnp.full((pad,), INVALID, jnp.int32)])
+    c_vecs = jnp.concatenate(
+        [new_vecs.astype(jnp.float32),
+         jnp.zeros((pad, new_vecs.shape[1]), jnp.float32)])
+    c_slots = c_slots.reshape(n_chunks, insert_chunk)
+    c_vecs = c_vecs.reshape(n_chunks, insert_chunk, -1)
+
+    mk = _pq_dist(codes, codebook)
+
+    def insert_block(carry, inp):
+        adjacency = carry
+        sl, vv = inp
+        if use_sdc:
+            # search via ADC; prune with d_p = exact-vector ADC and
+            # candidate-candidate distances via SDC on codes.
+            res = greedy_search(adjacency, g.active, g.start, vv, mk,
+                                L=cfg.L_build,
+                                max_visits=cfg.visits_bound(cfg.L_build))
+            cand = jnp.concatenate([res.visited, res.ids], axis=1)
+
+            def one(slot, vec, cand_ids):
+                safe = jnp.maximum(cand_ids, 0)
+                ok = (cand_ids >= 0) & usable[safe] & (cand_ids != slot)
+                d_p = pqm.adc(codes[safe], pqm.lut(codebook, vec))
+                return robust_prune_codes(
+                    d_p, cand_ids, codes[safe], ok, cfg.alpha, cfg.R,
+                    tables).ids
+
+            new_adj = jax.vmap(one)(sl, vv, cand)
+            src = jnp.broadcast_to(sl[:, None],
+                                   new_adj.shape).reshape(-1)
+        else:
+            edges = compute_insert_edges(
+                adjacency, g.active, usable, g.start, decoded, sl, vv, mk,
+                L=cfg.L_build, max_visits=cfg.visits_bound(cfg.L_build),
+                alpha=cfg.alpha, R=cfg.R)
+            new_adj = edges.new_adj
+            src = edges.pairs_p
+        valid = sl >= 0
+        new_adj = jnp.where(valid[:, None], new_adj, INVALID)
+        adjacency = adjacency.at[jnp.where(valid, sl, g.capacity)].set(
+            new_adj, mode="drop")
+        pj = new_adj.reshape(-1)
+        pp = jnp.where(pj >= 0, src, INVALID)
+        return adjacency, (pj, pp)
+
+    adjacency, (pairs_j, pairs_p) = jax.lax.scan(
+        insert_block, g.adjacency, (c_slots, c_vecs))
+    pairs_j = pairs_j.reshape(-1)   # O(|N|*R) Delta pair list
+    pairs_p = pairs_p.reshape(-1)
+
+    # ---- Phase 3: Patch (sequential block pass applying Delta) ------------
+    if use_sdc:
+        adjacency = apply_back_edges_codes(
+            adjacency, codes, tables, usable, pairs_j, pairs_p,
+            alpha=cfg.alpha, R=cfg.R, chunk=block)
+    else:
+        adjacency = apply_back_edges(
+            adjacency, decoded, usable, pairs_j, pairs_p,
+            alpha=cfg.alpha, R=cfg.R, chunk=block)
+
+    g = g._replace(adjacency=adjacency)
+    stats = MergeStats(n_del, (slots >= 0).sum(),
+                       (pairs_j >= 0).sum(), slots)
+    return LTIState(g, codes, codebook), stats

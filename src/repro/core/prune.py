@@ -1,0 +1,147 @@
+"""RobustPrune (Algorithm 3) — the alpha-RNG pruning rule.
+
+Fixed-shape, vmappable: candidates arrive as padded id arrays; the loop runs
+exactly R rounds with masking (each round either selects one neighbor or is a
+no-op once the candidate pool is exhausted).
+
+An edge to c is dropped once some retained p* satisfies
+``alpha * d(p*, c) <= d(p, c)`` — retained edges cover their "cone" with slack
+alpha (paper §4).  With alpha = 1 this degenerates to the aggressive HNSW/NSG
+rule (the paper's unstable baseline, reproduced in tests/benchmarks).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distance import INVALID, l2_sq
+
+
+class PruneResult(NamedTuple):
+    ids: jax.Array   # [R] selected out-neighbors, INVALID padded
+    count: jax.Array  # scalar int32
+
+
+def robust_prune(
+    p_vec: jax.Array,        # [d] the node being pruned
+    cand_ids: jax.Array,     # [C] candidate ids (may contain dups / INVALID)
+    cand_vecs: jax.Array,    # [C, d] candidate vectors (garbage where INVALID)
+    cand_ok: jax.Array,      # [C] bool — candidate usable (valid, not deleted, != p)
+    alpha: float,
+    R: int,
+) -> PruneResult:
+    C = cand_ids.shape[0]
+    p_vec = p_vec.astype(jnp.float32)
+    cand_vecs = cand_vecs.astype(jnp.float32)
+    d_p = jnp.where(cand_ok, l2_sq(p_vec[None, :], cand_vecs), jnp.inf)  # [C]
+
+    def body(i, s):
+        alive, out_ids, cnt = s
+        masked = jnp.where(alive, d_p, jnp.inf)
+        star = jnp.argmin(masked)
+        ok = jnp.isfinite(masked[star])
+        out_ids = out_ids.at[i].set(jnp.where(ok, cand_ids[star], INVALID))
+        cnt = cnt + ok.astype(jnp.int32)
+        # alpha-RNG coverage: drop candidates the new neighbor covers.
+        d_star = l2_sq(cand_vecs[star][None, :], cand_vecs)              # [C]
+        covered = alpha * d_star <= d_p
+        alive = alive & ~covered & (jnp.arange(C) != star)
+        alive = jnp.where(ok, alive, jnp.zeros_like(alive))
+        return alive, out_ids, cnt
+
+    alive0 = cand_ok & jnp.isfinite(d_p)
+    out0 = jnp.full((R,), INVALID, jnp.int32)
+    _, out_ids, cnt = jax.lax.fori_loop(0, R, body, (alive0, out0, jnp.int32(0)))
+    return PruneResult(out_ids, cnt)
+
+
+def prune_node(
+    vectors: jax.Array,      # [N, d] full table (or PQ-decoded table)
+    p: jax.Array,            # scalar node id
+    cand_ids: jax.Array,     # [C]
+    usable: jax.Array,       # bool[N] — active and not deleted
+    alpha: float,
+    R: int,
+) -> PruneResult:
+    """RobustPrune against the stored table: gathers candidate vectors itself."""
+    safe = jnp.maximum(cand_ids, 0)
+    cand_vecs = vectors[safe]
+    ok = (cand_ids >= 0) & usable[safe] & (cand_ids != p)
+    return robust_prune(vectors[p], cand_ids, cand_vecs, ok, alpha, R)
+
+
+def robust_prune_codes(
+    d_p: jax.Array,          # [C] distances from p to candidates (any source:
+    #                          sdc_lut for code anchors, pq.lut for vectors)
+    cand_ids: jax.Array,     # [C]
+    cand_codes: jax.Array,   # [C, m] uint8 PQ codes of the candidates
+    cand_ok: jax.Array,      # [C] bool
+    alpha: float,
+    R: int,
+    tables: jax.Array,       # [m, ksub, ksub] from pq.sdc_tables
+) -> PruneResult:
+    """Algorithm 3 with all candidate-candidate distances computed from PQ
+    codes (SDC) — numerically identical to pruning on decoded vectors but
+    touching m bytes per candidate per round instead of dim*4."""
+    from . import pq as pqm
+
+    C = cand_ids.shape[0]
+    d_p = jnp.where(cand_ok, d_p, jnp.inf)
+
+    def body(i, s):
+        alive, out_ids, cnt = s
+        masked = jnp.where(alive, d_p, jnp.inf)
+        star = jnp.argmin(masked)
+        ok = jnp.isfinite(masked[star])
+        out_ids = out_ids.at[i].set(jnp.where(ok, cand_ids[star], INVALID))
+        cnt = cnt + ok.astype(jnp.int32)
+        d_star = pqm.adc(cand_codes, pqm.sdc_lut(tables, cand_codes[star]))
+        covered = alpha * d_star <= d_p
+        alive = alive & ~covered & (jnp.arange(C) != star)
+        alive = jnp.where(ok, alive, jnp.zeros_like(alive))
+        return alive, out_ids, cnt
+
+    alive0 = cand_ok & jnp.isfinite(d_p)
+    out0 = jnp.full((R,), INVALID, jnp.int32)
+    _, out_ids, cnt = jax.lax.fori_loop(0, R, body, (alive0, out0,
+                                                     jnp.int32(0)))
+    return PruneResult(out_ids, cnt)
+
+
+def prune_node_codes(codes, tables, p, cand_ids, usable, alpha, R
+                     ) -> PruneResult:
+    """SDC RobustPrune against the code table (anchor = p's own code)."""
+    from . import pq as pqm
+
+    safe = jnp.maximum(cand_ids, 0)
+    cand_codes = codes[safe]
+    ok = (cand_ids >= 0) & usable[safe] & (cand_ids != p)
+    d_p = pqm.adc(cand_codes, pqm.sdc_lut(tables, codes[p]))
+    return robust_prune_codes(d_p, cand_ids, cand_codes, ok, alpha, R,
+                              tables)
+
+
+def check_alpha_rng(adj_row: jax.Array, p_vec: jax.Array, vectors: jax.Array,
+                    alpha: float) -> jax.Array:
+    """Property check: no retained edge is alpha-covered by an earlier one.
+
+    Returns True when the row satisfies the alpha-RNG invariant.  Used by the
+    hypothesis property tests.
+    """
+    R = adj_row.shape[0]
+    safe = jnp.maximum(adj_row, 0)
+    vecs = vectors[safe].astype(jnp.float32)
+    valid = adj_row >= 0
+    d_p = jnp.where(valid, l2_sq(p_vec[None, :].astype(jnp.float32), vecs), jnp.inf)
+    order = jnp.argsort(d_p)  # selection happens in distance order
+    vecs_o = vecs[order]
+    d_o = d_p[order]
+    valid_o = valid[order]
+    pair = l2_sq(vecs_o[:, None, :], vecs_o[None, :, :])  # [R, R]
+    earlier = jnp.tril(jnp.ones((R, R), bool), k=-1)
+    both = valid_o[:, None] & valid_o[None, :] & earlier
+    # violation: an earlier-selected neighbor j alpha-covers i, yet i was kept.
+    viol = both & (alpha * pair.T <= d_o[:, None]) & jnp.isfinite(d_o)[:, None]
+    return ~viol.any()

@@ -1,0 +1,127 @@
+r"""GreedySearch (Algorithm 1) — batched, fixed-shape, jit/vmap-friendly.
+
+The search keeps the classic DiskANN beam state: a candidate list of the L
+closest nodes seen so far (sorted), an expanded flag per entry, and the visited
+(expanded) set V.  Each iteration expands the closest unexpanded candidate,
+fetches its adjacency row (one "sector read" in the paper's SSD terms; one HBM
+block gather here), scores the new neighbors, and merges.
+
+Termination matches Algorithm 1 (loop while L \ V is nonempty) with an explicit
+iteration bound so the ``lax.while_loop`` is well-formed.  Each iteration
+expands exactly one node, so visited arrays are sized by the bound.
+
+Distances are injected via ``make_dist_fn`` so the same search serves both the
+in-memory full-precision index and the PQ-navigated LTI.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distance import INVALID
+
+# make_dist_fn: query -> (ids[int32, K] -> dists[f32, K], +inf for INVALID)
+MakeDistFn = Callable[[jax.Array], Callable[[jax.Array], jax.Array]]
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array        # [B, L]  final candidate list (sorted by distance)
+    dists: jax.Array      # [B, L]
+    visited: jax.Array    # [B, V]  expanded nodes in expansion order
+    visited_dists: jax.Array  # [B, V]
+    n_hops: jax.Array     # [B]     expansions (== "IO reads" per paper §6.2)
+    n_cmps: jax.Array     # [B]     distance computations
+
+
+def _search_one(
+    adjacency: jax.Array,
+    navigable: jax.Array,
+    start: jax.Array,
+    dist_fn: Callable[[jax.Array], jax.Array],
+    L: int,
+    max_visits: int,
+) -> SearchResult:
+    R = adjacency.shape[1]
+
+    cand_ids = jnp.full((L,), INVALID, jnp.int32).at[0].set(start.astype(jnp.int32))
+    d0 = dist_fn(cand_ids[:1])[0]
+    cand_d = jnp.full((L,), jnp.inf, jnp.float32).at[0].set(d0)
+    cand_exp = jnp.zeros((L,), bool)
+    vis_ids = jnp.full((max_visits,), INVALID, jnp.int32)
+    vis_d = jnp.full((max_visits,), jnp.inf, jnp.float32)
+
+    state = (cand_ids, cand_d, cand_exp, vis_ids, vis_d,
+             jnp.int32(0), jnp.int32(0), jnp.int32(1))
+
+    def cond(s):
+        cand_ids, cand_d, cand_exp, *_, vis_cnt, _, _ = s
+        open_ = (cand_ids >= 0) & ~cand_exp & jnp.isfinite(cand_d)
+        return jnp.any(open_) & (vis_cnt < max_visits)
+
+    def body(s):
+        cand_ids, cand_d, cand_exp, vis_ids, vis_d, vis_cnt, n_cmps, n_seen = s
+        open_ = (cand_ids >= 0) & ~cand_exp
+        sel = jnp.argmin(jnp.where(open_, cand_d, jnp.inf))
+        p = cand_ids[sel]
+        cand_exp = cand_exp.at[sel].set(True)
+        vis_ids = vis_ids.at[vis_cnt].set(p)
+        vis_d = vis_d.at[vis_cnt].set(cand_d[sel])
+        vis_cnt = vis_cnt + 1
+
+        nbrs = adjacency[jnp.maximum(p, 0)]                       # [R]
+        ok = (nbrs >= 0) & navigable[jnp.maximum(nbrs, 0)]
+        in_list = (nbrs[:, None] == cand_ids[None, :]).any(axis=1)
+        in_vis = (nbrs[:, None] == vis_ids[None, :]).any(axis=1)
+        new = ok & ~in_list & ~in_vis
+        nd = dist_fn(jnp.where(new, nbrs, INVALID))               # inf if masked
+        n_cmps = n_cmps + new.sum(dtype=jnp.int32)
+
+        all_ids = jnp.concatenate([cand_ids, jnp.where(new, nbrs, INVALID)])
+        all_d = jnp.concatenate([cand_d, nd])
+        all_exp = jnp.concatenate([cand_exp, jnp.zeros((R,), bool)])
+        order = jnp.argsort(all_d)[:L]
+        return (all_ids[order], all_d[order], all_exp[order],
+                vis_ids, vis_d, vis_cnt, n_cmps, n_seen)
+
+    cand_ids, cand_d, cand_exp, vis_ids, vis_d, vis_cnt, n_cmps, _ = (
+        jax.lax.while_loop(cond, body, state))
+    return SearchResult(cand_ids, cand_d, vis_ids, vis_d, vis_cnt, n_cmps)
+
+
+def greedy_search(
+    adjacency: jax.Array,
+    navigable: jax.Array,
+    start: jax.Array,
+    queries: jax.Array,
+    make_dist_fn: MakeDistFn,
+    *,
+    L: int,
+    max_visits: int,
+) -> SearchResult:
+    """Batched Algorithm 1 over ``queries`` [B, ...]."""
+
+    def one(q):
+        return _search_one(adjacency, navigable, start, make_dist_fn(q), L, max_visits)
+
+    return jax.vmap(one)(queries)
+
+
+def topk_results(
+    res: SearchResult,
+    k: int,
+    reportable: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Final top-k, excluding DeleteList/inactive nodes (paper §5.2 filter).
+
+    reportable: bool[capacity] — active & not deleted.
+    """
+    ids, dists = res.ids, res.dists
+    ok = (ids >= 0) & reportable[jnp.maximum(ids, 0)]
+    d = jnp.where(ok, dists, jnp.inf)
+    order = jnp.argsort(d, axis=-1)[:, :k]
+    out_ids = jnp.take_along_axis(ids, order, axis=-1)
+    out_d = jnp.take_along_axis(d, order, axis=-1)
+    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, INVALID)
+    return out_ids, out_d

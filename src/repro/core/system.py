@@ -1,0 +1,361 @@
+"""The FreshDiskANN system (paper §5): LTI + RW/RO-TempIndex + DeleteList +
+WAL, with the StreamingMerge cycle and optional background merging.
+
+JAX's functional state makes the paper's trickiest concurrency concern —
+searching while a merge is underway — safe by construction: a merge produces a
+*new* LTI value while searches keep reading the old immutable arrays; the swap
+is a single reference assignment (the paper needs careful SSD double-buffering
+for the same effect).
+
+External ids are user-provided int64s; the system maps them to (tier, slot).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import index as mem
+from . import pq as pqm
+from .config import IndexConfig, PQConfig, SystemConfig
+from .distance import INVALID
+from .graph import GraphState, empty_graph
+from .lti import LTIState, build_lti, search_lti
+from .merge import streaming_merge
+from .wal import WriteAheadLog, replay, truncate
+
+
+@dataclass
+class _Temp:
+    """One TempIndex instance + its slot<->external-id maps."""
+    state: GraphState
+    ext_ids: np.ndarray           # [capacity] int64, -1 free
+    n: int = 0
+
+
+@dataclass
+class SystemStats:
+    inserts: int = 0
+    deletes: int = 0
+    searches: int = 0
+    merges: int = 0
+    snapshots: int = 0
+    merge_seconds: float = 0.0
+    insert_latencies: list = field(default_factory=list)
+
+
+class FreshDiskANN:
+    def __init__(self, cfg: SystemConfig, lti: Optional[LTIState] = None,
+                 lti_ext_ids: Optional[np.ndarray] = None):
+        self.cfg = cfg
+        icfg = cfg.index
+        self.temp_cfg = IndexConfig(
+            capacity=cfg.temp_capacity, dim=icfg.dim, R=icfg.R,
+            L_build=icfg.L_build, L_search=icfg.L_search, alpha=icfg.alpha)
+        if lti is None:
+            g = empty_graph(icfg)
+            cb = pqm.PQCodebook(jnp.zeros(
+                (cfg.pq.m, cfg.pq.ksub, cfg.pq.dsub), jnp.float32))
+            lti = LTIState(g, jnp.zeros((icfg.capacity, cfg.pq.m), jnp.uint8), cb)
+        self.lti = lti
+        self.lti_ext_ids = (lti_ext_ids if lti_ext_ids is not None
+                            else np.full(icfg.capacity, -1, np.int64))
+        self.rw = self._new_temp()
+        self.ro: list[_Temp] = []
+        self.deleted_ext: set[int] = set()
+        self._ext_loc: dict[int, tuple] = {}
+        if lti_ext_ids is not None:
+            for slot, e in enumerate(lti_ext_ids):
+                if e >= 0:
+                    self._ext_loc[int(e)] = ("lti", slot)
+        self._insert_buf_v: list[np.ndarray] = []
+        self._insert_buf_id: list[int] = []
+        self.stats = SystemStats()
+        self._merge_lock = threading.Lock()
+        self._merge_thread: Optional[threading.Thread] = None
+        self.wal: Optional[WriteAheadLog] = None
+        if cfg.wal_dir:
+            os.makedirs(cfg.wal_dir, exist_ok=True)
+            self.wal = WriteAheadLog(
+                os.path.join(cfg.wal_dir, "wal.bin"), icfg.dim)
+
+    # ------------------------------------------------------------------ API
+    def insert(self, ext_id: int, vec: np.ndarray) -> None:
+        """Route to the RW-TempIndex (paper §5.2); batched flush."""
+        t0 = time.perf_counter()
+        if self.wal:
+            self.wal.log_insert(ext_id, vec)
+        self._insert_buf_id.append(int(ext_id))
+        self._insert_buf_v.append(np.asarray(vec, np.float32))
+        if len(self._insert_buf_id) >= self.cfg.insert_batch:
+            self._flush_inserts()
+        self.stats.inserts += 1
+        self.stats.insert_latencies.append(time.perf_counter() - t0)
+        self._maybe_rollover()
+
+    def delete(self, ext_id: int) -> None:
+        """DeleteList append — O(1), no graph edits (paper §4.2)."""
+        if self.wal:
+            self.wal.log_delete(ext_id)
+        self.deleted_ext.add(int(ext_id))
+        self.stats.deletes += 1
+
+    def search(self, queries: np.ndarray, k: int, L: Optional[int] = None
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2)."""
+        self._flush_inserts()
+        L = L or self.cfg.index.L_search
+        q = jnp.asarray(queries, jnp.float32)
+        cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
+        # Over-fetch so DeleteList filtering + cross-tier dedupe still leave k.
+        kk = min(max(k * 2, k + 8), L)
+        if int(self.lti.graph.n_total) > 0:
+            ids, d, _, _ = search_lti(self.lti, q, self.cfg.index, k=kk, L=L)
+            cands.append((self._map_ext(np.asarray(ids), self.lti_ext_ids),
+                          np.asarray(d)))
+        for t in [self.rw] + self.ro:
+            if t.n > 0:
+                ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk, L=L)
+                cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
+                              np.asarray(d)))
+        self.stats.searches += len(queries)
+        return self._aggregate(cands, k, queries.shape[0])
+
+    # ------------------------------------------------------------- plumbing
+    def _new_temp(self) -> _Temp:
+        return _Temp(empty_graph(self.temp_cfg),
+                     np.full(self.cfg.temp_capacity, -1, np.int64))
+
+    def _map_ext(self, slot_ids: np.ndarray, table: np.ndarray) -> np.ndarray:
+        out = np.full(slot_ids.shape, -1, np.int64)
+        ok = slot_ids >= 0
+        out[ok] = table[slot_ids[ok]]
+        return out
+
+    def _aggregate(self, cands, k, nq):
+        if not cands:
+            return (np.full((nq, k), -1, np.int64),
+                    np.full((nq, k), np.inf, np.float32))
+        ids = np.concatenate([c[0] for c in cands], axis=1)
+        ds = np.concatenate([c[1] for c in cands], axis=1)
+        # filter DeleteList + stale duplicates (an id may transiently exist in
+        # LTI and a TempIndex after re-insertion; keep the closest instance).
+        for i, row in enumerate(ids):
+            for j, e in enumerate(row):
+                if e in self.deleted_ext or e < 0:
+                    ds[i, j] = np.inf
+        order = np.argsort(ds, axis=1)
+        out_i = np.take_along_axis(ids, order, axis=1)
+        out_d = np.take_along_axis(ds, order, axis=1)
+        # dedupe per row keeping first (closest)
+        res_i = np.full((nq, k), -1, np.int64)
+        res_d = np.full((nq, k), np.inf, np.float32)
+        for r in range(nq):
+            seen, w = set(), 0
+            for e, dv in zip(out_i[r], out_d[r]):
+                if w >= k or not np.isfinite(dv):
+                    break
+                if e in seen:
+                    continue
+                seen.add(e)
+                res_i[r, w], res_d[r, w] = e, dv
+                w += 1
+        return res_i, res_d
+
+    def _flush_inserts(self) -> None:
+        if not self._insert_buf_id:
+            return
+        B = self.cfg.insert_batch
+        ids = self._insert_buf_id
+        vecs = self._insert_buf_v
+        self._insert_buf_id, self._insert_buf_v = [], []
+        t = self.rw
+        for lo in range(0, len(ids), B):
+            chunk_i = ids[lo:lo + B]
+            chunk_v = vecs[lo:lo + B]
+            slots = np.arange(t.n, t.n + len(chunk_i), dtype=np.int32)
+            if t.n == 0:
+                # Seed the empty temp graph: first point becomes the start.
+                st = t.state
+                v0 = jnp.asarray(chunk_v[0], st.vectors.dtype)
+                t.state = st._replace(
+                    vectors=st.vectors.at[0].set(v0),
+                    active=st.active.at[0].set(True),
+                    start=jnp.int32(0), n_total=jnp.int32(1))
+                t.ext_ids[0] = chunk_i[0]
+                self._ext_loc[chunk_i[0]] = ("rw", 0)
+                self.deleted_ext.discard(chunk_i[0])
+                chunk_i, chunk_v, slots = chunk_i[1:], chunk_v[1:], slots[1:] + 0
+                t.n = 1
+                if not chunk_i:
+                    continue
+            pad = B - len(chunk_i)
+            pslots = np.concatenate(
+                [slots, np.full(pad, INVALID, np.int32)])
+            pvecs = np.zeros((B, self.cfg.index.dim), np.float32)
+            pvecs[:len(chunk_v)] = np.stack(chunk_v)
+            t.state = mem.insert(t.state, jnp.asarray(pslots),
+                                 jnp.asarray(pvecs), self.temp_cfg)
+            for s, e in zip(slots, chunk_i):
+                t.ext_ids[s] = e
+                self._ext_loc[e] = ("rw", int(s))
+                self.deleted_ext.discard(e)  # re-insert revives the id
+            t.n += len(chunk_i)
+
+    def _maybe_rollover(self) -> None:
+        if self.rw.n >= self.cfg.ro_snapshot_points:
+            self._flush_inserts()
+            self.ro.append(self.rw)
+            self.rw = self._new_temp()
+            self.stats.snapshots += 1
+        staged = sum(t.n for t in self.ro)
+        if staged >= self.cfg.merge_threshold:
+            self.merge()
+
+    # -------------------------------------------------------------- merging
+    def merge(self, background: bool = False) -> None:
+        """StreamingMerge the RO-TempIndex points + DeleteList into the LTI."""
+        if background:
+            if self._merge_thread and self._merge_thread.is_alive():
+                return
+            self._merge_thread = threading.Thread(target=self._merge_impl)
+            self._merge_thread.start()
+        else:
+            self._merge_impl()
+
+    def wait_merge(self) -> None:
+        if self._merge_thread:
+            self._merge_thread.join()
+
+    def _merge_impl(self) -> None:
+        with self._merge_lock:
+            t0 = time.perf_counter()
+            ro, self.ro = self.ro, []
+            staged = sum(t.n for t in ro)
+            icfg = self.cfg.index
+            # Stage vectors + ids from the RO snapshots (skip re-deleted ones).
+            del_snapshot = set(self.deleted_ext)
+            vecs = np.zeros((max(staged, 1), icfg.dim), np.float32)
+            exts = np.full(max(staged, 1), -1, np.int64)
+            w = 0
+            for t in ro:
+                sl = np.nonzero(t.ext_ids >= 0)[0][:t.n]
+                v = np.asarray(t.state.vectors)[sl]
+                for s, row in zip(sl, v):
+                    e = int(t.ext_ids[s])
+                    if e in del_snapshot:
+                        continue
+                    vecs[w], exts[w] = row, e
+                    w += 1
+            valid = np.zeros(max(staged, 1), bool)
+            valid[:w] = True
+            # DeleteList restricted to LTI-resident points.
+            dmask = np.zeros(icfg.capacity, bool)
+            lti_ids = self.lti_ext_ids
+            if del_snapshot:
+                dl = np.asarray(sorted(del_snapshot), np.int64)
+                hit = np.isin(lti_ids, dl)
+                dmask[hit] = True
+            new_lti, stats = streaming_merge(
+                self.lti, jnp.asarray(vecs), jnp.asarray(valid),
+                jnp.asarray(dmask), icfg, self.cfg.pq,
+                insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block)
+            jax.block_until_ready(new_lti.graph.adjacency)
+            # Rebuild the external-id table: deleted rows out, new rows in
+            # (the merge reports the slot it assigned to each staged row).
+            new_ids = self.lti_ext_ids.copy()
+            new_ids[dmask] = -1
+            slots = np.asarray(stats.slots)
+            ok = valid & (slots >= 0)
+            for s, e in zip(slots[ok], exts[ok]):
+                new_ids[s] = e
+                self._ext_loc[e] = ("lti", int(s))
+            self.lti = new_lti
+            self.lti_ext_ids = new_ids
+            # Deletes consumed this cycle leave the DeleteList; deletes of
+            # never-merged temp points are consumed too (their points stayed
+            # out of the merge).
+            self.deleted_ext -= del_snapshot
+            if self.wal:
+                truncate(self.wal.path, icfg.dim, self.stats.merges + 1)
+            self.stats.merges += 1
+            self.stats.merge_seconds += time.perf_counter() - t0
+
+    # ------------------------------------------------------------ snapshots
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.savez_compressed(
+            os.path.join(path, "lti.npz"),
+            **{f"g_{k}": np.asarray(v) for k, v in
+               self.lti.graph._asdict().items()},
+            codes=np.asarray(self.lti.codes),
+            centroids=np.asarray(self.lti.codebook.centroids),
+            ext_ids=self.lti_ext_ids)
+        ro_blob = [(t.state, t.ext_ids, t.n) for t in self.ro + [self.rw]]
+        with open(os.path.join(path, "temps.pkl"), "wb") as f:
+            pickle.dump([(jax.tree.map(np.asarray, s), e, n)
+                         for s, e, n in ro_blob], f)
+        with open(os.path.join(path, "meta.pkl"), "wb") as f:
+            pickle.dump({"deleted": self.deleted_ext, "cfg": self.cfg}, f)
+
+    @classmethod
+    def load(cls, path: str, cfg: SystemConfig) -> "FreshDiskANN":
+        z = np.load(os.path.join(path, "lti.npz"))
+        g = GraphState(*[jnp.asarray(z[f"g_{k}"])
+                         for k in GraphState._fields])
+        lti = LTIState(g, jnp.asarray(z["codes"]),
+                       pqm.PQCodebook(jnp.asarray(z["centroids"])))
+        sys = cls(cfg, lti=lti, lti_ext_ids=z["ext_ids"].copy())
+        with open(os.path.join(path, "temps.pkl"), "rb") as f:
+            temps = pickle.load(f)
+        for i, (s, e, n) in enumerate(temps):
+            t = _Temp(GraphState(*[jnp.asarray(x) for x in s]), e.copy(), n)
+            if i < len(temps) - 1:
+                sys.ro.append(t)
+            else:
+                sys.rw = t
+            for slot, ext in enumerate(e):
+                if ext >= 0:
+                    sys._ext_loc[int(ext)] = ("temp", slot)
+        with open(os.path.join(path, "meta.pkl"), "rb") as f:
+            meta = pickle.load(f)
+        sys.deleted_ext = set(meta["deleted"])
+        return sys
+
+    def recover(self, snapshot_path: Optional[str] = None) -> int:
+        """Crash recovery (§5.6): replay the WAL over the latest snapshot.
+        Returns the number of records replayed."""
+        n = 0
+        wal_path = self.wal.path if self.wal else None
+        if wal_path and os.path.exists(wal_path):
+            for op, ext_id, vec in replay(wal_path):
+                if op == 0:
+                    self.insert(ext_id, vec)
+                else:
+                    self.delete(ext_id)
+                n += 1
+        return n
+
+    # -------------------------------------------------------------- helpers
+    @property
+    def size(self) -> int:
+        live = sum(t.n for t in [self.rw] + self.ro)
+        live += len(self._insert_buf_id)     # not yet flushed to the RW index
+        return (int(np.sum(self.lti_ext_ids >= 0)) + live
+                - len(self.deleted_ext & set(self._ext_loc)))
+
+
+def bootstrap_system(vectors: np.ndarray, ext_ids: np.ndarray,
+                     cfg: SystemConfig, **build_kw) -> FreshDiskANN:
+    """Build the initial static LTI (paper: start from a DiskANN build)."""
+    lti = build_lti(vectors, cfg.index, cfg.pq, **build_kw)
+    table = np.full(cfg.index.capacity, -1, np.int64)
+    table[:len(ext_ids)] = ext_ids
+    return FreshDiskANN(cfg, lti=lti, lti_ext_ids=table)

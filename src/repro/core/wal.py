@@ -1,0 +1,78 @@
+"""Redo-log (WAL) + snapshots — crash recovery (paper §5.6).
+
+Every user-facing mutation (insert with its vector, delete) is appended to an
+append-only log before being applied.  Recovery = load the most recent
+RO/LTI snapshots (read-only, always consistent) and replay the log suffix to
+rebuild the RW-TempIndex and DeleteList.
+
+Record format (little-endian):
+    u8 op (0=insert, 1=delete) | i64 external_id | f32[dim] vector (insert only)
+"""
+from __future__ import annotations
+
+import os
+import struct
+from typing import Iterator, Optional
+
+import numpy as np
+
+_HDR = struct.Struct("<4sIQ")   # magic, dim, start_seqno
+_REC = struct.Struct("<BQ")     # op, ext_id
+MAGIC = b"FDWL"
+OP_INSERT, OP_DELETE = 0, 1
+
+
+class WriteAheadLog:
+    def __init__(self, path: str, dim: int, start_seqno: int = 0,
+                 fsync: bool = False):
+        self.path, self.dim, self.fsync = path, dim, fsync
+        exists = os.path.exists(path) and os.path.getsize(path) > 0
+        self._f = open(path, "ab" if exists else "wb")
+        if not exists:
+            self._f.write(_HDR.pack(MAGIC, dim, start_seqno))
+            self._f.flush()
+
+    def log_insert(self, ext_id: int, vec: np.ndarray) -> None:
+        self._f.write(_REC.pack(OP_INSERT, ext_id))
+        self._f.write(np.asarray(vec, np.float32).tobytes())
+        self._flush()
+
+    def log_delete(self, ext_id: int) -> None:
+        self._f.write(_REC.pack(OP_DELETE, ext_id))
+        self._flush()
+
+    def _flush(self):
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self):
+        self._f.close()
+
+
+def replay(path: str) -> Iterator[tuple[int, int, Optional[np.ndarray]]]:
+    """Yield (op, ext_id, vector|None) records from a log file."""
+    with open(path, "rb") as f:
+        hdr = f.read(_HDR.size)
+        magic, dim, _ = _HDR.unpack(hdr)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad WAL magic")
+        vec_bytes = 4 * dim
+        while True:
+            raw = f.read(_REC.size)
+            if len(raw) < _REC.size:
+                break  # torn tail tolerated: partial final record dropped
+            op, ext_id = _REC.unpack(raw)
+            if op == OP_INSERT:
+                vraw = f.read(vec_bytes)
+                if len(vraw) < vec_bytes:
+                    break
+                yield op, ext_id, np.frombuffer(vraw, np.float32).copy()
+            else:
+                yield op, ext_id, None
+
+
+def truncate(path: str, dim: int, start_seqno: int) -> None:
+    """Start a fresh log epoch (after a successful snapshot+merge)."""
+    with open(path, "wb") as f:
+        f.write(_HDR.pack(MAGIC, dim, start_seqno))

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines (sharded batch iterators)."""
+from .pipelines import (lm_token_stream, click_stream, vector_stream,
+                        synthetic_graph, sasrec_stream)  # noqa: F401

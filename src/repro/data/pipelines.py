@@ -1,0 +1,104 @@
+"""Deterministic synthetic data pipelines.
+
+Every stream is a pure function of (seed, step) so training can resume from
+a checkpoint by step counter alone — the fault-tolerance contract: no data
+state needs checkpointing beyond the integer step.
+
+Streams yield numpy arrays (host) — the training loop shards them onto the
+mesh with ``jax.device_put`` + NamedSharding.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def lm_token_stream(batch: int, seq_len: int, vocab: int, seed: int = 0,
+                    start_step: int = 0) -> Iterator[dict]:
+    """Zipf-ish token stream with local correlations (next-token learnable:
+    target = (token * 31 + position) % vocab mixed with noise)."""
+    step = start_step
+    while True:
+        r = _rng(seed, step)
+        base = r.zipf(1.3, size=(batch, seq_len)).astype(np.int64)
+        tokens = (base % (vocab - 2)) + 1
+        targets = np.roll(tokens, -1, axis=1)
+        targets[:, -1] = (tokens[:, -1] * 31 + 7) % (vocab - 2) + 1
+        yield {"tokens": tokens.astype(np.int32),
+               "targets": targets.astype(np.int32)}
+        step += 1
+
+
+def click_stream(batch: int, n_sparse: int, rows_per_field: int,
+                 seed: int = 0, start_step: int = 0) -> Iterator[dict]:
+    """Criteo-like categorical click stream with a planted logistic signal."""
+    step = start_step
+    w = _rng(seed, 0).standard_normal(n_sparse)
+    while True:
+        r = _rng(seed, step)
+        ids = r.integers(0, rows_per_field, (batch, n_sparse))
+        logit = ((ids % 7 - 3) * w).sum(axis=1) / np.sqrt(n_sparse)
+        y = (r.random(batch) < 1 / (1 + np.exp(-logit))).astype(np.int32)
+        offset = np.arange(n_sparse) * rows_per_field
+        yield {"ids": (ids + offset).astype(np.int32), "labels": y}
+        step += 1
+
+
+def vector_stream(batch: int, dim: int, n_clusters: int = 64, seed: int = 0,
+                  start_step: int = 0) -> Iterator[np.ndarray]:
+    """Gaussian-mixture vectors — the ANN index update/query stream."""
+    centers = _rng(seed, 0).standard_normal((n_clusters, dim)) * 3.0
+    step = start_step
+    while True:
+        r = _rng(seed, step)
+        which = r.integers(0, n_clusters, batch)
+        yield (centers[which]
+               + r.standard_normal((batch, dim))).astype(np.float32)
+        step += 1
+
+
+def synthetic_graph(n_nodes: int, avg_degree: int, d_feat: int,
+                    n_classes: int, seed: int = 0):
+    """Power-law-ish random graph in CSR + homophilous features/labels."""
+    r = _rng(seed, 0)
+    n_edges = n_nodes * avg_degree
+    src = r.integers(0, n_nodes, n_edges)
+    dst = (src + r.zipf(1.5, n_edges)) % n_nodes   # locality-biased targets
+    labels = r.integers(0, n_classes, n_nodes)
+    feats = r.standard_normal((n_nodes, d_feat)).astype(np.float32)
+    feats[:, 0] += labels                          # learnable signal
+    order = np.argsort(dst, kind="stable")
+    src_sorted = src[order].astype(np.int32)
+    offsets = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(offsets, dst + 1, 1)
+    offsets = np.cumsum(offsets)
+    return {
+        "feats": feats, "labels": labels.astype(np.int32),
+        "src": src.astype(np.int32), "dst": dst.astype(np.int32),
+        "offsets": offsets.astype(np.int32), "nbrs": src_sorted,
+    }
+
+
+def sasrec_stream(batch: int, seq_len: int, n_items: int, seed: int = 0,
+                  start_step: int = 0) -> Iterator[dict]:
+    """Markov-chain item sequences (learnable transitions) + BPR negatives."""
+    step = start_step
+    while True:
+        r = _rng(seed, step)
+        seq = np.zeros((batch, seq_len + 1), np.int64)
+        seq[:, 0] = r.integers(1, n_items, batch)
+        for t in range(seq_len):
+            nxt = (seq[:, t] * 17 + 3) % (n_items - 1) + 1
+            noise = r.integers(1, n_items, batch)
+            take_noise = r.random(batch) < 0.3
+            seq[:, t + 1] = np.where(take_noise, noise, nxt)
+        neg = r.integers(1, n_items, (batch, seq_len))
+        yield {"seq": seq[:, :-1].astype(np.int32),
+               "pos": seq[:, 1:].astype(np.int32),
+               "neg": neg.astype(np.int32)}
+        step += 1

@@ -1,0 +1,2 @@
+from .sharding import (batch_axes, fsdp_rule, lm_param_shardings,
+                       shard_tree, spec_for)  # noqa: F401

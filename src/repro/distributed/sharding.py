@@ -1,0 +1,172 @@
+"""Sharding rules for every architecture family.
+
+Baseline scheme (the one every (arch x shape) cell dry-runs with):
+
+  * activations — pure data parallel over ``('pod', 'data')`` (batch axis);
+  * weights     — ZeRO-3 / FSDP: every weight sharded over 'model' on its
+    input-ish dimension and over 'data' on a secondary dimension *when
+    divisible*; GSPMD inserts the per-layer all-gathers.  This compiles for
+    every architecture regardless of head counts (it never shards an
+    attention-head axis, so H=40 or KV=8 vs a 16-way mesh axis is a
+    non-issue) and gives maximal memory headroom;
+  * KV caches   — sequence/window axis sharded over 'model';
+  * embedding / recsys tables — row-sharded over ('data','model') when
+    divisible (tables are the dominant state for recsys archs);
+  * optimizer state — mirrors parameter shardings.
+
+The perf hillclimb (EXPERIMENTS.md §Perf) layers Megatron-style TP / EP on
+top of this for the three chosen cells.
+
+Divisibility is checked per-dimension: a mesh axis is only assigned when it
+divides the dim; otherwise that dim stays unsharded.  This keeps every spec
+legal for jax.NamedSharding (which requires even shards).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """The data-parallel super-axis: ('pod', 'data') when a pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Return ``axes`` if the dim is divisible by their product, else None."""
+    return axes if dim % _axsize(mesh, axes) == 0 else None
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], wants: Sequence[Any]) -> P:
+    """Build a PartitionSpec assigning ``wants[i]`` to dim i when divisible.
+
+    Drops an axis entirely if an earlier dim already claimed it.
+    """
+    used: set = set()
+    out = []
+    for dim, want in zip(shape, wants):
+        ax = _fit(mesh, dim, want)
+        if ax is None:
+            out.append(None)
+            continue
+        names = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(n in used for n in names):
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(ax)
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def fsdp_rule(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+    """Baseline weight sharding by parameter name (see module docstring)."""
+    nd = len(shape)
+    if "embed" in path and nd == 2:               # [V, D] — rows over data
+        return spec_for(mesh, shape, ["data", None])
+    if "lm_head" in path:                         # [D, V] — V over model
+        # V stays model-sharded so logits are computed V-sharded without
+        # gathering the head (the loss reduces over the sharded V axis).
+        return spec_for(mesh, shape, [None, "model"])
+    if re.search(r"\bitem_emb|'V'|w_lin|\bV\b", path):
+        pass  # handled by recsys_param_shardings
+    if nd == 1 or "ln" in path or "norm" in path or path.endswith("b']"):
+        return P()
+    if re.search(r"w[qkv]'\]$", path) and nd == 4:   # [Gn, D, H, dh]
+        return spec_for(mesh, shape, [None, "model", None, "data"])
+    if path.endswith("wo']") and nd == 4:            # [Gn, H, dh, D]
+        return spec_for(mesh, shape, [None, None, "data", "model"])
+    if re.search(r"w_(gate|up)'\]$", path):
+        if nd == 3:                                  # [Gn, D, F]
+            return spec_for(mesh, shape, [None, "model", "data"])
+        if nd == 4:                                  # [Gn, E, D, F] (MoE)
+            # shard D x F (always divisible) — the E axis may be tiny
+            # (mixtral: 8 < 16), so sharding it would cap at 16-way and
+            # blow up the f32 optimizer state (47B x 12B / 16 > HBM).
+            return spec_for(mesh, shape, [None, None, "model", "data"])
+    if path.endswith("w_down']"):
+        if nd == 3:                                  # [Gn, F, D]
+            return spec_for(mesh, shape, [None, "data", "model"])
+        if nd == 4:                                  # [Gn, E, F, D]
+            return spec_for(mesh, shape, [None, None, "data", "model"])
+    if path.endswith("router']"):                    # [Gn, D, E]
+        return spec_for(mesh, shape, [None, "model", None])
+    # generic fallback: shard the two largest dims over model/data
+    return _generic_spec(mesh, shape)
+
+
+def _generic_spec(mesh: Mesh, shape: Sequence[int]) -> P:
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    wants: list = [None] * len(shape)
+    for i, ax in zip(order, ("model", "data")):
+        wants[i] = ax
+    return spec_for(mesh, shape, wants)
+
+
+def lm_param_shardings(mesh: Mesh, abstract) -> Any:
+    """NamedShardings for a transformer param pytree (abstract_params)."""
+
+    def one(path, leaf):
+        spec = fsdp_rule(mesh, jax.tree_util.keystr(path), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def table_sharding(mesh: Mesh, shape: Sequence[int]) -> P:
+    """Recsys/GNN big-table rule: rows over (data, model) combined."""
+    return spec_for(mesh, shape, [("data", "model"), None])
+
+
+def generic_param_shardings(mesh: Mesh, abstract, table_names=()) -> Any:
+    """GNN/recsys params: named big tables row-sharded, rest generic FSDP."""
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        if any(t in p for t in table_names):
+            spec = table_sharding(mesh, leaf.shape)
+        else:
+            spec = _generic_spec(mesh, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def shard_tree(mesh: Mesh, tree, spec_fn) -> Any:
+    """tree of arrays -> device_put against spec_fn(path, leaf)."""
+
+    def one(path, leaf):
+        return jax.device_put(
+            leaf, NamedSharding(mesh, spec_fn(path, leaf)))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def cache_shardings(mesh: Mesh, abstract_caches, batch: int) -> Any:
+    """KV caches: [Gn, B, W, KV, dh] — B over batch axes, W over 'model'."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        if p.endswith("pos']"):
+            return NamedSharding(mesh, P())
+        spec = spec_for(mesh, leaf.shape, [None, ba, "model", None, None])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_caches)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the FreshDiskANN compute hot-spots.
+
+Three kernels, each with a pure-jnp oracle in ``ref.py`` and a jit'd public
+wrapper in ``ops.py`` (which falls back to interpret mode on CPU):
+
+  pq_adc       — asymmetric distance computation over PQ codes.  The paper's
+                 single hottest op: every navigation step of the SSD/LTI index
+                 scores R neighbors from their 32-byte codes.  TPU adaptation:
+                 instead of scalar table lookups (SSD/CPU idiom), the LUT
+                 gather is re-associated as one-hot(codes) @ LUT — an MXU
+                 matmul — tiled so codes stream HBM->VMEM block-by-block.
+  l2_distance  — tiled ||q - x||^2 via the matmul identity (rerank + brute
+                 force ground truth + k-means assignment).
+  block_topk   — streaming block top-k merge (candidate-list maintenance of
+                 Algorithm 1 / final result aggregation across shards).
+"""
+from .ops import adc_distances, l2_distances, block_topk  # noqa: F401

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: streaming block top-k (smallest distances + ids).
+
+Used for candidate-list maintenance in beam search and for merging per-shard
+search results (the paper's cross-machine "aggregate results" step, §1).
+
+The points axis is streamed block-by-block (sequential innermost grid axis);
+a VMEM scratch holds the running top-k per query.  Within each step the
+running list is merged with the new block by k rounds of (argmin, mask) —
+pure VPU ops, no sort network needed for the k≲128 regime the paper uses.
+
+Grid: (Q / block_q, N / block_n); the output tile is written on the final
+N-step only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _topk_kernel(d_ref, id_ref, out_d_ref, out_i_ref, best_d, best_i,
+                 *, k: int, n_nblocks: int):
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        best_d[...] = jnp.full_like(best_d, jnp.inf)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    block_d = d_ref[...].astype(jnp.float32)           # [BQ, BN]
+    block_i = jnp.broadcast_to(id_ref[...][None, :], block_d.shape)
+
+    cand_d = jnp.concatenate([best_d[...], block_d], axis=1)   # [BQ, k+BN]
+    cand_i = jnp.concatenate([best_i[...], block_i], axis=1)
+
+    bq, width = cand_d.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, width), 1)
+
+    def select(j, carry):
+        cd, new_d, new_i = carry
+        m = jnp.min(cd, axis=1, keepdims=True)                  # [BQ, 1]
+        # first column attaining the min (stable tie-break)
+        is_min = cd == m
+        col = jnp.min(jnp.where(is_min, cols, width), axis=1, keepdims=True)
+        sel = cols == col
+        picked_i = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
+        picked_d = m[:, 0]
+        new_d = jax.lax.dynamic_update_slice(
+            new_d, picked_d[:, None], (0, j))
+        new_i = jax.lax.dynamic_update_slice(
+            new_i, jnp.where(jnp.isfinite(picked_d), picked_i,
+                             -1)[:, None].astype(jnp.int32), (0, j))
+        cd = jnp.where(sel, jnp.inf, cd)
+        return cd, new_d, new_i
+
+    init = (cand_d,
+            jnp.full((bq, k), jnp.inf, jnp.float32),
+            jnp.full((bq, k), -1, jnp.int32))
+    _, nd, ni = jax.lax.fori_loop(0, k, select, init)
+    best_d[...] = nd
+    best_i[...] = ni
+
+    @pl.when(n_idx == n_nblocks - 1)
+    def _done():
+        out_d_ref[...] = best_d[...]
+        out_i_ref[...] = best_i[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_n", "interpret"))
+def block_topk_kernel(dists: jax.Array, ids: jax.Array, *, k: int,
+                      block_q: int = 8, block_n: int = 512,
+                      interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """dists f32 [Q, N], ids int32 [N] -> (dists [Q, k], ids [Q, k]) asc."""
+    Q, N = dists.shape
+    assert ids.shape == (N,)
+    assert Q % block_q == 0 and N % block_n == 0
+    n_nblocks = N // block_n
+    grid = (Q // block_q, n_nblocks)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, n_nblocks=n_nblocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_n), lambda q, n: (q, n)),
+            pl.BlockSpec((block_n,), lambda q, n: (n,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda q, n: (q, 0)),
+            pl.BlockSpec((block_q, k), lambda q, n: (q, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dists, ids)

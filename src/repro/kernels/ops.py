@@ -1,0 +1,94 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Responsibilities: pad inputs to block multiples, pick interpret mode on CPU
+(this container validates kernels with ``interpret=True``; on TPU the same
+code compiles to Mosaic), and slice padding back off.  Every wrapper is
+numerically interchangeable with its ``ref.py`` oracle.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_topk import block_topk_kernel
+from .l2_distance import l2_distances_kernel
+from .pq_adc import adc_distances_kernel
+
+
+def _interpret() -> bool:
+    force = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if force is not None:
+        return force not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, fill) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q",
+                                             "use_kernel"))
+def adc_distances(codes: jax.Array, luts: jax.Array, *,
+                  block_n: int = 128, block_q: int = 8,
+                  use_kernel: bool = True) -> jax.Array:
+    """codes [N, m] uint8, luts [Q, m, ksub] -> [Q, N] f32 ADC distances."""
+    if not use_kernel:
+        return jax.vmap(lambda t: ref.adc_distances_ref(codes, t))(luts)
+    N, Q = codes.shape[0], luts.shape[0]
+    c = _pad_to(codes, 0, block_n, 0)
+    t = _pad_to(luts, 0, block_q, 0.0)
+    out = adc_distances_kernel(c, t, block_n=block_n, block_q=block_q,
+                               interpret=_interpret())
+    return out[:Q, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_n", "block_d",
+                                             "use_kernel"))
+def l2_distances(queries: jax.Array, points: jax.Array, *,
+                 block_q: int = 128, block_n: int = 256, block_d: int = 128,
+                 use_kernel: bool = True) -> jax.Array:
+    """[Q, d] x [N, d] -> [Q, N] squared L2."""
+    if not use_kernel:
+        return ref.l2_distances_ref(queries, points)
+    Q, d = queries.shape
+    N = points.shape[0]
+    bq = min(block_q, _ceil_mult(Q, 8))
+    bn = min(block_n, _ceil_mult(N, 128))
+    bd = min(block_d, d)
+    q = _pad_to(_pad_to(queries, 0, bq, 0.0), 1, bd, 0.0)
+    x = _pad_to(_pad_to(points, 0, bn, 0.0), 1, bd, 0.0)
+    out = l2_distances_kernel(q, x, block_q=bq, block_n=bn, block_d=bd,
+                              interpret=_interpret())
+    return out[:Q, :N]
+
+
+def _ceil_mult(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "use_kernel"))
+def block_topk(dists: jax.Array, ids: jax.Array, k: int, *,
+               block_q: int = 8, block_n: int = 512,
+               use_kernel: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Top-k smallest of [Q, N] with global ids [N]; returns ([Q,k], [Q,k])."""
+    if not use_kernel:
+        return ref.block_topk_ref(dists, ids, k)
+    Q, N = dists.shape
+    bn = min(block_n, _ceil_mult(N, 128))
+    bq = min(block_q, _ceil_mult(Q, 8))
+    d = _pad_to(_pad_to(dists, 0, bq, jnp.inf), 1, bn, jnp.inf)
+    i = _pad_to(ids, 0, bn, -1)
+    od, oi = block_topk_kernel(d, i, k=k, block_q=bq, block_n=bn,
+                               interpret=_interpret())
+    return od[:Q], oi[:Q]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics the kernels must match (asserted by the per-kernel
+allclose sweeps in ``tests/test_kernels.py``).  They are also the CPU
+fallback used when a kernel is disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_distances_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """ADC: ``out[n] = sum_m lut[m, codes[n, m]]``.
+
+    codes: uint8/int32 [N, m]; lut: f32 [m, ksub] -> f32 [N].
+    """
+    c = codes.astype(jnp.int32)
+    m = lut.shape[0]
+    return jnp.sum(lut[jnp.arange(m)[None, :], c], axis=-1).astype(jnp.float32)
+
+
+def l2_distances_ref(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """[Q, d] x [N, d] -> [Q, N] squared L2 (exact, f32 accumulation)."""
+    q = queries.astype(jnp.float32)
+    x = points.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    xn = jnp.sum(x * x, axis=-1)
+    return jnp.maximum(qn - 2.0 * (q @ x.T) + xn[None, :], 0.0)
+
+
+def block_topk_ref(dists: jax.Array, ids: jax.Array, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Top-k smallest distances with their ids.
+
+    dists: f32 [Q, N]; ids: int32 [N] -> (f32 [Q, k], int32 [Q, k]) sorted
+    ascending.  +inf distances lose to everything; ties broken by id order
+    as produced by a stable sort on distance.
+    """
+    order = jnp.argsort(dists, axis=-1, stable=True)[:, :k]
+    d = jnp.take_along_axis(dists, order, axis=-1)
+    i = jnp.take(ids, order)
+    return d, i

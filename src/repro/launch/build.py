@@ -1,0 +1,298 @@
+"""Build (step_fn, abstract_args, donate) for every (arch x cell x mesh).
+
+This is the single dispatch point shared by the dry-run, the roofline
+harness and the drivers: given an ArchSpec, a Cell and a Mesh it returns a
+jit-ready function plus fully-sharded ShapeDtypeStruct arguments (params,
+optimizer state, inputs) — nothing is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.common import ArchSpec, Cell
+from ..distributed.sharding import (batch_axes, cache_shardings,
+                                    generic_param_shardings,
+                                    lm_param_shardings, spec_for,
+                                    table_sharding)
+from ..optim.adamw import adamw_init
+from ..training.steps import make_train_step
+
+REPL = P()
+
+
+def _sds_with(shardings, abstract):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def _abstract_opt(params_abstract, shardings, mesh):
+    opt = jax.eval_shape(adamw_init, params_abstract)
+    step_s = NamedSharding(mesh, REPL)
+    return opt._replace(
+        step=jax.ShapeDtypeStruct(opt.step.shape, opt.step.dtype,
+                                  sharding=step_s),
+        m=_sds_with(shardings, opt.m),
+        v=_sds_with(shardings, opt.v))
+
+
+def _input_sds(mesh: Mesh, specs: dict, rules: dict) -> dict:
+    """Attach shardings to raw input ShapeDtypeStructs by name."""
+    ba = batch_axes(mesh)
+    out = {}
+    for name, sds in specs.items():
+        if name in rules:
+            spec = rules[name]
+        elif hasattr(sds, "shape"):
+            spec = spec_for(mesh, sds.shape,
+                            [ba] + [None] * (len(sds.shape) - 1))
+        else:
+            spec = None
+        if hasattr(sds, "shape"):
+            out[name] = jax.ShapeDtypeStruct(
+                sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec))
+        else:
+            out[name] = sds   # pytree (caches) — pre-sharded by caller
+    return out
+
+
+@dataclasses.dataclass
+class Built:
+    fn: Callable                 # positional-arg step function
+    args: tuple                  # abstract, sharded args
+    donate: tuple = ()
+    static: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _build_lm(arch: ArchSpec, cell: Cell, mesh: Mesh) -> Built:
+    from ..models import transformer as tf
+    from ..serving.steps import make_lm_decode_step, make_lm_prefill_step
+
+    cfg = arch.full_config
+    abstract = tf.abstract_params(cfg)
+    pshard = lm_param_shardings(mesh, abstract)
+    params = _sds_with(pshard, abstract)
+    ba = batch_axes(mesh)
+
+    if cell.kind == "train":
+        # microbatch accumulation for the big models: halves activation
+        # residency at identical math (loss/grad averaged over microbatches)
+        accum = 2 if cfg.param_count() > 5e9 else 1
+        step = make_train_step(
+            lambda p, b: tf.lm_loss(p, b["tokens"], b["targets"], cfg),
+            accum_steps=accum)
+        opt = _abstract_opt(abstract, pshard, mesh)
+        batch = _input_sds(mesh, cell.specs(), {
+            "tokens": P(ba, "model"), "targets": P(ba, "model")})
+        return Built(step, (params, opt, batch), donate=(0, 1))
+
+    if cell.kind == "prefill":
+        fn = make_lm_prefill_step(cfg)
+        batch = _input_sds(mesh, cell.specs(), {"tokens": P(ba, "model")})
+        return Built(fn, (params, batch["tokens"]))
+
+    if cell.kind == "decode":
+        fn = make_lm_decode_step(cfg)
+        specs = cell.specs()
+        cshard = cache_shardings(mesh, specs["caches"], cell.meta["batch"])
+        caches = _sds_with(cshard, specs["caches"])
+        b = cell.meta["batch"]
+        tok = jax.ShapeDtypeStruct(
+            (b,), jnp.int32,
+            sharding=NamedSharding(mesh, spec_for(mesh, (b,), [ba])))
+        pos = jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, REPL))
+        return Built(fn, (params, caches, tok, pos), donate=(1,))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _build_gnn(arch: ArchSpec, cell: Cell, mesh: Mesh) -> Built:
+    from ..models import gnn
+
+    meta = cell.meta
+    cfg = dataclasses.replace(
+        arch.full_config, d_feat=meta["d_feat"],
+        n_classes=meta["n_classes"],
+        fanout=tuple(meta.get("fanout", arch.full_config.fanout)))
+    abstract = jax.eval_shape(
+        lambda k: gnn.init_sage_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshard = generic_param_shardings(mesh, abstract)
+    params = _sds_with(pshard, abstract)
+    ba = batch_axes(mesh)
+    all_ax = tuple(mesh.axis_names)
+
+    def pad_shard(x, axes):
+        """Pad axis 0 to a mesh-divisible size, then constrain sharding —
+        the edge/node arrays of real graphs are never divisible."""
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        pad = (-x.shape[0]) % n
+        if pad:
+            widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+            x = jnp.pad(x, widths)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(axes, *([None] * (x.ndim - 1)))))
+
+    if cell.kind == "train_full":
+        def loss_fn(p, b):
+            n = b["feats"].shape[0]
+            src = pad_shard(b["src"], all_ax)
+            dst = pad_shard(b["dst"], all_ax)
+            # padded edges self-loop on node 0 with zero weight via masking:
+            # segment ids beyond n are dropped by num_segments bound below.
+            src = jnp.where(jnp.arange(src.shape[0]) < b["src"].shape[0],
+                            src, n - 1)
+            dst = jnp.where(jnp.arange(dst.shape[0]) < b["dst"].shape[0],
+                            dst, n - 1)
+            loss = gnn.sage_loss_full(p, b["feats"], src, dst,
+                                      b["labels"], b["mask"], cfg)
+            return loss, {"ce": loss}
+    elif cell.kind == "train_sampled":
+        def loss_fn(p, b):
+            loss = gnn.sage_loss_sampled(
+                p, b["key"], b["feats"], b["offsets"], b["nbrs"],
+                b["seeds"], b["labels"], cfg)
+            return loss, {"ce": loss}
+    elif cell.kind == "train_batched":
+        def loss_fn(p, b):
+            logits = gnn.sage_forward_batched(
+                p, b["feats"], b["src"], b["dst"], b["edge_mask"], cfg)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, b["labels"][:, None], axis=-1)[:, 0]
+            loss = (lse - gold).mean()
+            return loss, {"ce": loss}
+    else:
+        raise ValueError(cell.kind)
+
+    step = make_train_step(loss_fn)
+    opt = _abstract_opt(abstract, pshard, mesh)
+    rules = {"feats": REPL, "src": REPL, "dst": REPL, "labels": REPL,
+             "mask": REPL, "offsets": REPL, "nbrs": REPL, "key": REPL,
+             "seeds": P(ba)}
+    if cell.kind == "train_batched":
+        rules = {k: P(ba, *([None] * 1)) for k in
+                 ("src", "dst", "edge_mask")}
+        rules["feats"] = P(ba, None, None)
+        rules["labels"] = P(ba)
+    batch = _input_sds(mesh, cell.specs(), rules)
+    return Built(step, (params, opt, batch), donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Recsys family
+# ---------------------------------------------------------------------------
+
+def _build_recsys(arch: ArchSpec, cell: Cell, mesh: Mesh) -> Built:
+    from ..models import recsys as rec
+    from ..serving.steps import make_recsys_serve_step, make_retrieval_step
+
+    cfg = arch.full_config
+    abstract = jax.eval_shape(
+        lambda k: rec.init_recsys_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshard = generic_param_shardings(
+        mesh, abstract, table_names=("V'", "w_lin", "item_emb"))
+    params = _sds_with(pshard, abstract)
+    ba = batch_axes(mesh)
+
+    if cell.kind == "train":
+        if cfg.kind == "sasrec":
+            def loss_fn(p, b):
+                loss = rec.sasrec_loss(p, b["seq"], b["pos"], b["neg"], cfg)
+                return loss, {"bpr": loss}
+        else:
+            def loss_fn(p, b):
+                loss = rec.recsys_loss(p, b["ids"], b["labels"], cfg)
+                return loss, {"logloss": loss}
+        step = make_train_step(loss_fn)
+        opt = _abstract_opt(abstract, pshard, mesh)
+        batch = _input_sds(mesh, cell.specs(), {})
+        return Built(step, (params, opt, batch), donate=(0, 1))
+
+    if cell.kind == "serve":
+        if cfg.kind == "sasrec":
+            def fn(p, seq):
+                q = rec.sasrec_user_embedding(p, seq, cfg)
+                return rec.retrieval_topk(q, p["item_emb"], 100)
+            batch = _input_sds(mesh, cell.specs(), {})
+            return Built(fn, (params, batch["seq"]))
+        fn0 = make_recsys_serve_step(cfg)
+        batch = _input_sds(mesh, cell.specs(), {})
+        return Built(fn0, (params, batch["ids"]))
+
+    if cell.kind == "retrieval":
+        fn = make_retrieval_step(cfg, k=100)
+        specs = cell.specs()
+        rules = {"item_table": table_sharding(
+            mesh, specs["item_table"].shape)}
+        batch = _input_sds(mesh, specs, rules)
+        user = batch.get("ids", batch.get("seq"))
+        return Built(fn, (params, user, batch["item_table"]))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# ANN (the paper's own config)
+# ---------------------------------------------------------------------------
+
+def _build_ann(arch: ArchSpec, cell: Cell, mesh: Mesh) -> Built:
+    from . import ann_steps
+
+    dep = arch.full_config
+    lti = ann_steps.abstract_lti(dep.index, dep.pq, mesh)
+    batch = _input_sds(mesh, cell.specs(), {
+        "queries": REPL, "new_vecs": REPL, "new_valid": REPL})
+    if cell.kind == "ann_search":
+        fn = ann_steps.make_distributed_search(mesh, dep.index, k=dep.k)
+        return Built(fn, (lti, batch["queries"]))
+    if cell.kind == "ann_insert":
+        fn = ann_steps.make_distributed_insert(mesh, dep.index)
+        return Built(fn, (lti, batch["new_vecs"]), donate=(0,))
+    if cell.kind == "ann_merge":
+        n = len(mesh.devices.flat)
+        dmask = jax.ShapeDtypeStruct(
+            (dep.index.capacity * n,), jnp.bool_,
+            sharding=NamedSharding(mesh, P(tuple(mesh.axis_names))))
+        fn = ann_steps.make_distributed_merge(mesh, dep.index, dep.pq)
+        return Built(fn, (lti, batch["new_vecs"], batch["new_valid"],
+                          dmask), donate=(0,))
+    raise ValueError(cell.kind)
+
+
+_BUILDERS = {"lm": _build_lm, "gnn": _build_gnn, "recsys": _build_recsys,
+             "ann": _build_ann}
+
+
+def build_cell(arch: ArchSpec, cell: Cell, mesh: Mesh) -> Built:
+    from ..distributed.ctx import activation_sharding
+
+    built = _BUILDERS[arch.family](arch, cell, mesh)
+    inner = built.fn
+
+    @functools.wraps(inner)
+    def with_ctx(*args):
+        with activation_sharding(mesh):
+            return inner(*args)
+
+    built.fn = with_ctx
+    return built

@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and record roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices to
+build the 2x16x16 production mesh (single-pod 16x16 uses the first 256).
+Smoke tests and benchmarks do NOT import this module — they see 1 device.
+"""
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+
+from ..configs import ASSIGNED, get_arch            # noqa: E402
+from .build import build_cell                        # noqa: E402
+from .hlo_analysis import analyze_compiled           # noqa: E402
+from .mesh import make_production_mesh               # noqa: E402
+
+
+def flatten_args(args):
+    leaves = []
+    for a in args:
+        leaves.append(a)
+    return leaves
+
+
+def run_cell(arch_name: str, shape: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    arch = get_arch(arch_name)
+    cell = arch.cell(shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch_name, "shape": shape, "mesh": mesh_tag,
+              "kind": cell.kind, "status": "?"}
+    if cell.skip:
+        result["status"] = "SKIP"
+        result["reason"] = cell.skip
+        _emit(result, out_dir, verbose)
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        built = build_cell(arch, cell, mesh)
+        with mesh:
+            jitted = jax.jit(built.fn, donate_argnums=built.donate)
+            lowered = jitted.lower(*built.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        roof = analyze_compiled(compiled)
+        result.update({
+            "status": "OK",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+            },
+            "roofline": roof.as_dict(),
+        })
+        if verbose:
+            print(f"[dryrun] {arch_name} x {shape} x {mesh_tag}: "
+                  f"memory_analysis: {ma}")
+            print(f"[dryrun] cost_analysis: flops={roof.flops:.3e} "
+                  f"bytes={roof.hbm_bytes:.3e} "
+                  f"coll={roof.coll_bytes:.3e} ({roof.coll_breakdown})")
+    except Exception as e:  # a failure here is a bug in the system
+        result["status"] = "FAIL"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    _emit(result, out_dir, verbose)
+    return result
+
+
+def _emit(result: dict, out_dir: str | None, verbose: bool):
+    line = (f"[dryrun] {result['arch']} x {result['shape']} x "
+            f"{result['mesh']}: {result['status']}")
+    if result["status"] == "OK":
+        r = result["roofline"]
+        pk = result["memory_analysis"]["peak_bytes"] / 2**30
+        line += (f" peak={pk:.2f}GiB/chip "
+                 f"t_comp={r['t_compute']:.4f}s t_mem={r['t_memory']:.4f}s "
+                 f"t_coll={r['t_collective']:.4f}s -> {r['bottleneck']}")
+    elif result["status"] == "SKIP":
+        line += f" ({result['reason'][:80]})"
+    else:
+        line += f" {result.get('error', '')[:300]}"
+    if verbose:
+        print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = (f"{result['arch']}__{result['shape']}__"
+              f"{result['mesh']}.json")
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = ASSIGNED + ["freshdiskann-1b"]
+        fails = 0
+        for name in archs:
+            arch = get_arch(name)
+            for cell in arch.cells:
+                for mp in (False, True):
+                    r = run_cell(name, cell.shape, mp, args.out,
+                                 verbose=True)
+                    fails += r["status"] == "FAIL"
+        raise SystemExit(1 if fails else 0)
+
+    shapes = ([args.shape] if args.shape
+              else [c.shape for c in get_arch(args.arch).cells])
+    fails = 0
+    for s in shapes:
+        r = run_cell(args.arch, s, args.multi_pod, args.out)
+        fails += r["status"] == "FAIL"
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+The compiled module is the *per-device* SPMD program, so every byte count
+below is per-chip.  ``collective_bytes`` resolves operand names to their
+defining ops' result shapes (operand shapes are not printed inline by this
+XLA version).
+
+Roofline model (TPU v5e targets):
+    compute term    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+    memory term     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective term = collective_bytes / ICI_bw         (~50 GB/s/link)
+(all per-chip; FLOPs/bytes from compiled.cost_analysis()).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (v5e: 4 links usable)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)\)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device) from optimized HLO."""
+    sizes: Dict[str, int] = {}
+    pending = []              # (kind, operand names) resolved after pass 1
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, operands = m.groups()
+        sizes[name] = _shape_bytes(type_str)
+        base = op.split(".")[0]
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base.endswith("-done"):
+            continue          # counted at -start
+        if base in _COLLECTIVES:
+            ops = re.findall(r"%[\w.\-]+", operands)
+            pending.append((base, ops))
+    out: Dict[str, int] = {}
+    for kind, ops in pending:
+        b = sum(sizes.get(o, 0) for o in ops)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops (trip-count-aware)
+    hbm_bytes: float           # per-device bytes accessed
+    coll_bytes: float          # per-device collective operand bytes
+    coll_breakdown: Dict[str, int]
+    peak_mem_bytes: Optional[float]   # temp + args + output (per device)
+    xla_flops: float = 0.0     # raw cost_analysis (loop bodies counted once)
+    xla_bytes: float = 0.0
+    dynamic_loops: list = dataclasses.field(default_factory=list)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step estimate = max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck, "step_time": self.step_time,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+            "dynamic_loops": self.dynamic_loops,
+        }
+
+
+def analyze_compiled(compiled) -> Roofline:
+    """Trip-count-aware analysis via hlo_parse (XLA's cost_analysis counts
+    while bodies once; see hlo_parse docstring).  The raw XLA numbers are
+    kept in xla_* fields as a cross-check lower bound."""
+    from .hlo_parse import analyze_text
+
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    cost = analyze_text(text)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                        + ma.output_size_in_bytes
+                        - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+    roof = Roofline(cost.flops, cost.hbm_bytes, cost.coll_bytes,
+                    {k: int(v) for k, v in cost.coll_breakdown.items()},
+                    mem)
+    roof.xla_flops = float(ca.get("flops", 0.0))
+    roof.xla_bytes = float(ca.get("bytes accessed", 0.0))
+    roof.dynamic_loops = cost.dynamic_loops
+    return roof

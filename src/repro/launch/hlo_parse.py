@@ -1,0 +1,388 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned program (layer stacks, chunked attention, k-means loops) is
+undercounted by its trip count.  This module re-derives the three roofline
+inputs directly from the optimized per-device HLO text:
+
+  * **flops**            — 2*M*N*K per ``dot``/``convolution`` (including
+    dots inside fusion computations), multiplied by the op's execution count;
+  * **hbm bytes**        — per top-level op: operand + result bytes (fusions
+    count their boundary, not their interior — matching XLA's fusion
+    semantics), x execution count;
+  * **collective bytes** — operand bytes of every collective op, x count.
+
+Execution counts: ENTRY = 1; ``while`` body/condition = parent x trip count
+(parsed from the loop condition's ``compare(iter, constant)``); ``call``/
+branch computations inherit the parent count; fusion computations are
+*not* traversed for bytes (interior is register/VMEM traffic) but are for
+flops.  Data-dependent ``while`` loops (e.g. beam search) report trip=1 and
+are flagged in ``dynamic_loops`` so callers can apply a domain bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "ragged-all-to-all")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    total_b = 0
+    total_e = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    args_str: str
+
+    @property
+    def operands(self) -> List[str]:
+        # operand names up to the closing paren of the operand list
+        depth, end = 0, len(self.args_str)
+        for i, ch in enumerate(self.args_str):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return re.findall(r"%([\w.\-]+)", self.args_str[:end])
+
+    @property
+    def attrs(self) -> str:
+        return self.args_str
+
+
+def _balanced_span(s: str, start: int) -> int:
+    """Index just past the paren that closes s[start] ('(')."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_header(line: str):
+    """'%name (a: T, b: T) -> T {' -> (name, [(pname, type), ...]) or None."""
+    st = line.strip()
+    if not st.endswith("{") or "->" not in st:
+        return None
+    is_entry = st.startswith("ENTRY")
+    if is_entry:
+        st = st[len("ENTRY"):].strip()
+    lp = st.find("(")
+    if lp < 0:
+        return None
+    name = st[:lp].strip().lstrip("%").strip()
+    if not name or "=" in name or " " in name:
+        return None
+    rp = _balanced_span(st, lp)
+    params_str = st[lp + 1: rp - 1]
+    params = []
+    depth = 0
+    cur = ""
+    for ch in params_str + ",":
+        if ch == "," and depth == 0:
+            if ":" in cur:
+                pname, ptype = cur.split(":", 1)
+                params.append((pname.strip().lstrip("%"), ptype.strip()))
+            cur = ""
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        cur += ch
+    return name, params, is_entry
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            h = _parse_header(line)
+            if h:
+                cur, params, is_entry = h
+                comps[cur] = [Op(pn, pt, "parameter", "")
+                              for pn, pt in params]
+                if is_entry:
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(Op(*m.groups()))
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _find_trip_count(comps, cond_name: str) -> Optional[int]:
+    ops = comps.get(cond_name)
+    if not ops:
+        return None
+    consts = {}
+    for op in ops:
+        if op.opcode == "constant":
+            mm = re.match(r"([\-0-9]+)\)", op.args_str)
+            if mm:
+                consts[op.name] = int(mm.group(1))
+    for op in ops:
+        if op.opcode == "compare" and "direction=LT" in op.args_str:
+            for o in op.operands:
+                if o in consts:
+                    return consts[o]
+    return None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    dynamic_loops: List[str] = dataclasses.field(default_factory=list)
+    n_while: int = 0
+
+
+def _dot_flops(op: Op, sizes: Dict[str, tuple]) -> float:
+    """2 * result_elems * K, K = product of lhs contracting dims."""
+    res_elems, _ = _shape_elems_bytes(op.type_str)
+    operands = op.operands
+    if not operands:
+        return 0.0
+    lhs = sizes.get(operands[0])
+    if lhs is None:
+        return 0.0
+    dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.args_str)
+    if not dims_m:
+        return float(2 * res_elems)
+    shape_m = _SHAPE_RE.search(lhs[2])
+    if not shape_m:
+        return float(2 * res_elems)
+    dims = [int(d) for d in shape_m.group(2).split(",") if d]
+    k = 1
+    for ci in dims_m.group(1).split(","):
+        if ci:
+            k *= dims[int(ci)]
+    return float(2 * res_elems * k)
+
+
+def analyze_text(text: str, collect=None) -> HloCost:
+    """collect: optional list — filled with (bytes, comp, op, opcode, count)
+    tuples for debugging the byte model."""
+    comps = parse_module(text)
+    entry = comps.pop("__entry_name__", None)  # type: ignore
+    comps.pop("__entry__", None)
+
+    # per-computation shape tables
+    sizes: Dict[str, Dict[str, tuple]] = {}
+    for cname, ops in comps.items():
+        tbl = {}
+        for op in ops:
+            e, b = _shape_elems_bytes(op.type_str)
+            tbl[op.name] = (e, b, op.type_str)
+        sizes[cname] = tbl
+
+    # ---- slice-aware byte accounting ------------------------------------
+    # XLA counts bytes actually touched: a dynamic-slice reads its result
+    # size, not its full operand; an in-place dynamic-update-slice writes
+    # the update size.  Mirror that per op and across fusion boundaries
+    # (a fusion operand consumed only by slicing ops inside the fusion
+    # contributes the sliced bytes).
+
+    def _fusion_param_bytes(fname: str) -> Optional[dict]:
+        """param index -> bytes read (None entry = full size)."""
+        ops = comps.get(fname)
+        if ops is None:
+            return None
+        tbl = sizes[fname]
+        params = [op for op in ops if op.opcode == "parameter"]
+        consumers: dict = {p.name: [] for p in params}
+        for op in ops:
+            for o in op.operands:
+                if o in consumers:
+                    consumers[o].append(op)
+        out = {}
+        for i, p in enumerate(params):
+            uses = consumers[p.name]
+            if uses and all(u.opcode in ("dynamic-slice", "gather")
+                            and u.operands and u.operands[0] == p.name
+                            for u in uses):
+                # touched bytes ~ the sliced/gathered result sizes
+                out[i] = sum(_shape_elems_bytes(u.type_str)[1]
+                             for u in uses)
+            elif uses and all(
+                    u.opcode in ("dynamic-update-slice", "scatter",
+                                 "scatter-add")
+                    and u.operands and u.operands[0] == p.name
+                    for u in uses):
+                out[i] = 0          # in-place updated buffer: write counted
+                #                     via the root below
+            else:
+                out[i] = None
+        return out
+
+    def _root_write_bytes(fname: str) -> Optional[float]:
+        """bytes written by a fusion whose root is (a tuple of) DUS."""
+        ops = comps.get(fname)
+        if not ops:
+            return None
+        tbl = sizes[fname]
+        root = ops[-1]
+        roots = [root]
+        if root.opcode == "tuple":
+            byname = {o.name: o for o in ops}
+            roots = [byname[o] for o in root.operands if o in byname]
+        total = 0.0
+        any_dus = False
+        for r in roots:
+            if r.opcode == "dynamic-update-slice" and len(r.operands) >= 2:
+                upd = tbl.get(r.operands[1], (0, 0, ""))[1]
+                total += 2 * upd          # read-modify-write of the window
+                any_dus = True
+            elif r.opcode in ("scatter", "scatter-add") \
+                    and len(r.operands) >= 3:
+                upd = tbl.get(r.operands[2], (0, 0, ""))[1]
+                idx = tbl.get(r.operands[1], (0, 0, ""))[1]
+                total += 2 * upd + idx
+                any_dus = True
+            else:
+                total += _shape_elems_bytes(r.type_str)[1]
+        return total if any_dus else None
+
+    def _op_traffic(op: Op, tbl: dict) -> float:
+        oc = op.opcode
+        rb = _shape_elems_bytes(op.type_str)[1]
+        operands = op.operands
+        if oc in ("dynamic-slice", "gather"):
+            idx = (tbl.get(operands[1], (0, 0, ""))[1]
+                   if oc == "gather" and len(operands) > 1 else 0)
+            return 2.0 * rb + idx
+        if oc in ("dynamic-update-slice", "scatter", "scatter-add"):
+            ui = 1 if oc == "dynamic-update-slice" else 2
+            upd = tbl.get(operands[ui], (0, 0, ""))[1] \
+                if len(operands) > ui else rb
+            return 2.0 * upd
+        if oc == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", op.args_str)
+            fname = fm.group(1) if fm else None
+            pb = _fusion_param_bytes(fname) if fname else None
+            wb = _root_write_bytes(fname) if fname else None
+            total = wb if wb is not None else rb
+            for i, o in enumerate(operands):
+                full = tbl.get(o, (0, 0, ""))[1]
+                if pb is not None and i in pb and pb[i] is not None:
+                    total += min(pb[i], full)
+                else:
+                    total += full
+            return total
+        return rb + sum(tbl.get(o, (0, 0, ""))[1] for o in operands)
+
+    cost = HloCost()
+    visited_stack: set = set()
+
+    def comp_cost(cname: str, count: float, traverse_bytes: bool):
+        if cname not in comps or count <= 0:
+            return
+        key = (cname, traverse_bytes)
+        if key in visited_stack:
+            return
+        visited_stack.add(key)
+        tbl = sizes[cname]
+        for op in comps[cname]:
+            oc = op.opcode
+            if oc in ("dot", "convolution"):
+                cost.flops += count * _dot_flops(op, tbl)
+            if oc == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", op.args_str)
+                if fm:
+                    comp_cost(fm.group(1), count, traverse_bytes=False)
+            if oc == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.args_str)
+                bm = re.search(r"body=%?([\w.\-]+)", op.args_str)
+                tm = _TRIP_RE.search(op.args_str)
+                trip = int(tm.group(1)) if tm else (
+                    _find_trip_count(comps, cm.group(1)) if cm else None)
+                cost.n_while += 1
+                if trip is None:
+                    trip = 1
+                    cost.dynamic_loops.append(f"{cname}/{op.name}")
+                if bm:
+                    comp_cost(bm.group(1), count * trip, traverse_bytes)
+                if cm:
+                    comp_cost(cm.group(1), count * trip, traverse_bytes)
+                continue
+            if oc in ("call", "conditional", "custom-call"):
+                for cm2 in re.finditer(
+                        r"(?:to_apply|calls|true_computation|"
+                        r"false_computation)=%?([\w.\-]+)", op.args_str):
+                    comp_cost(cm2.group(1), count, traverse_bytes)
+                for cm3 in re.finditer(
+                        r"branch_computations=\{([^}]*)\}", op.args_str):
+                    for b in re.findall(r"%?([\w.\-]+)", cm3.group(1)):
+                        comp_cost(b, count, traverse_bytes)
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                ob = sum(tbl.get(o, (0, 0, ""))[1] for o in op.operands)
+                cost.coll_bytes += count * ob
+                cost.coll_breakdown[base] = (
+                    cost.coll_breakdown.get(base, 0.0) + count * ob)
+            if traverse_bytes and oc not in _SKIP_BYTES \
+                    and not oc.endswith("-done"):
+                t = count * _op_traffic(op, tbl)
+                cost.hbm_bytes += t
+                if collect is not None:
+                    collect.append((t, cname, op.name, oc, count))
+        visited_stack.discard(key)
+
+    if entry:
+        comp_cost(entry, 1.0, True)
+    return cost

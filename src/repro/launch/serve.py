@@ -1,0 +1,93 @@
+"""Serving driver for the FreshDiskANN system (the paper's workload):
+bootstraps an index, then runs a concurrent stream of inserts / deletes /
+searches with periodic StreamingMerge, reporting recall + latencies.
+
+    PYTHONPATH=src python -m repro.launch.serve --points 4096 --dim 32 \
+        --updates 2000 --searches 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core.config import IndexConfig, PQConfig, SystemConfig
+from ..core.index import brute_force, recall_at_k
+from ..core.system import bootstrap_system
+from ..data.pipelines import vector_stream
+
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--points", type=int, default=4096)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--updates", type=int, default=2000)
+    ap.add_argument("--searches", type=int, default=20)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--wal-dir", default=None)
+    args = ap.parse_args()
+
+    stream = vector_stream(args.points, args.dim, seed=3)
+    base = next(stream)
+    cfg = SystemConfig(
+        index=IndexConfig(capacity=args.points * 4, dim=args.dim, R=24,
+                          L_build=32, L_search=48, alpha=1.2),
+        pq=PQConfig(dim=args.dim, m=8, ksub=64, kmeans_iters=6),
+        ro_snapshot_points=args.points // 4,
+        merge_threshold=args.points // 2,
+        temp_capacity=args.points, insert_batch=64, wal_dir=args.wal_dir)
+    t0 = time.perf_counter()
+    sys_ = bootstrap_system(base, np.arange(args.points), cfg)
+    print(f"[serve] bootstrap {args.points} pts in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    upd = vector_stream(64, args.dim, seed=11)
+    q_stream = vector_stream(32, args.dim, seed=13)
+    next_id = args.points
+    live = dict(enumerate(np.asarray(base)))
+    ins_lat, del_lat, search_recalls = [], [], []
+    rng = np.random.default_rng(0)
+
+    for i in range(args.updates // 64):
+        batch = next(upd)
+        for v in batch:
+            t = time.perf_counter()
+            sys_.insert(next_id, v)
+            ins_lat.append(time.perf_counter() - t)
+            live[next_id] = v
+            next_id += 1
+        # delete an equal number of random existing points
+        victims = rng.choice(sorted(live), size=min(64, len(live) - 64),
+                             replace=False)
+        for ext in victims:
+            t = time.perf_counter()
+            sys_.delete(int(ext))
+            del_lat.append(time.perf_counter() - t)
+            live.pop(int(ext))
+        if (i + 1) % 4 == 0:
+            q = next(q_stream)
+            ids, d = sys_.search(q, k=args.k)
+            keys = np.asarray(sorted(live))
+            mat = np.stack([live[k] for k in keys])
+            gt = brute_force(jnp.asarray(mat), jnp.ones(len(keys), bool),
+                             jnp.asarray(q), args.k)
+            gt_ext = keys[np.asarray(gt)]
+            rec = recall_at_k(jnp.asarray(ids), jnp.asarray(gt_ext))
+            search_recalls.append(float(rec))
+            print(f"[serve] step {i + 1}: size={sys_.size} "
+                  f"recall@{args.k}={float(rec):.3f} "
+                  f"ins_p50={np.median(ins_lat) * 1e3:.2f}ms "
+                  f"merges={sys_.stats.merges}")
+
+    print(f"[serve] final: recall_mean="
+          f"{np.mean(search_recalls):.3f} inserts={sys_.stats.inserts} "
+          f"deletes={sys_.stats.deletes} merges={sys_.stats.merges} "
+          f"ins_p50={np.median(ins_lat) * 1e3:.2f}ms "
+          f"del_p50={np.median(del_lat) * 1e6:.1f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo for the assigned architectures.
+
+  transformer.py — dense + MoE decoder LMs (GQA, qk-norm, QKV bias, RoPE,
+                   RMSNorm, SwiGLU, sliding-window / local:global patterns,
+                   ring-buffer KV caches, chunked flash-style attention).
+  moe.py         — group-local top-k dispatch MoE (GShard-style capacity,
+                   sort-free position assignment, EP/TP shardable einsums).
+  gnn.py         — GraphSAGE: segment_sum message passing, fanout sampler.
+  recsys.py      — EmbeddingBag, FM / DeepFM / xDeepFM (CIN) / SASRec.
+"""

@@ -1,0 +1,165 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) in pure JAX.
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge-index
+(src, dst) list — JAX has no sparse SpMM beyond BCOO, so the scatter-add
+formulation IS the kernel (and shards over the edge axis under GSPMD).
+
+Two execution regimes, matching the assigned shapes:
+  * full-batch  — one segment-mean over all edges per layer
+    (full_graph_sm / ogb_products / molecule);
+  * sampled     — layer-wise fanout neighbor sampling from a CSR adjacency
+    (minibatch_lg), the "real neighbor sampler" the assignment requires;
+    sampled neighborhoods are dense [B, f1, f2] tensors, so the compute is
+    static-shaped and vmap/pjit friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str
+    d_feat: int
+    d_hidden: int
+    n_layers: int = 2
+    n_classes: int = 41
+    fanout: Tuple[int, ...] = (25, 10)
+    aggregator: str = "mean"
+    dtype: str = "float32"
+
+
+def init_sage_params(key: jax.Array, cfg: SageConfig):
+    dims = [cfg.d_feat] + [cfg.d_hidden] * cfg.n_layers
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(keys[i])
+        s = dims[i] ** -0.5
+        layers.append({
+            "w_self": jax.random.normal(k1, (dims[i], dims[i + 1])) * s,
+            "w_nbr": jax.random.normal(k2, (dims[i], dims[i + 1])) * s,
+            "b": jnp.zeros((dims[i + 1],)),
+        })
+    head = jax.random.normal(keys[-1], (cfg.d_hidden, cfg.n_classes)) \
+        * cfg.d_hidden ** -0.5
+    return {"layers": layers, "head": head}
+
+
+def _sage_layer(lp, h_self: jax.Array, h_agg: jax.Array) -> jax.Array:
+    out = h_self @ lp["w_self"] + h_agg @ lp["w_nbr"] + lp["b"]
+    out = jax.nn.relu(out)
+    norm = jnp.linalg.norm(out, axis=-1, keepdims=True)
+    return out / jnp.maximum(norm, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Full-batch forward: segment-mean message passing over the edge list
+# ---------------------------------------------------------------------------
+
+def sage_forward_full(params, feats: jax.Array, src: jax.Array,
+                      dst: jax.Array, cfg: SageConfig) -> jax.Array:
+    """feats [N, F]; src/dst int32 [E] -> logits [N, n_classes]."""
+    N = feats.shape[0]
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                              num_segments=N)
+    h = feats.astype(jnp.float32)
+    for lp in params["layers"]:
+        msg = h[src]                                          # [E, d] gather
+        agg = jax.ops.segment_sum(msg, dst, num_segments=N)
+        if cfg.aggregator == "mean":
+            agg = agg / jnp.maximum(deg, 1.0)[:, None]
+        h = _sage_layer(lp, h, agg)
+    return h @ params["head"]
+
+
+def sage_loss_full(params, feats, src, dst, labels, mask, cfg: SageConfig):
+    logits = sage_forward_full(params, feats, src, dst, cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = jnp.where(mask, lse - gold, 0.0)
+    return ce.sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# Fanout neighbor sampler (CSR) + sampled forward
+# ---------------------------------------------------------------------------
+
+def sample_neighbors(key: jax.Array, offsets: jax.Array, nbrs: jax.Array,
+                     nodes: jax.Array, fanout: int) -> jax.Array:
+    """Uniform with-replacement fanout sampling.
+
+    offsets int32/int64 [N+1], nbrs int32 [E], nodes int32 [...]
+    -> int32 [..., fanout]; isolated nodes sample themselves.
+    """
+    deg = (offsets[nodes + 1] - offsets[nodes]).astype(jnp.int32)
+    r = jax.random.randint(key, nodes.shape + (fanout,), 0, 1 << 30)
+    idx = offsets[nodes][..., None] + (
+        r % jnp.maximum(deg, 1)[..., None]).astype(offsets.dtype)
+    picked = nbrs[idx]
+    return jnp.where((deg > 0)[..., None], picked,
+                     nodes[..., None].astype(picked.dtype))
+
+
+def sage_forward_sampled(params, key, feats, offsets, nbrs, seeds,
+                         cfg: SageConfig) -> jax.Array:
+    """Layer-wise sampled forward: seeds [B] -> logits [B, n_classes]."""
+    L = cfg.n_layers
+    keys = jax.random.split(key, L)
+    # frontier[l]: [B, f1, ..., fl]
+    frontiers = [seeds]
+    for l in range(L):
+        nxt = sample_neighbors(keys[l], offsets, nbrs, frontiers[-1],
+                               cfg.fanout[l])
+        frontiers.append(nxt)
+    # hs[l]: features of frontier l, refined bottom-up
+    hs = [feats[f].astype(jnp.float32) for f in frontiers]
+    for l in range(L - 1, -1, -1):
+        lp = params["layers"][L - 1 - l]
+        # aggregate frontier d+1 into frontier d for every remaining level
+        new_hs = []
+        for d in range(l + 1):
+            agg = hs[d + 1].mean(axis=-2)
+            new_hs.append(_sage_layer(lp, hs[d], agg))
+        hs = new_hs
+    return hs[0] @ params["head"]
+
+
+def sage_loss_sampled(params, key, feats, offsets, nbrs, seeds, labels,
+                      cfg: SageConfig):
+    logits = sage_forward_sampled(params, key, feats, offsets, nbrs, seeds,
+                                  cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - gold).mean()
+
+
+# ---------------------------------------------------------------------------
+# Batched small graphs (molecule shape): vmap over padded per-graph edges
+# ---------------------------------------------------------------------------
+
+def sage_forward_batched(params, feats: jax.Array, src: jax.Array,
+                         dst: jax.Array, edge_mask: jax.Array,
+                         cfg: SageConfig) -> jax.Array:
+    """feats [G, n, F], src/dst [G, e], edge_mask [G, e] -> graph logits
+    [G, n_classes] (mean-pooled node embeddings -> head)."""
+
+    def one(f, s, d, m):
+        n = f.shape[0]
+        sm = jnp.where(m, s, 0)
+        dm = jnp.where(m, d, n)          # masked edges scatter off the end
+        deg = jax.ops.segment_sum(m.astype(jnp.float32), dm,
+                                  num_segments=n + 1)[:n]
+        h = f.astype(jnp.float32)
+        for lp in params["layers"]:
+            msg = jnp.where(m[:, None], h[sm], 0.0)
+            agg = jax.ops.segment_sum(msg, dm, num_segments=n + 1)[:n]
+            agg = agg / jnp.maximum(deg, 1.0)[:, None]
+            h = _sage_layer(lp, h, agg)
+        return h.mean(axis=0) @ params["head"]
+
+    return jax.vmap(one)(feats, src, dst, edge_mask)

@@ -1,0 +1,353 @@
+"""Shared transformer building blocks (pure functions over param pytrees).
+
+Everything is written against stacked-layer parameter trees so the decoder
+can ``lax.scan`` over layers; all shapes are static; dtypes follow the
+config's activation dtype with f32 normalization/softmax accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, dh]; positions: broadcastable [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq   # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dtype))
+
+
+def _softmax_f32(scores: jax.Array) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def _band_geometry(S: int, window: int, q_chunk: int, kv_chunk: int):
+    if window and window < S:
+        # the band must cover [q_start - window + 1, q_start + q_chunk):
+        # width q_chunk + window - 1, plus kv_chunk alignment slack
+        band_blocks = min((window + q_chunk) // kv_chunk + 2, S // kv_chunk)
+    else:
+        band_blocks = S // kv_chunk
+    return band_blocks, band_blocks * kv_chunk
+
+
+def _band_start(qi, S, band, q_chunk, kv_chunk):
+    band_end = (qi + 1) * q_chunk
+    start = jnp.maximum(band_end - band, 0)
+    start = (start // kv_chunk) * kv_chunk
+    return jnp.minimum(start, S - band)
+
+
+def _block_mask(q_pos, k_pos, window):
+    mask = k_pos[None, :] <= q_pos[:, None]                  # causal
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+def _flash_fwd_impl(q5, k, v, window, q_chunk, kv_chunk,
+                    p_dtype=jnp.float32):
+    """q5 [B, S, KV, G, dh]; returns (out5 [B, S, KV, G, dh],
+    lse [B, n_q, qc, KV, G] f32).
+
+    Query chunks are processed by ``vmap`` (not scan) so the chunk axis can
+    be sharded over the 'model' mesh axis — sequence parallelism: every
+    chip owns S/|model| query rows while k/v are gathered per layer.
+    """
+    from ..distributed.ctx import shard_act
+
+    B, S, KV, G, dh = q5.shape
+    scale = dh ** -0.5
+    n_q = S // q_chunk
+    band_blocks, band = _band_geometry(S, window, q_chunk, kv_chunk)
+    qg = q5.reshape(B, n_q, q_chunk, KV, G, dh)
+    qg = shard_act(qg, "batch", "model", None, None, None, None)
+    k = shard_act(k, "batch", None, None, None)
+    v = shard_act(v, "batch", None, None, None)
+
+    def one_q_chunk(qi, qc_):
+        # qc_: [B, qc, KV, G, dh]
+        start = _band_start(qi, S, band, q_chunk, kv_chunk)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kb = jnp.moveaxis(kb.reshape(B, band_blocks, kv_chunk, KV, dh), 1, 0)
+        vb = jnp.moveaxis(vb.reshape(B, band_blocks, kv_chunk, KV, dh), 1, 0)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def one_kv_block(carry, binp):
+            m, l, acc = carry
+            kj, vj, blk = binp
+            k_pos = start + blk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc_, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, window)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked blocks: exp(-inf - -inf) would be NaN
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(s),
+                          jnp.exp(s - m_safe[..., None]), 0.0
+                          ).astype(p_dtype)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.astype(jnp.float32).sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+            jnp.zeros((B, KV, G, q_chunk, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            one_kv_block, init, (kb, vb, jnp.arange(band_blocks)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf)
+        # out [B, KV, G, qc, dh] -> [B, qc, KV, G, dh]; lse -> [B, qc, KV, G]
+        return jnp.moveaxis(out, 3, 1), jnp.moveaxis(lse, 3, 1)
+
+    outs, lses = jax.vmap(one_q_chunk, in_axes=(0, 1), out_axes=(1, 1))(
+        jnp.arange(n_q), qg)
+    out5 = outs.reshape(B, S, KV, G, dh)
+    return out5, lses
+
+
+def _flash_bwd_impl(window, q_chunk, kv_chunk, p_dtype, res,
+                    dout5):
+    """FlashAttention-2 two-pass backward: pass 1 vmaps query chunks
+    (computes dq), pass 2 vmaps kv blocks (computes dk, dv).  Both vmapped
+    axes are shardable; no O(S) accumulator is carried through a scan and
+    no stacked score tensors are saved."""
+    from ..distributed.ctx import shard_act
+
+    q5, k, v, out5, lse = res        # lse [B, n_q, qc, KV, G]
+    B, S, KV, G, dh = q5.shape
+    scale = dh ** -0.5
+    n_q = S // q_chunk
+    band_blocks, band = _band_geometry(S, window, q_chunk, kv_chunk)
+    dout5 = dout5.astype(jnp.float32)
+    delta = jnp.sum(dout5 * out5.astype(jnp.float32), axis=-1)  # [B,S,KV,G]
+
+    qg = q5.reshape(B, n_q, q_chunk, KV, G, dh)
+    qg = shard_act(qg, "batch", "model", None, None, None, None)
+    dog = dout5.reshape(B, n_q, q_chunk, KV, G, dh)
+    dog = shard_act(dog, "batch", "model", None, None, None, None)
+    deltag = delta.reshape(B, n_q, q_chunk, KV, G)
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+    k = shard_act(k, "batch", None, None, None)
+    v = shard_act(v, "batch", None, None, None)
+
+    # ---- pass 1: dq, vmapped over query chunks --------------------------
+    def dq_chunk(qi, qc_, doc, dlc, lsec):
+        start = _band_start(qi, S, band, q_chunk, kv_chunk)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kb = jnp.moveaxis(kb.reshape(B, band_blocks, kv_chunk, KV, dh), 1, 0)
+        vb = jnp.moveaxis(vb.reshape(B, band_blocks, kv_chunk, KV, dh), 1, 0)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        lse_q = jnp.moveaxis(lsec, 1, -1)            # [B, KV, G, qc]
+        dl_q = jnp.moveaxis(dlc, 1, -1)
+
+        def one_kv_block(dq_c, binp):
+            kj, vj, blk = binp
+            k_pos = start + blk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc_, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, window)[None, None, None]
+            p = jnp.where(mask, jnp.exp(s - lse_q[..., None]), 0.0)
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", doc.astype(p_dtype),
+                            vj.astype(p_dtype),
+                            preferred_element_type=jnp.float32)
+            ds = (p * (dp - dl_q[..., None]) * scale).astype(p_dtype)
+            dq_c = dq_c + jnp.einsum("bkgqc,bckd->bqkgd", ds,
+                                     kj.astype(p_dtype),
+                                     preferred_element_type=jnp.float32)
+            return dq_c, None
+
+        dq0 = jnp.zeros((B, q_chunk, KV, G, dh), jnp.float32)
+        dq_c, _ = jax.lax.scan(one_kv_block, dq0,
+                               (kb, vb, jnp.arange(band_blocks)))
+        return dq_c
+
+    dqs = jax.vmap(dq_chunk, in_axes=(0, 1, 1, 1, 1), out_axes=1)(
+        jnp.arange(n_q), qg, dog, deltag, lse_safe)
+    dq = dqs.reshape(B, S, KV, G, dh)
+
+    # ---- pass 2: dk/dv, vmapped over kv blocks --------------------------
+    # q/dout/delta/lse are gathered over 'model' first (one explicit
+    # all-gather per layer) so the per-kv-block dynamic slices are local;
+    # without this, SPMD falls into involuntary full rematerialization.
+    n_kv = S // kv_chunk
+    if window and window < S:
+        qband_blocks = min((window + kv_chunk) // q_chunk + 2, n_q)
+    else:
+        qband_blocks = n_q
+    qband = qband_blocks * q_chunk
+    q_flat = shard_act(q5.astype(p_dtype), "batch", None, None, None,
+                       None)
+    do_flat = shard_act(dout5.astype(p_dtype), "batch", None, None, None,
+                        None)
+    dl_flat = shard_act(delta, "batch", None, None, None)
+    ls_flat = shard_act(lse_safe.reshape(B, S, KV, G),
+                        "batch", None, None, None)
+    kg = shard_act(k.reshape(B, n_kv, kv_chunk, KV, dh),
+                   "batch", "model", None, None, None)
+    vg = shard_act(v.reshape(B, n_kv, kv_chunk, KV, dh),
+                   "batch", "model", None, None, None)
+
+    def dkv_block(ki, kj, vj):
+        k_start = ki * kv_chunk
+        # query rows attending this block: [k_start, k_start + kvc + window)
+        qs = jnp.minimum((k_start // q_chunk) * q_chunk, S - qband)
+        qb = jax.lax.dynamic_slice_in_dim(q_flat, qs, qband, axis=1)
+        dob = jax.lax.dynamic_slice_in_dim(do_flat, qs, qband, axis=1)
+        dlb = jax.lax.dynamic_slice_in_dim(dl_flat, qs, qband, axis=1)
+        lsb = jax.lax.dynamic_slice_in_dim(ls_flat, qs, qband, axis=1)
+        qb = jnp.moveaxis(
+            qb.reshape(B, qband_blocks, q_chunk, KV, G, dh), 1, 0)
+        dob = jnp.moveaxis(
+            dob.reshape(B, qband_blocks, q_chunk, KV, G, dh), 1, 0)
+        dlb = jnp.moveaxis(
+            dlb.reshape(B, qband_blocks, q_chunk, KV, G), 1, 0)
+        lsb = jnp.moveaxis(
+            lsb.reshape(B, qband_blocks, q_chunk, KV, G), 1, 0)
+        k_pos = k_start + jnp.arange(kv_chunk)
+
+        def one_q_blk(carry, binp):
+            dk_b, dv_b = carry                      # [B, kvc, KV, dh] f32
+            qj, doj, dlj, lsj, blk = binp
+            q_pos = qs + blk * q_chunk + jnp.arange(q_chunk)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qj, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, window)[None, None, None]
+            lse_q = jnp.moveaxis(lsj, 1, -1)        # [B, KV, G, qc]
+            dl_q = jnp.moveaxis(dlj, 1, -1)
+            p = jnp.where(mask, jnp.exp(s - lse_q[..., None]), 0.0
+                          ).astype(p_dtype)
+            dv_b = dv_b + jnp.einsum("bkgqc,bqkgd->bckd", p,
+                                     doj.astype(p_dtype),
+                                     preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", doj.astype(p_dtype),
+                            vj.astype(p_dtype),
+                            preferred_element_type=jnp.float32)
+            ds = (p.astype(jnp.float32) * (dp - dl_q[..., None]) * scale
+                  ).astype(p_dtype)
+            dk_b = dk_b + jnp.einsum("bkgqc,bqkgd->bckd", ds,
+                                     qj.astype(p_dtype),
+                                     preferred_element_type=jnp.float32)
+            return (dk_b, dv_b), None
+
+        init = (jnp.zeros((B, kv_chunk, KV, dh), jnp.float32),
+                jnp.zeros((B, kv_chunk, KV, dh), jnp.float32))
+        (dk_b, dv_b), _ = jax.lax.scan(
+            one_q_blk, init,
+            (qb, dob, dlb, lsb, jnp.arange(qband_blocks)))
+        return dk_b, dv_b
+
+    dks, dvs = jax.vmap(dkv_block, in_axes=(0, 1, 1), out_axes=1)(
+        jnp.arange(n_kv), kg, vg)
+    dk = dks.reshape(B, S, KV, dh)
+    dv = dvs.reshape(B, S, KV, dh)
+    return dq.astype(q5.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q5, k, v, window, q_chunk, kv_chunk, p_dtype):
+    out5, _ = _flash_fwd_impl(q5, k, v, window, q_chunk, kv_chunk, p_dtype)
+    return out5.astype(q5.dtype)
+
+
+def _flash_fwd(q5, k, v, window, q_chunk, kv_chunk, p_dtype):
+    out5, lse = _flash_fwd_impl(q5, k, v, window, q_chunk, kv_chunk,
+                                p_dtype)
+    out5 = out5.astype(q5.dtype)
+    return out5, (q5, k, v, out5, lse)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd_impl)
+
+
+def chunked_attention(
+    q: jax.Array,          # [B, S, H, dh]  (RoPE already applied)
+    k: jax.Array,          # [B, S, KV, dh]
+    v: jax.Array,          # [B, S, KV, dh]
+    *,
+    window: int = 0,       # 0 = full causal; >0 = sliding window
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    p_dtype="float32",     # dtype score/probability blocks are stored in;
+    #                        bf16 halves the dominant attention HBM traffic
+) -> jax.Array:
+    """Flash attention in pure JAX with a custom VJP.
+
+    Forward: scan over query chunks, inner scan over key blocks with running
+    (max, denom) — the [S, S] score matrix is never materialized.  Backward:
+    FlashAttention-2 style blockwise recomputation from the saved logsumexp,
+    so reverse-mode does NOT stack per-block score residuals (the default
+    scan VJP would save O(S^2) f32 per layer).
+
+    For windowed layers only the diagonal band of kv blocks is visited
+    (``window // kv_chunk + 2`` blocks per query chunk via dynamic_slice).
+    """
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV                                  # GQA group size
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    assert S % q_chunk == 0 and S % kv_chunk == 0
+    q5 = q.reshape(B, S, KV, G, dh)
+    out5 = _flash(q5, k, v, window, q_chunk, kv_chunk,
+                  jnp.dtype(p_dtype))
+    return out5.reshape(B, S, H, dh)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, dh] (RoPE applied)
+    k_cache: jax.Array,      # [B, W, KV, dh] (RoPE applied at write)
+    v_cache: jax.Array,      # [B, W, KV, dh]
+    cache_pos: jax.Array,    # [W] absolute position per slot (-1 = empty)
+    pos: jax.Array,          # scalar — position of the query token
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache."""
+    B, W, KV, dh = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    ok = (cache_pos >= 0) & (cache_pos <= pos)
+    if window:
+        ok &= cache_pos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    p = _softmax_f32(s)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN with sharding-aligned 2-D dispatch groups.
+
+GShard/Switch-style capacity dispatch adapted for GSPMD:
+
+  * dispatch groups are **(batch, seq-chunk) tiles**: x [B, S, D] is viewed
+    as [B, n_s, Sg, D] with B on the ('pod','data') axes and n_s on
+    'model' — every group lives wholly on one chip, so routing, sort,
+    position-assignment, dispatch-gather and combine-gather induce ZERO
+    data movement.  (Flattening tokens into one axis cannot be
+    block-sharded over two mesh axes — GSPMD falls into involuntary full
+    rematerialization; measured as an 8 GiB/layer copy on mixtral.)
+  * per (group, expert) capacity C = ceil(Sg * top_k * cf / E); overflow
+    tokens drop (combine weight 0) — rare at cf >= 1.25;
+  * position-within-expert via group-local sort + searchsorted (no serial
+    loop);
+  * the combine is a **gather** from the expert output buffer (the inverse
+    permutation of the dispatch sort) — a scatter-add combine makes GSPMD
+    all-reduce partial results (measured 16 GiB/layer);
+  * expert compute is a batched einsum [B, n_s, E, C, D] x [E, D, F] on
+    the MXU with ZeRO-3-gathered weights (EP/TP variants layer on top).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import gathered, shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                       # per-expert FFN width
+    capacity_factor: float = 1.25
+    n_groups: int = 1               # seq-chunks per sequence (align w/model)
+    router_dtype: Any = jnp.float32
+
+
+def init_moe_params(key: jax.Array, cfg: MoEConfig, dtype=jnp.bfloat16):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in, s_ff = D ** -0.5, F ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (D, E), jnp.float32) * s_in),
+        "w_gate": (jax.random.normal(kg, (E, D, F)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, D, F)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, F, D)) * s_ff).astype(dtype),
+    }
+
+
+def capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.n_experts) + 1
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    S must be divisible by cfg.n_groups (the launch configs use n_groups =
+    the 'model' mesh axis size so group tiles coincide with shards).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n_s = min(cfg.n_groups, S)
+    while S % n_s:
+        n_s -= 1
+    Sg = S // n_s
+    C = capacity(cfg, Sg)
+    L = Sg * K
+
+    x4 = shard_act(x.reshape(B, n_s, Sg, D), "batch", "model", None, None)
+    router = gathered(params["router"]).astype(cfg.router_dtype)
+    logits = jnp.einsum("bgsd,de->bgse", x4.astype(cfg.router_dtype),
+                        router)                               # [B,n_s,Sg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                    # [B,n_s,Sg,K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch Transformer eq. 4) --------
+    me = probs.mean(axis=(0, 1, 2))                           # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (B * S * K))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- group-local position-in-expert -----------------------------------
+    ge = top_e.reshape(B, n_s, L)
+    gt = jnp.broadcast_to(
+        jnp.arange(Sg)[:, None], (Sg, K)).reshape(1, 1, L)
+    gt = jnp.broadcast_to(gt, (B, n_s, L))                    # token-in-group
+    gw = top_w.reshape(B, n_s, L)
+
+    order = jnp.argsort(ge, axis=-1, stable=True)             # group-local
+    se = jnp.take_along_axis(ge, order, axis=-1)
+    st = jnp.take_along_axis(gt, order, axis=-1)
+    first = jax.vmap(jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left")))(se)
+    pos = jnp.arange(L, dtype=jnp.int32)[None, None] - first.astype(
+        jnp.int32)
+    keep = pos < C                                            # overflow drop
+
+    # scatter token slots into the [B, n_s, E, C] dispatch index buffer
+    slot_e = jnp.where(keep, se, E)
+    slot_c = jnp.where(keep, pos, 0)
+    bi = jnp.broadcast_to(jnp.arange(B)[:, None, None], slot_e.shape)
+    gi = jnp.broadcast_to(jnp.arange(n_s)[None, :, None], slot_e.shape)
+    disp_idx = jnp.full((B, n_s, E + 1, C), -1, jnp.int32)
+    disp_idx = disp_idx.at[bi, gi, slot_e, slot_c].set(st, mode="drop")
+    disp_idx = disp_idx[:, :, :E]                             # [B,n_s,E,C]
+
+    # ---- dispatch gather -> expert compute --------------------------------
+    safe = jnp.maximum(disp_idx, 0).reshape(B, n_s, E * C)
+    xb = jnp.take_along_axis(x4, safe[..., None], axis=2)
+    xb = xb.reshape(B, n_s, E, C, D)
+    xb = jnp.where((disp_idx >= 0)[..., None], xb, 0).astype(x.dtype)
+    xb = shard_act(xb, "batch", "model", None, None, None)
+
+    w_gate = gathered(params["w_gate"]).astype(x.dtype)
+    w_up = gathered(params["w_up"]).astype(x.dtype)
+    w_down = gathered(params["w_down"]).astype(x.dtype)
+    g = jnp.einsum("bgecd,edf->bgecf", xb, w_gate)
+    u = jnp.einsum("bgecd,edf->bgecf", xb, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("bgecf,efd->bgecd", h, w_down)
+    yb = shard_act(yb, "batch", "model", None, None, None)
+
+    # ---- combine: gather back (NO scatter) --------------------------------
+    inv = jnp.argsort(order, axis=-1)
+    tok_e = jnp.take_along_axis(slot_e, inv, axis=-1)
+    tok_c = jnp.take_along_axis(slot_c, inv, axis=-1)
+    tok_keep = jnp.take_along_axis(keep, inv, axis=-1)
+    flat = jnp.where(tok_keep, tok_e * C + tok_c, 0)          # [B,n_s,L]
+    yb_flat = yb.reshape(B, n_s, E * C, D)
+    picked = jnp.take_along_axis(yb_flat, flat[..., None], axis=2)
+    picked = shard_act(picked, "batch", "model", None, None)
+    # combine math stays in the activation dtype: an f32 combine makes the
+    # cotangent (and thus every expert-weight gradient buffer) f32 — 2x the
+    # transient HBM for no accuracy gain (top_k <= 8 terms per token).
+    picked = jnp.where(tok_keep[..., None], picked, 0).astype(x.dtype)
+    w_tok = jnp.where(tok_keep, gw, 0.0).astype(x.dtype)
+    out = (picked * w_tok[..., None]).reshape(B, n_s, Sg, K, D).sum(axis=3)
+    out = shard_act(out, "batch", "model", None, None)
+    return out.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,340 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+Key design points:
+  * **Pattern groups** — a config declares a per-group layer pattern, e.g.
+    ``("l","l","l","l","l","g")`` for gemma3's 5:1 local:global.  The decoder
+    ``lax.scan``s over *groups* (stacked params) and unrolls the (short)
+    pattern inside the scan body, so each pattern position has a *static*
+    window size: local layers get ring-buffer KV caches of size ``window``,
+    global layers full-length caches.  No dynamic branching on layer type.
+  * **Chunked flash-style attention** (layers.chunked_attention) — the
+    [S, S] score matrix is never materialized; 32k prefill fits in VMEM-sized
+    tiles.
+  * **GQA / qk-norm / QKV-bias / RoPE / RMSNorm / SwiGLU** per config.
+  * **MoE** — when ``cfg.moe`` is set, the FFN is the group-local top-k
+    dispatch MoE from ``moe.py`` (EP-shardable).
+  * Every entry point is pure: ``(params, batch) -> out`` for jit/pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import gathered, shard_act
+from .layers import (chunked_attention, decode_attention, rms_norm, rope,
+                     swiglu)
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    window: int = 0                       # sliding window for 'l' layers
+    pattern: Tuple[str, ...] = ("g",)     # per-group layer kinds: 'l'/'g'
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_groups: int = 16                  # dispatch groups (>= data shards)
+    moe_cf: float = 1.25                  # expert capacity factor
+    dtype: str = "bfloat16"
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    attn_p_dtype: str = "float32"   # flash-attn score-block storage dtype
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def moe_cfg(self, seq_len: int) -> MoEConfig:
+        """moe_groups = seq-chunks per sequence; aligned to the 'model'
+        mesh axis so dispatch-group tiles coincide with shards."""
+        g = min(self.moe_groups, seq_len)
+        while seq_len % g:
+            g -= 1
+        return MoEConfig(
+            n_experts=self.moe_experts, top_k=self.moe_top_k,
+            d_model=self.d_model, d_ff=self.moe_d_ff, n_groups=g,
+            capacity_factor=self.moe_cf)
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        D, H, KV, dh, F = (self.d_model, self.n_heads, self.n_kv_heads,
+                           self.d_head, self.d_ff)
+        attn = D * H * dh + 2 * D * KV * dh + H * dh * D
+        if self.is_moe:
+            ffn = self.moe_experts * 3 * D * self.moe_d_ff + D * self.moe_experts
+        else:
+            ffn = 3 * D * F
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + 2 * self.vocab * D + D
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of the experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        D = self.d_model
+        attn = D * self.n_heads * self.d_head * 2 \
+            + 2 * D * self.n_kv_heads * self.d_head
+        ffn = self.moe_top_k * 3 * D * self.moe_d_ff + D * self.moe_experts
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + 2 * self.vocab * D + D
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (stacked [n_groups, ...] per pattern position)
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: TransformerConfig):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.act_dtype
+    ks = jax.random.split(key, 10)
+    s = D ** -0.5
+    p = {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "ln2": jnp.zeros((D,), jnp.float32),
+        "wq": (jax.random.normal(ks[0], (D, H, dh)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, KV, dh)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, KV, dh)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H, dh, D)) * (H * dh) ** -0.5
+               ).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), dt)
+        p["bk"] = jnp.zeros((KV, dh), dt)
+        p["bv"] = jnp.zeros((KV, dh), dt)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((dh,), jnp.float32)
+        p["knorm"] = jnp.zeros((dh,), jnp.float32)
+    if cfg.is_moe:
+        p["moe"] = init_moe_params(ks[4], cfg.moe_cfg(cfg.moe_groups), dt)
+    else:
+        F = cfg.d_ff
+        p["w_gate"] = (jax.random.normal(ks[5], (D, F)) * s).astype(dt)
+        p["w_up"] = (jax.random.normal(ks[6], (D, F)) * s).astype(dt)
+        p["w_down"] = (jax.random.normal(ks[7], (F, D)) * F ** -0.5
+                       ).astype(dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig):
+    keys = jax.random.split(key, cfg.n_groups * len(cfg.pattern) + 2)
+    blocks = []
+    for pi in range(len(cfg.pattern)):
+        gks = keys[pi * cfg.n_groups:(pi + 1) * cfg.n_groups]
+        blocks.append(jax.vmap(lambda k: _init_block(k, cfg))(gks))
+    dt = cfg.act_dtype
+    return {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "lm_head": (jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab))
+                    * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def abstract_params(cfg: TransformerConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_train(bp, x, cfg: TransformerConfig, window: int,
+                     positions: jax.Array):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, gathered(bp["wq"]).astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, gathered(bp["wk"]).astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, gathered(bp["wv"]).astype(h.dtype))
+    if cfg.qkv_bias:
+        q, k, v = q + bp["bq"], k + bp["bk"], v + bp["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, bp["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, bp["knorm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, window=window,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                          p_dtype=cfg.attn_p_dtype)
+    return x + jnp.einsum("bshk,hkd->bsd", o,
+                          gathered(bp["wo"]).astype(o.dtype)), (k, v)
+
+
+def _ffn(bp, x, cfg: TransformerConfig):
+    B, S, D = x.shape
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_ffn(bp["moe"], h, cfg.moe_cfg(S))
+        return x + y, aux
+    y = swiglu(h, gathered(bp["w_gate"]), gathered(bp["w_up"]),
+               gathered(bp["w_down"]))
+    return x + y, jnp.float32(0.0)
+
+
+def forward(params, tokens: jax.Array, cfg: TransformerConfig,
+            *, collect_cache: bool = False, last_only: bool = False):
+    """tokens [B, S] -> (logits [B, S, V] (or [B, 1, V] with last_only),
+    aux_loss, caches|None).
+
+    ``last_only`` computes the head only for the final position (prefill
+    serving — avoids materializing [B, S, V]).
+
+    caches (prefill): per pattern position, stacked over groups:
+      k/v [n_groups, B, W_p, KV, dh] ring-filled with the last W_p tokens,
+      pos [W_p] absolute positions.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.act_dtype)
+    x = shard_act(x, "batch", "model", None)     # sequence parallelism
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.float32(0.0)
+    caches = [] if collect_cache else None
+
+    for pi, kind in enumerate(cfg.pattern):
+        window = cfg.window if kind == "l" else 0
+
+        def group_body(x, bp, _pi=pi, _window=window):
+            x, (k, v) = _attention_train(bp, x, cfg, _window, positions)
+            x = shard_act(x, "batch", "model", None)
+            x, aux = _ffn(bp, x, cfg)
+            x = shard_act(x, "batch", "model", None)
+            if collect_cache:
+                W = min(_window or S, S)
+                kc = shard_act(k[:, S - W:], "batch", "model", None, None)
+                vc = shard_act(v[:, S - W:], "batch", "model", None, None)
+                return x, (aux, kc, vc)
+            return x, (aux, (), ())
+
+        body = jax.checkpoint(group_body)
+        x, (auxes, ks, vs) = jax.lax.scan(
+            lambda c, bp: body(c, bp), x, params["blocks"][pi])
+        aux_total = aux_total + auxes.sum()
+        if collect_cache:
+            W = min(window or S, S)
+            caches.append({
+                "k": ks, "v": vs,
+                "pos": jnp.arange(S - W, S, dtype=jnp.int32),
+            })
+
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # head stays V-sharded (no gather); x is resharded to batch-only so
+    # logits come out [B(batch), S, V(model)] with zero head collectives.
+    x = shard_act(x, "batch", None, None)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = shard_act(logits, "batch", None, "model")
+    return logits, aux_total, caches
+
+
+def lm_loss(params, tokens: jax.Array, targets: jax.Array,
+            cfg: TransformerConfig, aux_weight: float = 0.01):
+    logits, aux, _ = forward(params, tokens, cfg)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against KV caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Empty caches: full-length for 'g' positions, ring of `window` for 'l'."""
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+    dt = cfg.act_dtype
+    caches = []
+    for kind in cfg.pattern:
+        W = min(cfg.window, max_len) if kind == "l" else max_len
+        caches.append({
+            "k": jnp.zeros((cfg.n_groups, batch, W, KV, dh), dt),
+            "v": jnp.zeros((cfg.n_groups, batch, W, KV, dh), dt),
+            "pos": jnp.full((W,), -1, jnp.int32),
+        })
+    return caches
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_step(params, caches, tokens: jax.Array, pos: jax.Array,
+                cfg: TransformerConfig):
+    """One decode step.  tokens [B] int32, pos scalar int32 (position of the
+    new token).  Returns (logits [B, V], new caches)."""
+    B = tokens.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = params["embed"][tokens][:, None, :].astype(cfg.act_dtype)  # [B,1,D]
+    new_caches = []
+
+    for pi, kind in enumerate(cfg.pattern):
+        window = cfg.window if kind == "l" else 0
+        cache = caches[pi]
+        W = cache["k"].shape[2]
+        slot = pos % W
+        new_pos = cache["pos"].at[slot].set(pos)
+
+        def group_body(x, inp, _window=window, _W=W, _slot=slot,
+                       _new_pos=new_pos):
+            bp, kc, vc = inp
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h,
+                           gathered(bp["wq"]).astype(h.dtype))
+            k = jnp.einsum("bsd,dhk->bshk", h,
+                           gathered(bp["wk"]).astype(h.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h,
+                           gathered(bp["wv"]).astype(h.dtype))
+            if cfg.qkv_bias:
+                q, k, v = q + bp["bq"], k + bp["bk"], v + bp["bv"]
+            if cfg.qk_norm:
+                q = rms_norm(q, bp["qnorm"], cfg.norm_eps)
+                k = rms_norm(k, bp["knorm"], cfg.norm_eps)
+            pvec = jnp.broadcast_to(pos[None], (B, 1))
+            q = rope(q, pvec, cfg.rope_theta)
+            k = rope(k, pvec, cfg.rope_theta)
+            # write the new k/v at the ring slot
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, _slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, _slot, 0, 0))
+            o = decode_attention(q, kc, vc, _new_pos, pos, window=_window)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               gathered(bp["wo"]).astype(o.dtype))
+            x, _ = _ffn(bp, x, cfg)
+            return x, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            group_body, x, (params["blocks"][pi], cache["k"], cache["v"]))
+        new_caches.append({"k": ks, "v": vs, "pos": new_pos})
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = shard_act(logits, "batch", None, "model")
+    return logits[:, 0], new_caches

@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from .compress import int8_all_reduce, int8_compress, int8_decompress  # noqa: F401

@@ -1,0 +1,68 @@
+"""Compressed gradient all-reduce (distributed-optimization trick).
+
+Two schemes, both honest about what actually crosses the ICI links:
+
+  * ``bf16_all_reduce`` — cast f32 grads to bf16 before psum: exactly half
+    the collective bytes, hardware-native reduction.  The default trick.
+  * ``int8_all_gather_reduce`` — symmetric int8 quantization (stochastic
+    rounding, unbiased) + all_gather of the 1-byte codes + local sum.
+    4x fewer bytes per hop than f32; total bytes scale with the axis size,
+    so this wins for small reduction groups (e.g. the 2-pod 'pod' axis:
+    2x(n-1)/n... vs ring-all-reduce it's bytes x (n-1) vs 2(n-1)/n — use
+    only when n <= 8).
+
+Both run inside shard_map (they use named-axis collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    x = g / scale
+    # stochastic rounding keeps E[decompress(compress(g))] == g
+    noise = jax.random.uniform(key, g.shape) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def bf16_all_reduce(grads, axis_name: str = "data"):
+    """Mean-all-reduce in bf16: 2x fewer ICI bytes than f32."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g):
+        s = jax.lax.psum(g.astype(jnp.bfloat16), axis_name)
+        return (s.astype(jnp.float32) / n).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def int8_all_gather_reduce(grads, key: jax.Array, axis_name: str = "data"):
+    """Mean-all-reduce via int8 all_gather + local decode-sum.
+
+    Wire format per leaf: int8 codes (1 byte/elem/hop) + one f32 scale.
+    Unbiased (stochastic rounding); quantization noise ~ scale/sqrt(12).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    n = jax.lax.psum(1, axis_name)
+
+    out = []
+    for g, k in zip(leaves, keys):
+        q, s = int8_compress(g.astype(jnp.float32), k)
+        qs = jax.lax.all_gather(q, axis_name)          # [n, ...] int8
+        ss = jax.lax.all_gather(s, axis_name)          # [n]
+        dec = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * g.ndim)
+        out.append((dec.sum(axis=0) / n).astype(g.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# Back-compat alias used by configs: int8 path.
+int8_all_reduce = int8_all_gather_reduce

@@ -1,0 +1,2 @@
+from .steps import (make_lm_prefill_step, make_lm_decode_step,
+                    make_recsys_serve_step, make_retrieval_step)  # noqa: F401

@@ -1,0 +1,57 @@
+"""Serve-step factories (prefill / decode / recsys scoring / retrieval).
+
+Decode steps take and return KV caches so the launch layer can donate the
+cache buffers (in-place update on device, no copy per token).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import recsys as rec
+from ..models import transformer as tf
+
+
+def make_lm_prefill_step(cfg: tf.TransformerConfig) -> Callable:
+    def prefill(params, tokens):
+        logits, _, caches = tf.forward(params, tokens, cfg,
+                                       collect_cache=True, last_only=True)
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_lm_decode_step(cfg: tf.TransformerConfig) -> Callable:
+    def decode(params, caches, tokens, pos):
+        logits, new_caches = tf.decode_step(params, caches, tokens, pos, cfg)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_caches
+
+    return decode
+
+
+def make_recsys_serve_step(cfg: rec.RecsysConfig) -> Callable:
+    def serve(params, ids):
+        return jax.nn.sigmoid(rec.recsys_forward(params, ids, cfg))
+
+    return serve
+
+
+def make_retrieval_step(cfg: rec.RecsysConfig, k: int = 100) -> Callable:
+    """Exact candidate-scoring baseline for the retrieval_cand shape.
+
+    For FM-family models the query embedding is the summed field embedding
+    (the factorized part); items are rows of a candidate table.  The ANN
+    path swaps this for a FreshDiskANN search (examples/sasrec_retrieval.py).
+    """
+    def retrieve(params, user_ids, item_table):
+        if cfg.kind == "sasrec":
+            q = rec.sasrec_user_embedding(params, user_ids, cfg)
+        else:
+            emb = rec.field_lookup(params["V"], user_ids, cfg)
+            q = emb.sum(axis=-2)
+        return rec.retrieval_topk(q, item_table, k)
+
+    return retrieve

@@ -1,0 +1,1 @@
+from .steps import make_lm_train_step, make_train_step  # noqa: F401

@@ -1,0 +1,76 @@
+"""Fault-tolerant training loop.
+
+Composes: sharded train_step + deterministic data stream (resume = step
+counter) + AsyncCheckpointer + crash recovery (auto-restore latest
+checkpoint, elastic re-sharding against the current mesh).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..checkpoint.store import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+from ..distributed.sharding import batch_axes
+
+
+def run_training(
+    mesh: Mesh,
+    train_step: Callable,            # jitted (params, opt, batch) -> ...
+    params: Any,
+    opt_state: Any,
+    data_stream_fn: Callable[[int], Iterator[dict]],  # start_step -> iter
+    *,
+    n_steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 100,
+    param_shardings: Any = None,
+    opt_shardings: Any = None,
+    log_every: int = 10,
+    log_fn: Callable[[str], None] = print,
+) -> tuple[Any, Any, list]:
+    """Returns (params, opt_state, metrics_log)."""
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        shardings = None
+        if param_shardings is not None and opt_shardings is not None:
+            shardings = {"params": param_shardings, "opt": opt_shardings}
+        tree, start = restore_checkpoint(ckpt_dir, shardings=shardings)
+        params, opt_state = tree["params"], tree["opt"]
+        log_fn(f"[loop] restored checkpoint at step {start} "
+               f"onto {len(mesh.devices.flat)} devices")
+
+    ba = batch_axes(mesh)
+    batch_sharding = NamedSharding(mesh, P(ba))
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    stream = data_stream_fn(start)
+    log = []
+    t0 = time.perf_counter()
+    for step in range(start, n_steps):
+        host_batch = next(stream)
+        batch = {
+            k: jax.device_put(v, NamedSharding(
+                mesh, P(*( (ba,) + (None,) * (v.ndim - 1) ))))
+            for k, v in host_batch.items()
+        }
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if (step + 1) % log_every == 0 or step + 1 == n_steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = (time.perf_counter() - t0) / log_every
+            t0 = time.perf_counter()
+            log.append({"step": step + 1, **m, "sec_per_step": dt})
+            log_fn(f"[loop] step {step + 1} "
+                   + " ".join(f"{k}={v:.4f}" for k, v in m.items())
+                   + f" ({dt:.3f}s/step)")
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.save(n_steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    del batch_sharding
+    return params, opt_state, log

@@ -1,0 +1,74 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,m,ksub,q", [
+    (64, 8, 16, 1), (200, 8, 64, 5), (128, 16, 256, 3),
+    (1000, 32, 256, 2), (37, 4, 16, 9),
+])
+def test_adc_matches_ref(n, m, ksub, q):
+    codes = jnp.asarray(rng.integers(0, ksub, (n, m)).astype(np.uint8))
+    luts = jnp.asarray(
+        rng.standard_normal((q, m, ksub)).astype(np.float32)) ** 2
+    got = ops.adc_distances(codes, luts)
+    want = jax.vmap(lambda t: ref.adc_distances_ref(codes, t))(luts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("q,n,d", [
+    (1, 128, 32), (37, 190, 48), (128, 256, 128), (5, 1000, 17),
+    (64, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_l2_matches_ref(q, n, d, dtype):
+    qq = jnp.asarray(rng.standard_normal((q, d)).astype(dtype))
+    xx = jnp.asarray(rng.standard_normal((n, d)).astype(dtype))
+    got = ops.l2_distances(qq, xx)
+    want = ref.l2_distances_ref(qq, xx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("q,n,k", [
+    (1, 300, 10), (7, 300, 10), (8, 512, 1), (3, 1024, 64), (9, 77, 5),
+])
+def test_topk_matches_ref(q, n, k):
+    d = jnp.asarray(rng.standard_normal((q, n)).astype(np.float32))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    gd, gi = ops.block_topk(d, ids, k)
+    wd, wi = ref.block_topk_ref(d, ids, k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), atol=1e-6)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+def test_topk_with_inf_padding():
+    d = jnp.asarray([[1.0, jnp.inf, 0.5, jnp.inf, 2.0]])
+    ids = jnp.asarray([10, 11, 12, 13, 14], jnp.int32)
+    gd, gi = ops.block_topk(d, ids, 4)
+    assert list(np.asarray(gi[0])[:3]) == [12, 10, 14]
+    assert np.asarray(gi[0])[3] == -1   # inf -> id -1
+
+
+def test_adc_is_used_equivalently_in_core():
+    """core.pq.adc == kernel adc (the wiring contract)."""
+    from repro.core import pq as pqm
+    from repro.core.config import PQConfig
+    cfg = PQConfig(dim=32, m=8, ksub=32, kmeans_iters=3)
+    data = jnp.asarray(rng.standard_normal((256, 32)).astype(np.float32))
+    cb = pqm.train_pq(data, cfg)
+    codes = pqm.encode(cb, data, cfg)
+    qv = data[7]
+    table = pqm.lut(cb, qv)
+    want = pqm.adc(codes, table)
+    got = ops.adc_distances(codes, table[None])[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,144 @@
+"""The paper's core experimental claims, at CPU scale.
+
+Fig. 1 — naive delete policies degrade recall over delete/re-insert cycles.
+Fig. 2 — FreshVamana (alpha > 1 update rules) keeps recall stable.
+Fig. 3 / App. C — alpha = 1 is unstable, alpha = 1.2 is stable.
+Fig. 4 — StreamingMerge (PQ distances) recall stabilizes after a small dip.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import IndexConfig, PQConfig
+from repro.core.delete import (consolidate_deletes, consolidate_policy_a,
+                               consolidate_policy_b, delete)
+from repro.core.index import brute_force, build, insert, recall_at_k, search
+from repro.core.lti import build_lti, search_lti
+from repro.core.merge import streaming_merge
+
+from conftest import DIM, N
+
+CYCLES = 8
+FRAC = 0.25
+
+
+def _recall(state, cfg, queries, k=5):
+    ids, *_ = search(state, jnp.asarray(queries), cfg, k=k, L=cfg.L_search)
+    mask = state.active & ~state.deleted
+    gt = brute_force(state.vectors, mask, jnp.asarray(queries), k)
+    return float(recall_at_k(ids, gt))
+
+
+def _avg_degree(state):
+    from repro.core.graph import degree_stats
+    return float(degree_stats(state)["avg_degree"])
+
+
+def _cycle(state, cfg, rng, consolidate_fn, n_del):
+    """Delete n_del random live points, consolidate, re-insert the same."""
+    live = np.flatnonzero(np.asarray(state.active & ~state.deleted))
+    victims = rng.choice(live, n_del, replace=False).astype(np.int32)
+    vecs = np.asarray(state.vectors)[victims]
+    state = consolidate_fn(delete(state, jnp.asarray(victims)))
+    for lo in range(0, n_del, 64):
+        sl = victims[lo:lo + 64]
+        pad = 64 - len(sl)
+        slots = np.concatenate([sl, np.full(pad, -1)]).astype(np.int32)
+        vv = np.zeros((64, state.vectors.shape[1]), np.float32)
+        vv[:len(sl)] = vecs[lo:lo + 64]
+        state = insert(state, jnp.asarray(slots), jnp.asarray(vv), cfg)
+    return state
+
+
+def _run_cycles(points, queries, cfg, consolidate_fn, cycles=CYCLES):
+    rng = np.random.default_rng(7)
+    state = build(points, cfg, batch=128)
+    recalls = [_recall(state, cfg, queries)]
+    degrees = [_avg_degree(state)]
+    for _ in range(cycles):
+        state = _cycle(state, cfg, rng, consolidate_fn, int(N * FRAC))
+        recalls.append(_recall(state, cfg, queries))
+        degrees.append(_avg_degree(state))
+    return recalls, degrees
+
+
+@pytest.fixture(scope="module")
+def stability(points, queries, index_cfg):
+    """One shared run per policy (expensive)."""
+    fresh = _run_cycles(points, queries, index_cfg,
+                        lambda s: consolidate_deletes(s, index_cfg))
+    pol_a = _run_cycles(points, queries, index_cfg, consolidate_policy_a)
+    pol_b = _run_cycles(points, queries, index_cfg,
+                        lambda s: consolidate_policy_b(s, index_cfg))
+    return {"fresh": fresh, "a": pol_a, "b": pol_b}
+
+
+def test_fresh_vamana_recall_stable(stability):
+    """Fig. 2: alpha-RNG update rules keep recall AND density stable."""
+    recalls, degrees = stability["fresh"]
+    assert recalls[-1] >= recalls[0] - 0.02, recalls
+    assert degrees[-1] >= degrees[0] - 0.5, degrees
+
+
+def test_naive_delete_policy_a_degrades(stability):
+    """Fig. 1 / §4: edge-removal-only deletion sparsifies the graph (the
+    paper's stated mechanism — "the graph becomes sparse ... hence less
+    navigable") and ends below FreshVamana's recall."""
+    (ra, da), (rf, df) = stability["a"], stability["fresh"]
+    assert da[-1] < df[-1] - 1.0, (da, df)          # sparsification
+    assert ra[-1] < rf[-1] - 0.003, (ra, rf)        # recall consequence
+
+
+def test_naive_delete_policy_b_degrades(stability):
+    """Fig. 1: aggressive (alpha=1) local patching sparsifies faster and
+    costs more recall."""
+    (rb, db), (rf, df) = stability["b"], stability["fresh"]
+    (ra, da) = stability["a"]
+    assert db[-1] < df[-1] - 2.0, (db, df)
+    assert db[-1] < da[-1], (db, da)                # worse than policy A
+    assert rb[-1] < rf[-1] - 0.015, (rb, rf)
+
+
+def test_alpha_one_less_stable(points, queries, index_cfg):
+    """Fig. 3 / App. C: alpha = 1 yields a sparser, lower-recall index than
+    alpha = 1.2 under the same update stream."""
+    cfg1 = dataclasses.replace(index_cfg, alpha=1.0)
+    r1, d1 = _run_cycles(points, queries, cfg1,
+                         lambda s: consolidate_deletes(s, cfg1), cycles=6)
+    cfg2 = index_cfg
+    r2, d2 = _run_cycles(points, queries, cfg2,
+                         lambda s: consolidate_deletes(s, cfg2), cycles=6)
+    assert d2[-1] > d1[-1] + 1.0, (d1, d2)          # denser graph
+    assert r2[-1] >= r1[-1] - 0.005, (r1, r2)       # at least as accurate
+
+
+def test_streaming_merge_recall_stable(points, queries, index_cfg, pq_cfg):
+    """Fig. 4: merge cycles on PQ distances — small dip then stable."""
+    lti = build_lti(points, index_cfg, pq_cfg)
+    rng = np.random.default_rng(3)
+
+    def lti_recall(l):
+        ids, d, _, _ = search_lti(l, jnp.asarray(queries), index_cfg,
+                                  k=5, L=index_cfg.L_search)
+        mask = l.graph.active & ~l.graph.deleted
+        gt = brute_force(l.graph.vectors, mask, jnp.asarray(queries), 5)
+        return float(recall_at_k(ids, gt))
+
+    recalls = [lti_recall(lti)]
+    n_chg = int(N * FRAC)
+    for _ in range(5):
+        live = np.flatnonzero(np.asarray(lti.graph.active))
+        victims = rng.choice(live, n_chg, replace=False)
+        dmask = np.zeros(index_cfg.capacity, bool)
+        dmask[victims] = True
+        vecs = np.asarray(lti.graph.vectors)[victims]
+        lti, _ = streaming_merge(
+            lti, jnp.asarray(vecs), jnp.ones(n_chg, bool),
+            jnp.asarray(dmask), index_cfg, pq_cfg,
+            insert_chunk=64, block=512)
+        recalls.append(lti_recall(lti))
+    # stable after the initial PQ-approximation dip (paper Fig. 4)
+    assert recalls[-1] >= recalls[1] - 0.05, recalls
+    assert recalls[-1] >= recalls[0] - 0.12, recalls

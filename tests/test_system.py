@@ -1,0 +1,142 @@
+"""End-to-end FreshDiskANN system behaviour (paper §5): API semantics,
+RW->RO rollover, background merge, crash recovery, persistence."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.index import brute_force, recall_at_k
+from repro.core.system import FreshDiskANN, bootstrap_system
+
+from conftest import DIM
+
+
+def _sys_cfg(tmp=None):
+    return SystemConfig(
+        index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                          L_search=64, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=128, merge_threshold=256,
+        temp_capacity=512, insert_batch=64,
+        wal_dir=str(tmp) if tmp else None)
+
+
+@pytest.fixture(scope="module")
+def booted(points):
+    return bootstrap_system(points[:800], np.arange(800), _sys_cfg()), points
+
+
+def _gt_search(live_map, queries, k):
+    keys = np.asarray(sorted(live_map))
+    mat = np.stack([live_map[kk] for kk in keys])
+    gt = brute_force(jnp.asarray(mat), jnp.ones(len(keys), bool),
+                     jnp.asarray(queries), k)
+    return keys[np.asarray(gt)]
+
+
+def test_search_after_bootstrap(booted, queries):
+    sys_, points = booted
+    ids, d = sys_.search(queries, k=5)
+    live = dict(enumerate(points[:800]))
+    gt = _gt_search(live, queries, 5)
+    rec = float(recall_at_k(jnp.asarray(ids), jnp.asarray(gt)))
+    assert rec >= 0.85, rec
+
+
+def test_fresh_inserts_immediately_searchable(points, queries):
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
+    for i in range(50):
+        sys_.insert(1000 + i, points[400 + i])
+    q = points[400:410]
+    ids, _ = sys_.search(q, k=1)
+    assert (np.asarray(ids[:, 0]) == np.arange(1000, 1010)).mean() >= 0.8
+
+
+def test_deletes_reflected_without_merge(points):
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
+    q = points[:5]
+    ids0, _ = sys_.search(q, k=1)
+    for e in np.asarray(ids0[:, 0]):
+        sys_.delete(int(e))
+    ids1, _ = sys_.search(q, k=5)
+    assert not np.isin(np.asarray(ids0[:, 0]), np.asarray(ids1)).any()
+
+
+def test_rollover_and_merge_threshold(points):
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
+    for i in range(300):                       # > merge_threshold staged
+        sys_.insert(2000 + i, points[500 + i])
+    assert sys_.stats.snapshots >= 2
+    assert sys_.stats.merges >= 1
+    # merged points must remain searchable via the LTI
+    q = points[500:520]
+    ids, _ = sys_.search(q, k=1)
+    assert (np.asarray(ids[:, 0]) >= 2000).mean() >= 0.8
+
+
+def test_reinsert_after_delete_revives(points):
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    sys_.delete(7)
+    sys_.insert(7, points[7])
+    ids, _ = sys_.search(points[7:8], k=1)
+    assert int(ids[0, 0]) == 7
+
+
+def test_size_accounting(points):
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    for i in range(40):
+        sys_.insert(5000 + i, points[300 + i])
+    for e in range(20):
+        sys_.delete(e)
+    assert sys_.size == 300 + 40 - 20
+
+
+def test_save_load_roundtrip(tmp_path, points, queries):
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
+    for i in range(60):
+        sys_.insert(3000 + i, points[400 + i])
+    sys_.delete(3)
+    ids0, d0 = sys_.search(queries[:8], k=5)
+    sys_.save(str(tmp_path / "snap"))
+    restored = FreshDiskANN.load(str(tmp_path / "snap"), _sys_cfg())
+    ids1, d1 = restored.search(queries[:8], k=5)
+    assert (np.asarray(ids0) == np.asarray(ids1)).mean() > 0.9
+
+
+def test_wal_crash_recovery(tmp_path, points):
+    cfg = _sys_cfg(tmp_path / "wal")
+    sys_ = bootstrap_system(points[:300], np.arange(300), cfg)
+    for i in range(40):
+        sys_.insert(4000 + i, points[300 + i])
+    sys_.delete(5)
+    # "crash": rebuild a fresh system from the same base, replay the WAL
+    sys2 = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    sys2.wal = None
+    n = 0
+    from repro.core.wal import replay
+    for op, ext_id, vec in replay(os.path.join(str(tmp_path / "wal"),
+                                               "wal.bin")):
+        if op == 0:
+            sys2.insert(ext_id, vec)
+        else:
+            sys2.delete(ext_id)
+        n += 1
+    assert n == 41
+    ids, _ = sys2.search(points[300:305], k=1)
+    assert (np.asarray(ids[:, 0]) == np.arange(4000, 4005)).mean() >= 0.8
+    assert 5 in sys2.deleted_ext
+
+
+def test_background_merge_concurrent_search(points, queries):
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
+    for i in range(200):
+        sys_.insert(6000 + i, points[500 + i])
+    sys_.ro.append(sys_.rw)
+    sys_.rw = sys_._new_temp()
+    sys_.merge(background=True)
+    ids, _ = sys_.search(queries[:4], k=5)   # search while merging
+    sys_.wait_merge()
+    assert sys_.stats.merges >= 1
+    assert (np.asarray(ids) >= -1).all()
