@@ -1,5 +1,7 @@
-"""Paper §6.2 "I/O Cost of Search": hop count (the SSD-read proxy) and
-distance computations per query — a tiny fraction of brute force."""
+"""Paper §6.2 "I/O Cost of Search": IO rounds (hops — the SSD round-trip
+proxy) and distance computations per query — a tiny fraction of brute force.
+The beam-width sweep shows the hop/cmp trade-off: W concurrent reads per
+round cut rounds ~W-fold at slightly higher cmp counts."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -15,14 +17,16 @@ def main(quick: bool = False):
     cfg, pq = default_cfg(n), default_pq()
     lti = build_lti(pts, cfg, pq)
     for L in ((48,) if quick else (32, 48, 64, 96)):
-        def s():
-            return search_lti(lti, jnp.asarray(q), cfg, k=5, L=L)
+        for W in ((1, 4) if quick else (1, 2, 4)):
+            def s():
+                return search_lti(lti, jnp.asarray(q), cfg, k=5, L=L,
+                                  beam_width=W)
 
-        (ids, d, hops, cmps), secs = timed(s)
-        emit(f"io_cost_L{L}", secs / len(q),
-             "hops=%.0f cmps=%.0f frac_of_bruteforce=%.4f" % (
-                 float(hops.mean()), float(cmps.mean()),
-                 float(cmps.mean()) / n))
+            (ids, d, hops, cmps), secs = timed(s)
+            emit(f"io_cost_L{L}_W{W}", secs / len(q),
+                 "hops=%.0f cmps=%.0f frac_of_bruteforce=%.4f" % (
+                     float(hops.mean()), float(cmps.mean()),
+                     float(cmps.mean()) / n))
 
 
 if __name__ == "__main__":

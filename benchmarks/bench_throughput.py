@@ -1,15 +1,37 @@
 """Paper Fig. 7: scaling.  Thread-count scaling becomes batch-size scaling
-(the TPU's parallelism axis): search throughput vs query batch, and merge
-runtime vs block size (the paper's merge-thread knob)."""
+(the TPU's parallelism axis): search throughput vs query batch, merge runtime
+vs block size (the paper's merge-thread knob), and the beamwidth sweep (§6.2):
+IO rounds vs recall as W grows — hops drop ~W-fold while recall holds."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.index import brute_force, recall_at_k
 from repro.core.lti import build_lti, search_lti
 from repro.core.merge import streaming_merge
 
 from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+
+
+def beam_sweep(lti, cfg, q, widths=(1, 2, 4), k=5, tag="fig7_beam"):
+    """search_lti at each beam width: latency, IO rounds, reads, recall."""
+    g = lti.graph
+    gt = brute_force(g.vectors, g.active & ~g.deleted, jnp.asarray(q), k)
+    base_hops = None
+    for W in widths:
+        def s():
+            return search_lti(lti, jnp.asarray(q), cfg, k=k,
+                              L=cfg.L_search, beam_width=W)
+
+        s()  # warm the jit cache
+        (ids, d, hops, cmps), secs = timed(s, repeats=3)
+        rec = float(recall_at_k(ids, gt))
+        h = float(hops.mean())
+        base_hops = base_hops or h
+        emit(f"{tag}_W{W}", secs,
+             f"hops={h:.1f} speedup={base_hops / h:.2f}x "
+             f"cmps={float(cmps.mean()):.0f} recall={rec:.4f}")
 
 
 def main(quick: bool = False):
@@ -30,6 +52,8 @@ def main(quick: bool = False):
         _, secs = timed(s, repeats=3)
         emit(f"fig7_search_batch_{b}", secs,
              f"qps={b / secs:.0f}")
+
+    beam_sweep(lti, cfg, queryset(64), widths=(1, 2) if quick else (1, 2, 4))
 
     rng = np.random.default_rng(1)
     n_chg = n // 10

@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 tests + a short kernel-path throughput probe.
+#
+# REPRO_PALLAS_INTERPRET=1 forces the Pallas kernels through the interpreter,
+# so kernel-path regressions (shape/padding/semantics) surface on any CPU box
+# without a TPU.  The bench probe builds a small LTI and runs the beam-width
+# sweep with the kernels enabled — ~30s end to end.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export REPRO_PALLAS_INTERPRET=1
+
+# Kernel probe first: surfaces kernel-path regressions even when an
+# unrelated (e.g. env-dependent) test failure would abort the -x suite run.
+python - <<'PY'
+import time
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, default_pq, queryset
+from benchmarks.bench_throughput import beam_sweep
+from repro.core.config import IndexConfig
+from repro.core.lti import build_lti
+
+t0 = time.time()
+n, dim = 600, 32
+cfg = IndexConfig(capacity=2 * n, dim=dim, R=20, L_build=24, L_search=32,
+                  alpha=1.2, use_kernel=True)   # force the Pallas ops path
+lti = build_lti(dataset(n, dim), cfg, default_pq(dim), batch=64)
+beam_sweep(lti, cfg, queryset(16, dim), widths=(1, 4), tag="smoke_beam")
+print(f"# kernel-path smoke ok in {time.time() - t0:.1f}s")
+PY
+
+python -m pytest -x -q

@@ -22,6 +22,12 @@ class IndexConfig:
       alpha: the alpha-RNG pruning threshold (paper: 1.2).
       max_visits: cap on greedy-search expansions (bounds the while_loop).
       dtype: storage dtype of full-precision vectors.
+      beam_width: W — frontier nodes expanded per search iteration (paper
+        §6.2 beamwidth).  Each iteration issues W concurrent adjacency
+        fetches as one IO round; W=1 is the classic single-expansion search.
+      use_kernel: route batched search distances + candidate-list top-k
+        through the Pallas kernels in ``repro.kernels.ops``.  None (default)
+        auto-selects: kernels on TPU, jnp reference path elsewhere.
     """
 
     capacity: int
@@ -32,11 +38,20 @@ class IndexConfig:
     alpha: float = 1.2
     max_visits: int = 0  # 0 -> derived: L + L//2 + 16
     dtype: str = "float32"
+    beam_width: int = 1
+    use_kernel: Optional[bool] = None
 
     def visits_bound(self, L: int) -> int:
         if self.max_visits:
             return self.max_visits
         return int(L + L // 2 + 16)
+
+    def kernel_enabled(self) -> bool:
+        """Resolve ``use_kernel`` (None -> Pallas on TPU only)."""
+        if self.use_kernel is None:
+            import jax
+            return jax.default_backend() == "tpu"
+        return bool(self.use_kernel)
 
 
 @dataclasses.dataclass(frozen=True)

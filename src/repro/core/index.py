@@ -12,14 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import IndexConfig
-from .distance import INVALID, gather_l2
+from .distance import INVALID
 from .graph import GraphState, empty_graph, medoid
 from .insert import apply_back_edges, compute_insert_edges
-from .search import greedy_search, topk_results
-
-
-def _full_dist(vectors: jax.Array):
-    return lambda q: (lambda ids: gather_l2(q, vectors, ids))
+from .search import FullPrecisionBackend, beam_search, topk_results
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "L", "reprune"))
@@ -46,8 +42,9 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
         state.adjacency if not reprune else st.adjacency,
         st.active, usable, st.start, st.vectors,
         jnp.where(valid, slots, INVALID), vecs,
-        _full_dist(st.vectors),
-        L=L, max_visits=cfg.visits_bound(L), alpha=cfg.alpha, R=cfg.R)
+        FullPrecisionBackend(st.vectors),
+        L=L, max_visits=cfg.visits_bound(L), alpha=cfg.alpha, R=cfg.R,
+        beam_width=cfg.beam_width, use_kernel=cfg.kernel_enabled())
     new_adj = jnp.where(valid[:, None], edges.new_adj, INVALID)
     adjacency = st.adjacency.at[wslots].set(new_adj, mode="drop")
     pairs_j = jnp.where(valid[:, None], edges.new_adj, INVALID).reshape(-1)
@@ -57,13 +54,19 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
     return st._replace(adjacency=adjacency)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "k", "L"))
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "beam_width"))
 def search(state: GraphState, queries: jax.Array, cfg: IndexConfig,
-           *, k: int, L: int):
-    """Batched search; returns (ids [B,k], dists [B,k], hops [B], cmps [B])."""
-    res = greedy_search(state.adjacency, state.active, state.start, queries,
-                        _full_dist(state.vectors),
-                        L=L, max_visits=cfg.visits_bound(L))
+           *, k: int, L: int, beam_width: Optional[int] = None):
+    """Batched search; returns (ids [B,k], dists [B,k], hops [B], cmps [B]).
+
+    ``hops`` counts IO rounds: with ``beam_width`` W each round expands up to
+    W frontier nodes, so hops drop ~W-fold vs the W=1 classic search.
+    """
+    res = beam_search(state.adjacency, state.active, state.start, queries,
+                      FullPrecisionBackend(state.vectors),
+                      L=L, max_visits=cfg.visits_bound(L),
+                      beam_width=beam_width or cfg.beam_width,
+                      use_kernel=cfg.kernel_enabled())
     ids, d = topk_results(res, k, state.active & ~state.deleted)
     return ids, d, res.n_hops, res.n_cmps
 

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from .distance import INVALID
 from .prune import prune_node, robust_prune
-from .search import MakeDistFn, SearchResult, greedy_search
+from .search import DistanceBackend, SearchResult, beam_search
 
 
 class InsertEdges(NamedTuple):
@@ -40,17 +40,20 @@ def compute_insert_edges(
     prune_table: jax.Array,    # [N, d] vectors used for prune distances
     new_slots: jax.Array,      # [B] slot ids of the new points (already stored)
     new_vecs: jax.Array,       # [B, d]
-    make_dist_fn: MakeDistFn,
+    backend: DistanceBackend,
     *,
     L: int,
     max_visits: int,
     alpha: float,
     R: int,
+    beam_width: int = 1,
+    use_kernel: bool = False,
 ) -> InsertEdges:
     """Stages 1+2: search & prune.  Graph arrays are pre-insert (new points
     are stored but have no in-edges, so searches cannot reach them)."""
-    res = greedy_search(adjacency, navigable, start, new_vecs,
-                        make_dist_fn, L=L, max_visits=max_visits)
+    res = beam_search(adjacency, navigable, start, new_vecs, backend,
+                      L=L, max_visits=max_visits, beam_width=beam_width,
+                      use_kernel=use_kernel)
     # Candidate pool: V union final list (Alg. 2 uses V; the list adds only
     # closer nodes, strictly improving the pool).
     cand = jnp.concatenate([res.visited, res.ids], axis=1)          # [B, V+L]

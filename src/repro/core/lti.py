@@ -8,7 +8,7 @@ final exact rerank of the candidate list — exactly DiskANN's search recipe.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,20 +17,14 @@ from . import pq as pqm
 from .config import IndexConfig, PQConfig
 from .graph import GraphState
 from .index import build as mem_build
-from .search import greedy_search, topk_results
+from .search import (FullPrecisionBackend, PQBackend, batch_distances,
+                     beam_search, topk_results)
 
 
 class LTIState(NamedTuple):
     graph: GraphState      # adjacency + full-precision vectors + flags
     codes: jax.Array       # [capacity, m] uint8 PQ codes
     codebook: pqm.PQCodebook
-
-
-def _pq_dist(codes: jax.Array, codebook: pqm.PQCodebook):
-    def mk(q):
-        table = pqm.lut(codebook, q)
-        return lambda ids: pqm.adc_gather(codes, table, ids)
-    return mk
 
 
 def build_lti(vectors, cfg: IndexConfig, pq_cfg: PQConfig,
@@ -47,25 +41,31 @@ def build_lti(vectors, cfg: IndexConfig, pq_cfg: PQConfig,
     return LTIState(graph, codes, codebook)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "rerank"))
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "rerank",
+                                             "beam_width"))
 def search_lti(lti: LTIState, queries: jax.Array, cfg: IndexConfig,
-               *, k: int, L: int, rerank: bool = True):
+               *, k: int, L: int, rerank: bool = True,
+               beam_width: Optional[int] = None):
     """PQ-navigated beam search + exact rerank (paper §5.2 / DiskANN).
 
-    Returns (ids [B,k], dists [B,k], hops [B], cmps [B]).  ``hops`` is the
-    number of adjacency fetches — the paper's "~120 random 4KB reads" metric.
+    Returns (ids [B,k], dists [B,k], hops [B], cmps [B]).  ``hops`` counts IO
+    rounds: at ``beam_width`` W each round issues up to W concurrent
+    adjacency fetches, so the paper's "~120 random 4KB reads" metric is
+    hops * W (exactly ``SearchResult.n_reads``) while latency follows hops.
     """
     g = lti.graph
-    res = greedy_search(g.adjacency, g.active, g.start, queries,
-                        _pq_dist(lti.codes, lti.codebook),
-                        L=L, max_visits=cfg.visits_bound(L))
+    use_kernel = cfg.kernel_enabled()
+    res = beam_search(g.adjacency, g.active, g.start, queries,
+                      PQBackend(lti.codes, lti.codebook),
+                      L=L, max_visits=cfg.visits_bound(L),
+                      beam_width=beam_width or cfg.beam_width,
+                      use_kernel=use_kernel)
     reportable = g.active & ~g.deleted
     if rerank:
         # Exact distances for the final L candidates ("full-precision vectors
         # fetched from the capacity tier").
-        from .distance import gather_l2
-        exact = jax.vmap(lambda q, ids: gather_l2(q, g.vectors, ids))(
-            queries, res.ids)
+        exact = batch_distances(FullPrecisionBackend(g.vectors), queries,
+                                res.ids, use_kernel=use_kernel)
         res = res._replace(dists=exact)
     ids, d = topk_results(res, k, reportable)
     return ids, d, res.n_hops, res.n_cmps

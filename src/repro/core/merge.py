@@ -30,9 +30,9 @@ from .delete import consolidate_deletes, consolidate_deletes_codes
 from .distance import INVALID
 from .insert import (apply_back_edges, apply_back_edges_codes,
                      compute_insert_edges)
-from .lti import LTIState, _pq_dist
+from .lti import LTIState
 from .prune import robust_prune_codes
-from .search import greedy_search
+from .search import PQBackend, beam_search
 
 
 class MergeStats(NamedTuple):
@@ -108,7 +108,8 @@ def streaming_merge(
     c_slots = c_slots.reshape(n_chunks, insert_chunk)
     c_vecs = c_vecs.reshape(n_chunks, insert_chunk, -1)
 
-    mk = _pq_dist(codes, codebook)
+    backend = PQBackend(codes, codebook)
+    use_kernel = cfg.kernel_enabled()
 
     def insert_block(carry, inp):
         adjacency = carry
@@ -116,9 +117,11 @@ def streaming_merge(
         if use_sdc:
             # search via ADC; prune with d_p = exact-vector ADC and
             # candidate-candidate distances via SDC on codes.
-            res = greedy_search(adjacency, g.active, g.start, vv, mk,
-                                L=cfg.L_build,
-                                max_visits=cfg.visits_bound(cfg.L_build))
+            res = beam_search(adjacency, g.active, g.start, vv, backend,
+                              L=cfg.L_build,
+                              max_visits=cfg.visits_bound(cfg.L_build),
+                              beam_width=cfg.beam_width,
+                              use_kernel=use_kernel)
             cand = jnp.concatenate([res.visited, res.ids], axis=1)
 
             def one(slot, vec, cand_ids):
@@ -134,9 +137,11 @@ def streaming_merge(
                                    new_adj.shape).reshape(-1)
         else:
             edges = compute_insert_edges(
-                adjacency, g.active, usable, g.start, decoded, sl, vv, mk,
+                adjacency, g.active, usable, g.start, decoded, sl, vv,
+                backend,
                 L=cfg.L_build, max_visits=cfg.visits_bound(cfg.L_build),
-                alpha=cfg.alpha, R=cfg.R)
+                alpha=cfg.alpha, R=cfg.R, beam_width=cfg.beam_width,
+                use_kernel=use_kernel)
             new_adj = edges.new_adj
             src = edges.pairs_p
         valid = sl >= 0

@@ -29,7 +29,7 @@ from .distance import INVALID
 from .graph import GraphState, empty_graph
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
-from .wal import WriteAheadLog, replay, truncate
+from .wal import WriteAheadLog, log_epoch, replay, truncate
 
 
 @dataclass
@@ -40,6 +40,9 @@ class _Temp:
     n: int = 0
 
 
+LATENCY_RESERVOIR = 1024
+
+
 @dataclass
 class SystemStats:
     inserts: int = 0
@@ -48,7 +51,21 @@ class SystemStats:
     merges: int = 0
     snapshots: int = 0
     merge_seconds: float = 0.0
+    # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
+    # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
     insert_latencies: list = field(default_factory=list)
+    latencies_seen: int = 0
+    _lat_rng: np.random.Generator = field(
+        default_factory=lambda: np.random.default_rng(0), repr=False)
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies_seen += 1
+        if len(self.insert_latencies) < LATENCY_RESERVOIR:
+            self.insert_latencies.append(seconds)
+        else:
+            j = int(self._lat_rng.integers(self.latencies_seen))
+            if j < LATENCY_RESERVOIR:
+                self.insert_latencies[j] = seconds
 
 
 class FreshDiskANN:
@@ -58,7 +75,8 @@ class FreshDiskANN:
         icfg = cfg.index
         self.temp_cfg = IndexConfig(
             capacity=cfg.temp_capacity, dim=icfg.dim, R=icfg.R,
-            L_build=icfg.L_build, L_search=icfg.L_search, alpha=icfg.alpha)
+            L_build=icfg.L_build, L_search=icfg.L_search, alpha=icfg.alpha,
+            beam_width=icfg.beam_width, use_kernel=icfg.use_kernel)
         if lti is None:
             g = empty_graph(icfg)
             cb = pqm.PQCodebook(jnp.zeros(
@@ -77,6 +95,8 @@ class FreshDiskANN:
                     self._ext_loc[int(e)] = ("lti", slot)
         self._insert_buf_v: list[np.ndarray] = []
         self._insert_buf_id: list[int] = []
+        self._wal_offset: Optional[int] = None  # WAL bytes a snapshot covers
+        self._wal_epoch: Optional[int] = None   # ... and of which log epoch
         self.stats = SystemStats()
         self._merge_lock = threading.Lock()
         self._merge_thread: Optional[threading.Thread] = None
@@ -97,7 +117,7 @@ class FreshDiskANN:
         if len(self._insert_buf_id) >= self.cfg.insert_batch:
             self._flush_inserts()
         self.stats.inserts += 1
-        self.stats.insert_latencies.append(time.perf_counter() - t0)
+        self.stats.record_latency(time.perf_counter() - t0)
         self._maybe_rollover()
 
     def delete(self, ext_id: int) -> None:
@@ -107,22 +127,30 @@ class FreshDiskANN:
         self.deleted_ext.add(int(ext_id))
         self.stats.deletes += 1
 
-    def search(self, queries: np.ndarray, k: int, L: Optional[int] = None
+    def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
+               beam_width: Optional[int] = None
                ) -> tuple[np.ndarray, np.ndarray]:
-        """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2)."""
+        """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2).
+
+        ``beam_width`` overrides the configured W for every per-tier search
+        in the fan-out (LTI and all TempIndices alike).
+        """
         self._flush_inserts()
         L = L or self.cfg.index.L_search
+        W = beam_width or self.cfg.index.beam_width
         q = jnp.asarray(queries, jnp.float32)
         cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
         # Over-fetch so DeleteList filtering + cross-tier dedupe still leave k.
         kk = min(max(k * 2, k + 8), L)
         if int(self.lti.graph.n_total) > 0:
-            ids, d, _, _ = search_lti(self.lti, q, self.cfg.index, k=kk, L=L)
+            ids, d, _, _ = search_lti(self.lti, q, self.cfg.index, k=kk, L=L,
+                                      beam_width=W)
             cands.append((self._map_ext(np.asarray(ids), self.lti_ext_ids),
                           np.asarray(d)))
         for t in [self.rw] + self.ro:
             if t.n > 0:
-                ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk, L=L)
+                ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
+                                          L=L, beam_width=W)
                 cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
                               np.asarray(d)))
         self.stats.searches += len(queries)
@@ -144,30 +172,37 @@ class FreshDiskANN:
             return (np.full((nq, k), -1, np.int64),
                     np.full((nq, k), np.inf, np.float32))
         ids = np.concatenate([c[0] for c in cands], axis=1)
-        ds = np.concatenate([c[1] for c in cands], axis=1)
-        # filter DeleteList + stale duplicates (an id may transiently exist in
-        # LTI and a TempIndex after re-insertion; keep the closest instance).
-        for i, row in enumerate(ids):
-            for j, e in enumerate(row):
-                if e in self.deleted_ext or e < 0:
-                    ds[i, j] = np.inf
-        order = np.argsort(ds, axis=1)
-        out_i = np.take_along_axis(ids, order, axis=1)
-        out_d = np.take_along_axis(ds, order, axis=1)
-        # dedupe per row keeping first (closest)
-        res_i = np.full((nq, k), -1, np.int64)
-        res_d = np.full((nq, k), np.inf, np.float32)
-        for r in range(nq):
-            seen, w = set(), 0
-            for e, dv in zip(out_i[r], out_d[r]):
-                if w >= k or not np.isfinite(dv):
-                    break
-                if e in seen:
-                    continue
-                seen.add(e)
-                res_i[r, w], res_d[r, w] = e, dv
-                w += 1
-        return res_i, res_d
+        ds = np.concatenate([c[1] for c in cands], axis=1).astype(np.float32)
+        # filter DeleteList + invalid lanes (vectorized; no python loops).
+        # .copy() is atomic under the GIL — a concurrent background merge
+        # (deleted_ext -= consumed) must not race the iteration below.
+        deleted = self.deleted_ext.copy()
+        bad = ids < 0
+        if deleted:
+            dl = np.fromiter(deleted, np.int64, len(deleted))
+            bad |= np.isin(ids, dl)
+        ds[bad] = np.inf
+        # dedupe keeping the closest instance of each id (an id may
+        # transiently exist in LTI and a TempIndex after re-insertion): sort
+        # each row by (id, dist), mask all but the first copy of every id,
+        # then rank by distance and slice k.
+        order = np.lexsort((ds, ids), axis=1)
+        sid = np.take_along_axis(ids, order, axis=1)
+        sd = np.take_along_axis(ds, order, axis=1)
+        dup = np.zeros_like(sid, bool)
+        dup[:, 1:] = (sid[:, 1:] == sid[:, :-1]) & (sid[:, 1:] >= 0)
+        sd[dup] = np.inf
+        top = np.argsort(sd, axis=1, kind="stable")[:, :k]
+        res_d = np.take_along_axis(sd, top, axis=1)
+        res_i = np.where(np.isfinite(res_d),
+                         np.take_along_axis(sid, top, axis=1), -1)
+        res_d = np.where(np.isfinite(res_d), res_d, np.inf)
+        if res_i.shape[1] < k:     # fewer candidates than k: pad, as before
+            pad = k - res_i.shape[1]
+            res_i = np.pad(res_i, ((0, 0), (0, pad)), constant_values=-1)
+            res_d = np.pad(res_d, ((0, 0), (0, pad)),
+                           constant_values=np.inf)
+        return res_i.astype(np.int64), res_d.astype(np.float32)
 
     def _flush_inserts(self) -> None:
         if not self._insert_buf_id:
@@ -212,8 +247,15 @@ class FreshDiskANN:
     def _maybe_rollover(self) -> None:
         if self.rw.n >= self.cfg.ro_snapshot_points:
             self._flush_inserts()
-            self.ro.append(self.rw)
+            frozen = self.rw
+            self.ro.append(frozen)
             self.rw = self._new_temp()
+            # The frozen snapshot's points are now RO-resident: retag so the
+            # location map always names the tier a point actually lives in.
+            for slot in np.nonzero(frozen.ext_ids >= 0)[0]:
+                e = int(frozen.ext_ids[slot])
+                if self._ext_loc.get(e) == ("rw", int(slot)):
+                    self._ext_loc[e] = ("ro", int(slot))
             self.stats.snapshots += 1
         staged = sum(t.n for t in self.ro)
         if staged >= self.cfg.merge_threshold:
@@ -290,6 +332,7 @@ class FreshDiskANN:
 
     # ------------------------------------------------------------ snapshots
     def save(self, path: str) -> None:
+        self._flush_inserts()     # buffered inserts must land in the temps
         os.makedirs(path, exist_ok=True)
         np.savez_compressed(
             os.path.join(path, "lti.npz"),
@@ -302,8 +345,17 @@ class FreshDiskANN:
         with open(os.path.join(path, "temps.pkl"), "wb") as f:
             pickle.dump([(jax.tree.map(np.asarray, s), e, n)
                          for s, e, n in ro_blob], f)
+        # Record how much of the WAL (and which log epoch) this snapshot
+        # already covers, so recovery replays only the suffix (no
+        # double-apply).
+        wal_offset = wal_epoch = None
+        if self.wal and os.path.exists(self.wal.path):
+            wal_offset = os.path.getsize(self.wal.path)
+            wal_epoch = log_epoch(self.wal.path)
         with open(os.path.join(path, "meta.pkl"), "wb") as f:
-            pickle.dump({"deleted": self.deleted_ext, "cfg": self.cfg}, f)
+            pickle.dump({"deleted": self.deleted_ext, "cfg": self.cfg,
+                         "wal_offset": wal_offset,
+                         "wal_epoch": wal_epoch}, f)
 
     @classmethod
     def load(cls, path: str, cfg: SystemConfig) -> "FreshDiskANN":
@@ -317,30 +369,65 @@ class FreshDiskANN:
             temps = pickle.load(f)
         for i, (s, e, n) in enumerate(temps):
             t = _Temp(GraphState(*[jnp.asarray(x) for x in s]), e.copy(), n)
-            if i < len(temps) - 1:
-                sys.ro.append(t)
-            else:
+            # Last snapshot entry is the RW index, earlier ones are frozen RO
+            # snapshots — tag them apart, matching the live-system tags.
+            is_rw = i == len(temps) - 1
+            if is_rw:
                 sys.rw = t
+            else:
+                sys.ro.append(t)
+            tag = "rw" if is_rw else "ro"
             for slot, ext in enumerate(e):
                 if ext >= 0:
-                    sys._ext_loc[int(ext)] = ("temp", slot)
+                    sys._ext_loc[int(ext)] = (tag, slot)
         with open(os.path.join(path, "meta.pkl"), "rb") as f:
             meta = pickle.load(f)
         sys.deleted_ext = set(meta["deleted"])
+        sys._wal_offset = meta.get("wal_offset")
+        sys._wal_epoch = meta.get("wal_epoch")
         return sys
 
     def recover(self, snapshot_path: Optional[str] = None) -> int:
-        """Crash recovery (§5.6): replay the WAL over the latest snapshot.
-        Returns the number of records replayed."""
+        """Crash recovery (§5.6): restore the latest snapshot (when given),
+        then replay the WAL over it.  Returns the number of records replayed."""
+        start = None
+        if snapshot_path:
+            restored = FreshDiskANN.load(snapshot_path, self.cfg)
+            if restored.wal:              # keep only our own WAL handle open
+                restored.wal.close()
+            self.lti = restored.lti
+            self.lti_ext_ids = restored.lti_ext_ids
+            self.rw = restored.rw
+            self.ro = restored.ro
+            self.deleted_ext = restored.deleted_ext
+            self._ext_loc = restored._ext_loc
+            self._insert_buf_v, self._insert_buf_id = [], []
+            start = restored._wal_offset
+            epoch = restored._wal_epoch
         n = 0
         wal_path = self.wal.path if self.wal else None
         if wal_path and os.path.exists(wal_path):
-            for op, ext_id, vec in replay(wal_path):
-                if op == 0:
-                    self.insert(ext_id, vec)
-                else:
-                    self.delete(ext_id)
-                n += 1
+            # Replay only the suffix the snapshot doesn't already cover.  If
+            # the log epoch changed since the snapshot (post-merge truncate)
+            # everything in the current log postdates it: replay all of it.
+            if start is not None and (start > os.path.getsize(wal_path)
+                                      or epoch != log_epoch(wal_path)):
+                start = None
+            # Materialize before applying, and suppress re-logging while we
+            # replay: the records are already in the log, and appending to
+            # the file being iterated would never reach EOF.
+            records = list(replay(wal_path, start))
+            wal, self.wal = self.wal, None
+            try:
+                for op, ext_id, vec in records:
+                    if op == 0:
+                        self.insert(ext_id, vec)
+                    else:
+                        self.delete(ext_id)
+                    n += 1
+                self._flush_inserts()
+            finally:
+                self.wal = wal
         return n
 
     # -------------------------------------------------------------- helpers

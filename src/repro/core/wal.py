@@ -50,13 +50,21 @@ class WriteAheadLog:
         self._f.close()
 
 
-def replay(path: str) -> Iterator[tuple[int, int, Optional[np.ndarray]]]:
-    """Yield (op, ext_id, vector|None) records from a log file."""
+def replay(path: str, start: Optional[int] = None
+           ) -> Iterator[tuple[int, int, Optional[np.ndarray]]]:
+    """Yield (op, ext_id, vector|None) records from a log file.
+
+    ``start``: byte offset to resume from (a value previously captured with
+    ``os.path.getsize`` on the flushed log — snapshots store it so recovery
+    replays only the suffix written after the snapshot was taken).
+    """
     with open(path, "rb") as f:
         hdr = f.read(_HDR.size)
         magic, dim, _ = _HDR.unpack(hdr)
         if magic != MAGIC:
             raise ValueError(f"{path}: bad WAL magic")
+        if start is not None and start > _HDR.size:
+            f.seek(start)
         vec_bytes = 4 * dim
         while True:
             raw = f.read(_REC.size)
@@ -70,6 +78,15 @@ def replay(path: str) -> Iterator[tuple[int, int, Optional[np.ndarray]]]:
                 yield op, ext_id, np.frombuffer(vraw, np.float32).copy()
             else:
                 yield op, ext_id, None
+
+
+def log_epoch(path: str) -> int:
+    """The log's epoch counter (start_seqno header field; bumps on truncate)."""
+    with open(path, "rb") as f:
+        magic, _, seqno = _HDR.unpack(f.read(_HDR.size))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad WAL magic")
+        return seqno
 
 
 def truncate(path: str, dim: int, start_seqno: int) -> None:

@@ -13,5 +13,16 @@ wrapper in ``ops.py`` (which falls back to interpret mode on CPU):
                  force ground truth + k-means assignment).
   block_topk   — streaming block top-k merge (candidate-list maintenance of
                  Algorithm 1 / final result aggregation across shards).
+
+These wrappers ARE the search hot path: the beam-width engine in
+``repro.core.search`` routes every iteration through them when
+``use_kernel`` resolves true (``IndexConfig.use_kernel``; None -> auto-on
+for TPU backends).  A ``DistanceBackend`` (``FullPrecisionBackend`` /
+``PQBackend``) gathers the beam's W x R neighbor rows and scores them with
+one ``l2_distances`` / ``adc_distances`` call on a padded fixed-shape batch,
+and the candidate list is maintained with one ``block_topk`` merge per
+round.  With ``use_kernel=False`` the engine runs the bit-identical jnp
+reference path — the parity tests in ``tests/test_beam_search.py`` toggle
+the flag both ways.
 """
 from .ops import adc_distances, l2_distances, block_topk  # noqa: F401

@@ -25,9 +25,10 @@ from ..core import pq as pqm
 from ..core.config import IndexConfig, PQConfig
 from ..core.graph import GraphState
 from ..core.index import insert as mem_insert
-from ..core.lti import LTIState, _pq_dist
+from ..core.lti import LTIState
 from ..core.merge import streaming_merge
-from ..core.search import greedy_search, topk_results
+from ..core.search import (FullPrecisionBackend, PQBackend, batch_distances,
+                           beam_search, topk_results)
 
 
 def _all_axes(mesh: Mesh) -> tuple:
@@ -83,7 +84,8 @@ def _shard_index(mesh: Mesh):
 
 
 def make_distributed_search(mesh: Mesh, cfg: IndexConfig, *, k: int,
-                            L: int | None = None) -> Callable:
+                            L: int | None = None,
+                            beam_width: int | None = None) -> Callable:
     """(lti_global, queries[Q, d] replicated) -> (ids [Q, k], dists [Q, k]).
 
     Local PQ-navigated beam search on every shard (paper: broadcast), then a
@@ -91,24 +93,25 @@ def make_distributed_search(mesh: Mesh, cfg: IndexConfig, *, k: int,
     collective in the read path).
     """
     L = L or cfg.L_search
+    W = beam_width or cfg.beam_width
     lti_specs, _, n_shards = shard_specs(mesh)
     ax = _all_axes(mesh)
 
     def local(lti: LTIState, queries):
-        from ..core.distance import gather_l2
-
         g = lti.graph
         start = g.start[0]
-        res = greedy_search(
+        use_kernel = cfg.kernel_enabled()
+        res = beam_search(
             g.adjacency, g.active, start, queries,
-            _pq_dist(lti.codes, lti.codebook),
-            L=L, max_visits=cfg.visits_bound(L))
+            PQBackend(lti.codes, lti.codebook),
+            L=L, max_visits=cfg.visits_bound(L), beam_width=W,
+            use_kernel=use_kernel)
         reportable = g.active & ~g.deleted
         # exact rerank of the candidate list (paper §5.2: full-precision
         # vectors fetched from the capacity tier re-rank the ADC results —
         # essential when merging coarse ADC distances across shards)
-        exact = jax.vmap(lambda q, ids: gather_l2(q, g.vectors, ids))(
-            queries, res.ids)
+        exact = batch_distances(FullPrecisionBackend(g.vectors), queries,
+                                res.ids, use_kernel=use_kernel)
         ids, d = topk_results(res._replace(dists=exact), k, reportable)
         # globalize ids: shard offset into the flat point axis
         offset = _shard_index(mesh) * cfg.capacity

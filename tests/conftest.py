@@ -41,7 +41,11 @@ def points(rng):
 
 
 @pytest.fixture(scope="session")
-def queries(rng):
+def queries(rng, points):
+    # Depends on ``points`` (unused) to pin the draw order on the shared rng:
+    # otherwise fixture instantiation order — which varies with the module
+    # execution order — would change both streams and every recall number.
+    del points
     centers = rng.standard_normal((24, DIM)) * 3.0
     which = rng.integers(0, 24, 64)
     return (centers[which]

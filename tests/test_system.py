@@ -129,6 +129,44 @@ def test_wal_crash_recovery(tmp_path, points):
     assert 5 in sys2.deleted_ext
 
 
+def test_recover_loads_snapshot_before_wal(tmp_path, points):
+    """recover(snapshot_path) restores the snapshot, then replays only the
+    WAL suffix the snapshot doesn't already cover (no double-apply)."""
+    cfg = _sys_cfg(tmp_path / "wal")
+    sys_ = bootstrap_system(points[:300], np.arange(300), cfg)
+    for i in range(20):                 # WAL-logged AND inside the snapshot
+        sys_.insert(7000 + i, points[280 + i])
+    sys_.save(str(tmp_path / "snap"))
+    size_at_save = sys_.size
+    # post-snapshot traffic lands only in the WAL suffix we replay
+    for i in range(30):
+        sys_.insert(8000 + i, points[300 + i])
+    sys_.delete(9)
+    # "crash": a fresh empty system with the same WAL recovers everything
+    crashed = FreshDiskANN(cfg)
+    n = crashed.recover(str(tmp_path / "snap"))
+    assert n == 31                      # pre-save records are not re-applied
+    assert crashed.size == size_at_save + 30 - 1
+    ids, _ = crashed.search(points[300:305], k=1)
+    assert (np.asarray(ids[:, 0]) == np.arange(8000, 8005)).mean() >= 0.8
+    ids2, _ = crashed.search(points[10:12], k=1)   # snapshot points present
+    assert (np.asarray(ids2[:, 0]) == np.arange(10, 12)).mean() >= 0.5
+    assert 9 in crashed.deleted_ext
+
+
+def test_ext_loc_tags_unified(tmp_path, points):
+    """Location-map tags name real tiers (lti/rw/ro) after save/load."""
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    for i in range(200):                      # forces an RW->RO rollover
+        sys_.insert(9000 + i, points[400 + i])
+    sys_.save(str(tmp_path / "snap"))
+    restored = FreshDiskANN.load(str(tmp_path / "snap"), _sys_cfg())
+    for s in (sys_, restored):
+        tags = {loc[0] for loc in s._ext_loc.values()}
+        assert tags <= {"lti", "rw", "ro"}, tags
+        assert "ro" in tags  # the rolled-over snapshot is tagged as RO
+
+
 def test_background_merge_concurrent_search(points, queries):
     sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg())
     for i in range(200):
