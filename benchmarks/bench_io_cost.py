@@ -1,14 +1,22 @@
 """Paper §6.2 "I/O Cost of Search": IO rounds (hops — the SSD round-trip
 proxy) and distance computations per query — a tiny fraction of brute force.
 The beam-width sweep shows the hop/cmp trade-off: W concurrent reads per
-round cut rounds ~W-fold at slightly higher cmp counts."""
+round cut rounds ~W-fold at slightly higher cmp counts.
+
+The sweep's measured (hops, cmps) points feed the beam-width autotuner
+(``repro.core.autotune``): the emitted ``autotune_pick_L*`` records show
+which W the cost model selects at each candidate-list size — the same
+choice ``FreshDiskANN`` makes at serve time under ``autotune_beam``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.autotune import BeamPoint, pick_beam_width
 from repro.core.lti import build_lti, search_lti
 
-from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+from .common import dataset, default_cfg, default_pq, emit, queryset, timed, \
+    write_bench_json
 
 
 def main(quick: bool = False):
@@ -17,16 +25,23 @@ def main(quick: bool = False):
     cfg, pq = default_cfg(n), default_pq()
     lti = build_lti(pts, cfg, pq)
     for L in ((48,) if quick else (32, 48, 64, 96)):
+        sweep = []
         for W in ((1, 4) if quick else (1, 2, 4)):
             def s():
                 return search_lti(lti, jnp.asarray(q), cfg, k=5, L=L,
                                   beam_width=W)
 
             (ids, d, hops, cmps), secs = timed(s)
+            h, c = float(hops.mean()), float(cmps.mean())
+            sweep.append(BeamPoint(W=W, hops=h, cmps=c, seconds=secs))
             emit(f"io_cost_L{L}_W{W}", secs / len(q),
                  "hops=%.0f cmps=%.0f frac_of_bruteforce=%.4f" % (
-                     float(hops.mean()), float(cmps.mean()),
-                     float(cmps.mean()) / n))
+                     h, c, c / n),
+                 L=L, W=W, hops=h, cmps=c, frac_of_bruteforce=c / n)
+        best = pick_beam_width(sweep)
+        emit(f"autotune_pick_L{L}", 0.0, f"W={best}", L=L, W=best)
+
+    write_bench_json("io_cost", quick=quick, n=n)
 
 
 if __name__ == "__main__":

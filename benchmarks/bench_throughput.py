@@ -1,17 +1,22 @@
 """Paper Fig. 7: scaling.  Thread-count scaling becomes batch-size scaling
 (the TPU's parallelism axis): search throughput vs query batch, merge runtime
-vs block size (the paper's merge-thread knob), and the beamwidth sweep (§6.2):
-IO rounds vs recall as W grows — hops drop ~W-fold while recall holds."""
+vs block size (the paper's merge-thread knob), the beamwidth sweep (§6.2):
+IO rounds vs recall as W grows — hops drop ~W-fold while recall holds — and
+the multi-tier fan-out sweep: system QPS vs RO-snapshot count, batched
+(one vmapped call over stacked tiers) vs the sequential per-tier loop."""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
 from repro.core.index import brute_force, recall_at_k
 from repro.core.lti import build_lti, search_lti
 from repro.core.merge import streaming_merge
+from repro.core.system import bootstrap_system
 
-from .common import dataset, default_cfg, default_pq, emit, queryset, timed
+from .common import (dataset, default_cfg, default_pq, emit, queryset, timed,
+                     write_bench_json)
 
 
 def beam_sweep(lti, cfg, q, widths=(1, 2, 4), k=5, tag="fig7_beam"):
@@ -31,7 +36,51 @@ def beam_sweep(lti, cfg, q, widths=(1, 2, 4), k=5, tag="fig7_beam"):
         base_hops = base_hops or h
         emit(f"{tag}_W{W}", secs,
              f"hops={h:.1f} speedup={base_hops / h:.2f}x "
-             f"cmps={float(cmps.mean()):.0f} recall={rec:.4f}")
+             f"cmps={float(cmps.mean()):.0f} recall={rec:.4f}",
+             W=W, hops=h, cmps=float(cmps.mean()), recall=rec,
+             hop_speedup=base_hops / h)
+
+
+def fanout_sweep(quick: bool = False, tag: str = "fanout"):
+    """System QPS vs RO-snapshot count, batched vs sequential fan-out.
+
+    The batched path runs all temp tiers in ONE vmapped device call, so its
+    latency should be near-flat in tier count while the sequential loop
+    degrades linearly — the ROADMAP's open fan-out item, quantified.
+    (Starts at 2 tiers: a single temp tier has no fan-out to batch, so the
+    engine takes the plain per-tier path under either setting.)
+    """
+    dim = 16 if quick else 24
+    per_tier = 96
+    nq = 16
+    icfg = dict(capacity=4096, dim=dim, R=20, L_build=24, L_search=32,
+                alpha=1.2)
+    tiers = (2, 4) if quick else (2, 4, 8)
+    base = dataset(256, dim, seed=3)
+    q = queryset(nq, dim, seed=4)
+    for n_tiers in tiers:
+        results = {}
+        for batched in (True, False):
+            sys_cfg = SystemConfig(
+                index=IndexConfig(**icfg),
+                pq=PQConfig(dim=dim, m=8, ksub=32, kmeans_iters=3),
+                ro_snapshot_points=per_tier, merge_threshold=10**9,
+                temp_capacity=per_tier * 2, insert_batch=32,
+                batch_fanout=batched)
+            sys_ = bootstrap_system(base, np.arange(len(base)), sys_cfg)
+            stream = dataset(per_tier * n_tiers, dim, seed=5)
+            for i, v in enumerate(stream):
+                sys_.insert(10_000 + i, v)
+            sys_.search(q, k=5)                     # warm the jit cache
+            (_, _), secs = timed(lambda: sys_.search(q, k=5), repeats=3)
+            results[batched] = secs
+            mode = "batched" if batched else "sequential"
+            emit(f"{tag}_T{n_tiers}_{mode}", secs,
+                 f"qps={nq / secs:.0f} ro_tiers={len(sys_.ro)}",
+                 n_tiers=n_tiers, mode=mode, qps=nq / secs)
+        emit(f"{tag}_T{n_tiers}_speedup", results[False] - results[True],
+             f"batched_over_sequential={results[False] / results[True]:.2f}x",
+             n_tiers=n_tiers, speedup=results[False] / results[True])
 
 
 def main(quick: bool = False):
@@ -51,9 +100,10 @@ def main(quick: bool = False):
         s()  # warm the jit cache
         _, secs = timed(s, repeats=3)
         emit(f"fig7_search_batch_{b}", secs,
-             f"qps={b / secs:.0f}")
+             f"qps={b / secs:.0f}", batch=b, qps=b / secs)
 
     beam_sweep(lti, cfg, queryset(64), widths=(1, 2) if quick else (1, 2, 4))
+    fanout_sweep(quick)
 
     rng = np.random.default_rng(1)
     n_chg = n // 10
@@ -71,7 +121,10 @@ def main(quick: bool = False):
 
         _, secs = timed(m)
         emit(f"fig7_merge_block_{blk}", secs,
-             f"updates_per_sec={2 * n_chg / secs:.0f}")
+             f"updates_per_sec={2 * n_chg / secs:.0f}",
+             block=blk, updates_per_sec=2 * n_chg / secs)
+
+    write_bench_json("throughput", quick=quick, n=n)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,14 @@
-"""Shared benchmark utilities (CPU-scale datasets + recall measurement)."""
+"""Shared benchmark utilities (CPU-scale datasets + recall measurement).
+
+Every ``emit`` both prints the legacy CSV line and appends a structured
+record; ``write_bench_json`` dumps the run as ``BENCH_<name>.json`` so the
+perf trajectory is machine-readable (CI archives these as artifacts).
+"""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax.numpy as jnp
@@ -54,5 +62,35 @@ def timed(fn, *args, repeats=1, **kw):
     return out, (time.perf_counter() - t0) / repeats
 
 
-def emit(name: str, seconds: float, derived: str = ""):
+_RECORDS: list[dict] = []
+
+
+def emit(name: str, seconds: float, derived: str = "", **metrics):
+    """Print the legacy CSV line AND record a structured entry.
+
+    ``metrics`` are free-form numeric fields (hops, cmps, recall, qps, ...)
+    that land verbatim in the JSON record.
+    """
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    _RECORDS.append({"name": name, "seconds": seconds,
+                     "derived": derived, **metrics})
+
+
+def write_bench_json(bench: str, out_dir: str | None = None, **meta) -> str:
+    """Dump the records collected so far as ``BENCH_<bench>.json``."""
+    import jax
+    path = os.path.join(out_dir or os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), f"BENCH_{bench}.json")
+    payload = {
+        "bench": bench,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "unix_time": time.time(),
+        **meta,
+        "records": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path} ({len(_RECORDS)} records)", flush=True)
+    _RECORDS.clear()
+    return path

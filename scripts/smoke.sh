@@ -28,6 +28,28 @@ cfg = IndexConfig(capacity=2 * n, dim=dim, R=20, L_build=24, L_search=32,
                   alpha=1.2, use_kernel=True)   # force the Pallas ops path
 lti = build_lti(dataset(n, dim), cfg, default_pq(dim), batch=64)
 beam_sweep(lti, cfg, queryset(16, dim), widths=(1, 4), tag="smoke_beam")
+
+# Fused frontier_select: Pallas (interpret) must match the jnp contract
+# bit-for-bit on an engine-shaped input, including INVALID-padded lanes.
+from repro.kernels import ops
+rng = np.random.default_rng(0)
+L, K, V, W = 16, 24, 30, 4
+cand_i = jnp.asarray(np.concatenate([rng.permutation(100)[:8],
+                                     np.full(L - 8, -1)]).astype(np.int32))
+cand_d = jnp.asarray(np.concatenate([np.sort(rng.random(8)),
+                                     np.full(L - 8, np.inf)]).astype(np.float32))
+new_i = jnp.asarray(np.concatenate([200 + rng.permutation(100)[:12],
+                                    np.full(K - 12, -1)]).astype(np.int32))
+new_d = jnp.asarray(np.concatenate([rng.random(12),
+                                    np.full(K - 12, np.inf)]).astype(np.float32))
+vis_i = jnp.full((V,), -1, jnp.int32).at[0].set(cand_i[0])
+vis_d = jnp.full((V,), jnp.inf, jnp.float32).at[0].set(cand_d[0])
+a = ops.frontier_select(cand_i, cand_d, new_i, new_d, vis_i, vis_d,
+                        jnp.int32(1), W=W, max_visits=V, use_kernel=True)
+b = ops.frontier_select(cand_i, cand_d, new_i, new_d, vis_i, vis_d,
+                        jnp.int32(1), W=W, max_visits=V, use_kernel=False)
+for x, y in zip(a, b):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 print(f"# kernel-path smoke ok in {time.time() - t0:.1f}s")
 PY
 

@@ -90,6 +90,18 @@ class SystemConfig:
     merge_block: int = 1024       # nodes per sequential block pass ("SSD block")
     rerank: bool = True           # exact rerank of the final candidate list
     wal_dir: Optional[str] = None
+    # Durability (§5.6): when set, every merge saves a snapshot here BEFORE
+    # truncating the WAL, so snapshot + log-suffix always reconstructs the
+    # full state.  Without it the log is never truncated (truncating with no
+    # covering snapshot would lose the pre-merge records on crash).
+    snapshot_dir: Optional[str] = None
+    # Query engine (paper §5.2 fan-out).
+    batch_fanout: bool = True     # one vmapped search over all temp tiers
+    #   (False: sequential per-tier loop — the bit-parity oracle)
+    background_merge: bool = False  # threshold merges run on a worker thread
+    #   so inserts never stall on a foreground StreamingMerge
+    autotune_beam: bool = False   # pick W per batch from the hop/cmp trade-off
+    beam_width_candidates: tuple = (1, 2, 4, 8)
 
 
 # The paper's operating point for the billion-scale deployment (§6.2).

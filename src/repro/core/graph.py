@@ -54,6 +54,35 @@ def empty_graph(cfg: IndexConfig) -> GraphState:
     )
 
 
+def pad_graph(state: GraphState, capacity: int) -> GraphState:
+    """Grow a graph to ``capacity`` slots (new slots inert: inactive,
+    INVALID-adjacent, zero vectors).  Searches over the padded graph are
+    bit-identical to the original — padding slots are never navigable."""
+    if state.capacity == capacity:
+        return state
+    if state.capacity > capacity:
+        raise ValueError(f"cannot shrink graph {state.capacity} -> {capacity}")
+    extra = capacity - state.capacity
+    return state._replace(
+        vectors=jnp.concatenate(
+            [state.vectors,
+             jnp.zeros((extra, state.dim), state.vectors.dtype)]),
+        adjacency=jnp.concatenate(
+            [state.adjacency, jnp.full((extra, state.R), INVALID, jnp.int32)]),
+        active=jnp.concatenate([state.active, jnp.zeros((extra,), bool)]),
+        deleted=jnp.concatenate([state.deleted, jnp.zeros((extra,), bool)]),
+    )
+
+
+def stack_graphs(states: list[GraphState]) -> GraphState:
+    """Stack graphs on a new leading tier axis, padding each to the largest
+    capacity.  The result is a GraphState pytree with [T, ...] leaves, ready
+    for a vmapped multi-tier search (``index.search_tiers``)."""
+    cap = max(s.capacity for s in states)
+    padded = [pad_graph(s, cap) for s in states]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+
+
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:
     """Index of the (sampled) medoid among ``mask``-active rows.
 

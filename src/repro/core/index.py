@@ -54,6 +54,17 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
     return st._replace(adjacency=adjacency)
 
 
+def _search_impl(state: GraphState, queries: jax.Array, cfg: IndexConfig,
+                 *, k: int, L: int, beam_width: Optional[int]):
+    res = beam_search(state.adjacency, state.active, state.start, queries,
+                      FullPrecisionBackend(state.vectors),
+                      L=L, max_visits=cfg.visits_bound(L),
+                      beam_width=beam_width or cfg.beam_width,
+                      use_kernel=cfg.kernel_enabled())
+    ids, d = topk_results(res, k, state.active & ~state.deleted)
+    return ids, d, res.n_hops, res.n_cmps
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "beam_width"))
 def search(state: GraphState, queries: jax.Array, cfg: IndexConfig,
            *, k: int, L: int, beam_width: Optional[int] = None):
@@ -62,13 +73,26 @@ def search(state: GraphState, queries: jax.Array, cfg: IndexConfig,
     ``hops`` counts IO rounds: with ``beam_width`` W each round expands up to
     W frontier nodes, so hops drop ~W-fold vs the W=1 classic search.
     """
-    res = beam_search(state.adjacency, state.active, state.start, queries,
-                      FullPrecisionBackend(state.vectors),
-                      L=L, max_visits=cfg.visits_bound(L),
-                      beam_width=beam_width or cfg.beam_width,
-                      use_kernel=cfg.kernel_enabled())
-    ids, d = topk_results(res, k, state.active & ~state.deleted)
-    return ids, d, res.n_hops, res.n_cmps
+    return _search_impl(state, queries, cfg, k=k, L=L, beam_width=beam_width)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "beam_width"))
+def search_tiers(states: GraphState, queries: jax.Array, cfg: IndexConfig,
+                 *, k: int, L: int, beam_width: Optional[int] = None):
+    """Multi-tier fan-out: one vmapped search over T stacked graphs.
+
+    ``states`` is a GraphState pytree with [T, ...] leaves (from
+    ``graph.stack_graphs``); every tier is searched with the same query
+    batch in a single device step, so wall-clock no longer scales linearly
+    in the number of RO snapshots.  Returns (ids [T,B,k], dists [T,B,k],
+    hops [T,B], cmps [T,B]) — per-lane results bit-identical to running
+    ``search`` tier by tier.
+    """
+    def one(st):
+        return _search_impl(st, queries, cfg, k=k, L=L,
+                            beam_width=beam_width)
+
+    return jax.vmap(one)(states)
 
 
 def build(vectors: np.ndarray | jax.Array, cfg: IndexConfig,

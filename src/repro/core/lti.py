@@ -4,6 +4,13 @@ An LTI is a FreshVamana graph whose *navigation* distances come from PQ codes
 (the only per-point data kept in fast memory; ~32B/point), with full-precision
 vectors resident in the capacity tier ("SSD" = pod HBM here) used only for the
 final exact rerank of the candidate list — exactly DiskANN's search recipe.
+
+``search_lti`` rides the fused beam engine (``core.search``): each IO round
+is one batched ADC distance call plus one ``frontier_select`` launch.  In the
+system fan-out (§5.2) the LTI is queried alongside the batched temp-tier
+search; its (hops, cmps) counters are what the beam-width autotuner
+(``core.autotune``) calibrates against, since the LTI is the tier whose IO
+rounds model the paper's SSD round trips.
 """
 from __future__ import annotations
 

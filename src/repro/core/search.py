@@ -31,9 +31,17 @@ Two implementations ship here: ``FullPrecisionBackend`` (exact squared-L2
 over stored vectors) and ``PQBackend`` (asymmetric distance over PQ codes).
 With ``use_kernel=True`` both dispatch their batched gather-and-score to the
 Pallas wrappers in ``repro.kernels.ops`` (``l2_distances`` / ``adc_distances``)
-on padded fixed-shape batches, and the candidate-list merge goes through
-``block_topk``; with ``use_kernel=False`` the pure-jnp reference path is used
-(bit-identical to the pre-beam implementation at W=1).
+on padded fixed-shape batches; with ``use_kernel=False`` the pure-jnp
+reference path is used (bit-identical to the pre-beam implementation at W=1).
+
+Each IO round pays exactly TWO device steps: the batched distance call, and
+one fused ``frontier_select`` launch (``kernels.frontier_select``) that
+merges the W*R fresh neighbors into the candidate list (stable top-L),
+recomputes the open mask against the visited set, picks the next W-wide
+frontier, and appends it to the visited arrays.  The pre-fusion engine paid
+three separate steps per round (``block_topk`` merge, membership recompute,
+``argsort`` frontier pick); the fused step is bit-identical to that sequence
+(the jnp reference in ``kernels.ref.frontier_select_ref`` is the contract).
 """
 from __future__ import annotations
 
@@ -140,40 +148,40 @@ def _search_one(
     vis_ids = jnp.full((max_visits,), INVALID, jnp.int32)
     vis_d = jnp.full((max_visits,), jnp.inf, jnp.float32)
 
-    def open_mask(cand_ids, cand_d, vis_ids):
-        # Unexpanded == not a member of the visited set (the list is kept
-        # duplicate-free, so membership is exactly the old expanded flag).
-        # Computed once per round (at merge time) and carried in the state.
-        in_vis = (cand_ids[:, None] == vis_ids[None, :]).any(axis=1)
-        return (cand_ids >= 0) & jnp.isfinite(cand_d) & ~in_vis
+    def step(cand_ids, cand_d, new_ids, new_d, vis_ids, vis_d, vis_cnt):
+        # Fused round step: merge the K fresh neighbors into the candidate
+        # list (stable top-L), pick the next W-wide open frontier, and append
+        # it to the visited arrays — ONE kernel launch when use_kernel (the
+        # old path paid block_topk + membership + argsort separately).
+        return ops.frontier_select(cand_ids, cand_d, new_ids, new_d,
+                                   vis_ids, vis_d, vis_cnt, W=W,
+                                   max_visits=max_visits,
+                                   use_kernel=use_kernel)
 
-    state = (cand_ids, cand_d, open_mask(cand_ids, cand_d, vis_ids),
-             vis_ids, vis_d, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    # Round 0: no fresh neighbors yet — the step just picks the start node as
+    # the initial frontier and marks it visited.
+    empty_i = jnp.full((K,), INVALID, jnp.int32)
+    empty_d = jnp.full((K,), jnp.inf, jnp.float32)
+    cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt = step(
+        cand_ids, cand_d, empty_i, empty_d, vis_ids, vis_d, jnp.int32(0))
+
+    state = (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
+             jnp.int32(0), jnp.int32(0))
 
     def cond(s):
-        _, _, open_, _, _, vis_cnt, _, _ = s
-        return jnp.any(open_) & (vis_cnt < max_visits)
+        f_ids = s[2]
+        # The step only emits frontier entries while open candidates and
+        # visit budget remain, so the empty frontier IS the stop condition.
+        return jnp.any(f_ids >= 0)
 
     def body(s):
-        cand_ids, cand_d, open_, vis_ids, vis_d, vis_cnt, n_cmps, n_hops = s
-        # --- frontier: the W closest open candidates (list is sorted) -------
-        allowed = jnp.minimum(W, max_visits - vis_cnt)
-        rank = jnp.cumsum(open_.astype(jnp.int32)) - 1
-        take = open_ & (rank < allowed)
-        n_take = take.sum(dtype=jnp.int32)
-        fpos = jnp.argsort(~take, stable=True)[:W]         # open slots first
-        fvalid = take[fpos]
-        fids = jnp.where(fvalid, cand_ids[fpos], INVALID)
-        fd = jnp.where(fvalid, cand_d[fpos], jnp.inf)
-        wpos = jnp.where(fvalid, vis_cnt + jnp.arange(W, dtype=jnp.int32),
-                         max_visits)
-        vis_ids = vis_ids.at[wpos].set(fids, mode="drop")
-        vis_d = vis_d.at[wpos].set(fd, mode="drop")
-        vis_cnt = vis_cnt + n_take
+        (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
+         n_cmps, n_hops) = s
+        fvalid = f_ids >= 0
 
         # --- one-shot W x R adjacency gather (one IO round) -----------------
         nbrs = jnp.where(fvalid[:, None],
-                         adjacency[jnp.maximum(fids, 0)], INVALID).reshape(K)
+                         adjacency[jnp.maximum(f_ids, 0)], INVALID).reshape(K)
         ok = (nbrs >= 0) & navigable[jnp.maximum(nbrs, 0)]
         in_list = (nbrs[:, None] == cand_ids[None, :]).any(axis=1)
         in_vis = (nbrs[:, None] == vis_ids[None, :]).any(axis=1)
@@ -191,19 +199,14 @@ def _search_one(
                                use_kernel=use_kernel)
         n_cmps = n_cmps + new.sum(dtype=jnp.int32)
 
-        # --- merge: one top-L over [L + W*R] ---------------------------------
-        all_ids = jnp.concatenate([cand_ids, jnp.where(new, nbrs, INVALID)])
-        all_d = jnp.concatenate([cand_d, nd])
-        if use_kernel:
-            md, mi = ops.block_topk(all_d[None], all_ids, L)
-            cand_d, cand_ids = md[0], mi[0]
-        else:
-            order = jnp.argsort(all_d, stable=True)[:L]
-            cand_ids, cand_d = all_ids[order], all_d[order]
-        return (cand_ids, cand_d, open_mask(cand_ids, cand_d, vis_ids),
-                vis_ids, vis_d, vis_cnt, n_cmps, n_hops + 1)
+        # --- fused merge + next-frontier pick + visited update ---------------
+        cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt = step(
+            cand_ids, cand_d, jnp.where(new, nbrs, INVALID), nd,
+            vis_ids, vis_d, vis_cnt)
+        return (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
+                n_cmps, n_hops + 1)
 
-    cand_ids, cand_d, _, vis_ids, vis_d, vis_cnt, n_cmps, n_hops = (
+    (cand_ids, cand_d, _, _, vis_ids, vis_d, vis_cnt, n_cmps, n_hops) = (
         jax.lax.while_loop(cond, body, state))
     return SearchResult(cand_ids, cand_d, vis_ids, vis_d,
                         n_hops, n_cmps, vis_cnt)

@@ -5,7 +5,22 @@ JAX's functional state makes the paper's trickiest concurrency concern —
 searching while a merge is underway — safe by construction: a merge produces a
 *new* LTI value while searches keep reading the old immutable arrays; the swap
 is a single reference assignment (the paper needs careful SSD double-buffering
-for the same effect).
+for the same effect).  The (LTI, external-id table) pair is swapped as ONE
+tuple so a concurrent search never pairs a new graph with a stale table, and
+the RO snapshots being merged stay searchable until that swap lands — a
+search during a merge sees every point in exactly one consistent place (or
+transiently in two, which the cross-tier dedupe in ``_aggregate`` resolves).
+
+Query fan-out (§5.2): a query must consult the LTI *and* every TempIndex.
+The frozen RO snapshots share a capacity and a distance backend, so they are
+searched as ONE vmapped device call over a stacked graph pytree
+(``index.search_tiers``); the stack is immutable between rollover/merge
+events and therefore cached, while the live RW tier (which mutates on every
+flush) takes the ordinary per-tier path.  The fan-out thus costs a constant
+number of device dispatches (LTI + RW + one batched RO call) however many
+snapshots accumulate, and on lane-parallel hardware search wall-clock stays
+near-flat in RO count.  ``SystemConfig.batch_fanout=False`` restores the
+fully sequential per-tier loop (the bit-parity oracle for tests).
 
 External ids are user-provided int64s; the system maps them to (tier, slot).
 """
@@ -22,14 +37,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import autotune
 from . import index as mem
 from . import pq as pqm
 from .config import IndexConfig, PQConfig, SystemConfig
 from .distance import INVALID
-from .graph import GraphState, empty_graph
+from .graph import GraphState, empty_graph, stack_graphs
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
-from .wal import WriteAheadLog, log_epoch, replay, truncate
+from .wal import WriteAheadLog, log_epoch, replay
 
 
 @dataclass
@@ -82,9 +98,11 @@ class FreshDiskANN:
             cb = pqm.PQCodebook(jnp.zeros(
                 (cfg.pq.m, cfg.pq.ksub, cfg.pq.dsub), jnp.float32))
             lti = LTIState(g, jnp.zeros((icfg.capacity, cfg.pq.m), jnp.uint8), cb)
-        self.lti = lti
-        self.lti_ext_ids = (lti_ext_ids if lti_ext_ids is not None
-                            else np.full(icfg.capacity, -1, np.int64))
+        # The LTI and its external-id table are read/swapped as ONE tuple so
+        # a search concurrent with a merge never mixes generations.
+        self._lti_pair: tuple[LTIState, np.ndarray] = (
+            lti, lti_ext_ids if lti_ext_ids is not None
+            else np.full(icfg.capacity, -1, np.int64))
         self.rw = self._new_temp()
         self.ro: list[_Temp] = []
         self.deleted_ext: set[int] = set()
@@ -99,32 +117,74 @@ class FreshDiskANN:
         self._wal_epoch: Optional[int] = None   # ... and of which log epoch
         self.stats = SystemStats()
         self._merge_lock = threading.Lock()
+        self._ro_lock = threading.Lock()     # guards self.ro mutations
+        # Guards the insert buffer and RW-tier mutations: the insert path
+        # and a background merge's snapshot (save -> _flush_inserts) would
+        # otherwise race on the buffer swap and on rw slot allocation.
+        # RLock: insert -> _flush_inserts and save -> _flush_inserts nest.
+        self._insert_lock = threading.RLock()
+        self._merge_inflight = 0             # staged points being merged now
         self._merge_thread: Optional[threading.Thread] = None
+        self._tuned_w: Optional[int] = None  # cached autotuned beam width
+        self._fanout_cache: Optional[tuple] = None  # (states, stacked pytree)
         self.wal: Optional[WriteAheadLog] = None
         if cfg.wal_dir:
             os.makedirs(cfg.wal_dir, exist_ok=True)
             self.wal = WriteAheadLog(
                 os.path.join(cfg.wal_dir, "wal.bin"), icfg.dim)
 
+    # The pair is the source of truth; the individual attributes remain for
+    # the non-concurrent paths (init, load, recover) and for inspection.
+    @property
+    def lti(self) -> LTIState:
+        return self._lti_pair[0]
+
+    @lti.setter
+    def lti(self, value: LTIState) -> None:
+        self._lti_pair = (value, self._lti_pair[1])
+
+    @property
+    def lti_ext_ids(self) -> np.ndarray:
+        return self._lti_pair[1]
+
+    @lti_ext_ids.setter
+    def lti_ext_ids(self, value: np.ndarray) -> None:
+        self._lti_pair = (self._lti_pair[0], value)
+
     # ------------------------------------------------------------------ API
     def insert(self, ext_id: int, vec: np.ndarray) -> None:
         """Route to the RW-TempIndex (paper §5.2); batched flush."""
         t0 = time.perf_counter()
-        if self.wal:
-            self.wal.log_insert(ext_id, vec)
-        self._insert_buf_id.append(int(ext_id))
-        self._insert_buf_v.append(np.asarray(vec, np.float32))
-        if len(self._insert_buf_id) >= self.cfg.insert_batch:
-            self._flush_inserts()
+        with self._insert_lock:
+            if self.wal:
+                self.wal.log_insert(ext_id, vec)
+            self._insert_buf_id.append(int(ext_id))
+            self._insert_buf_v.append(np.asarray(vec, np.float32))
+            # Re-insert revives the id immediately (not just at flush time),
+            # so `size` and the DeleteList agree while the point is buffered.
+            self.deleted_ext.discard(int(ext_id))
+            if len(self._insert_buf_id) >= self.cfg.insert_batch:
+                self._flush_inserts()
         self.stats.inserts += 1
         self.stats.record_latency(time.perf_counter() - t0)
         self._maybe_rollover()
 
     def delete(self, ext_id: int) -> None:
         """DeleteList append — O(1), no graph edits (paper §4.2)."""
-        if self.wal:
-            self.wal.log_delete(ext_id)
-        self.deleted_ext.add(int(ext_id))
+        with self._insert_lock:
+            if self.wal:
+                self.wal.log_delete(ext_id)
+            e = int(ext_id)
+            if e in self._insert_buf_id:
+                # The point only exists in the insert buffer: drop it there,
+                # or the next flush would revive the id (flush discards the
+                # delete to implement re-insert-after-delete) and invert the
+                # op order.
+                keep = [i for i, x in enumerate(self._insert_buf_id)
+                        if x != e]
+                self._insert_buf_id = [self._insert_buf_id[i] for i in keep]
+                self._insert_buf_v = [self._insert_buf_v[i] for i in keep]
+            self.deleted_ext.add(e)
         self.stats.deletes += 1
 
     def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
@@ -133,30 +193,119 @@ class FreshDiskANN:
         """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2).
 
         ``beam_width`` overrides the configured W for every per-tier search
-        in the fan-out (LTI and all TempIndices alike).
+        in the fan-out (LTI and all TempIndices alike); with
+        ``cfg.autotune_beam`` and no override, W comes from the cached
+        hop/cmp calibration (see ``core.autotune``).
+
+        The frozen RO snapshots are searched as one vmapped device call over
+        their stacked graphs (the stack stays cached until a rollover or
+        merge changes the RO set); the live RW tier takes the per-tier path
+        (its graph mutates on every flush, so stacking it would defeat the
+        cache).  Results are bit-identical to the fully sequential loop
+        (``cfg.batch_fanout=False``).
         """
         self._flush_inserts()
         L = L or self.cfg.index.L_search
-        W = beam_width or self.cfg.index.beam_width
+        if k > L:
+            raise ValueError(
+                f"search(k={k}, L={L}): k must be <= L — the candidate list "
+                f"holds only L entries, so more than L results cannot be "
+                f"returned; raise L or lower k")
+        W = beam_width or self._beam_width(queries)
         q = jnp.asarray(queries, jnp.float32)
         cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
         # Over-fetch so DeleteList filtering + cross-tier dedupe still leave k.
         kk = min(max(k * 2, k + 8), L)
-        if int(self.lti.graph.n_total) > 0:
-            ids, d, _, _ = search_lti(self.lti, q, self.cfg.index, k=kk, L=L,
+        # Capture order matters: RW before RO before LTI.  A concurrent
+        # rollover moves RW -> RO, and a concurrent merge moves RO -> LTI,
+        # so capturing each tier BEFORE its points' destination means an
+        # interleaved move lands the points in BOTH captures (the dedupe in
+        # _aggregate resolves that) rather than in neither (a gap).
+        rw = self.rw                             # single read
+        rw_t = rw if rw.n > 0 else None
+        with self._ro_lock:
+            ro_temps = [t for t in self.ro if t.n > 0]
+        lti, lti_table = self._lti_pair          # one consistent generation
+        if int(lti.graph.n_total) > 0:
+            ids, d, _, _ = search_lti(lti, q, self.cfg.index, k=kk, L=L,
                                       beam_width=W)
-            cands.append((self._map_ext(np.asarray(ids), self.lti_ext_ids),
+            cands.append((self._map_ext(np.asarray(ids), lti_table),
                           np.asarray(d)))
-        for t in [self.rw] + self.ro:
-            if t.n > 0:
-                ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
-                                          L=L, beam_width=W)
-                cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
-                              np.asarray(d)))
+        batched = (ro_temps if self.cfg.batch_fanout and len(ro_temps) >= 2
+                   else [])                      # frozen RO tiers only
+        sequential = ([rw_t] if rw_t is not None else []) + (
+            [] if batched else ro_temps)
+        for t in sequential:
+            ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
+                                      L=L, beam_width=W)
+            cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
+                          np.asarray(d)))
+        if batched:
+            # One fused fan-out over the frozen snapshots: stack their
+            # graphs (same capacity, so the stack is copy-only) and run
+            # every tier x query lane in a single vmapped search.
+            stacked = self._stacked_temps(batched)
+            ids, d, _, _ = mem.search_tiers(stacked, q, self.temp_cfg,
+                                            k=kk, L=L, beam_width=W)
+            ids_np, d_np = np.asarray(ids), np.asarray(d)
+            for ti, t in enumerate(batched):
+                cands.append((self._map_ext(ids_np[ti], t.ext_ids),
+                              d_np[ti]))
         self.stats.searches += len(queries)
         return self._aggregate(cands, k, queries.shape[0])
 
+    def _beam_width(self, queries: np.ndarray) -> int:
+        """Resolve W: autotuned (and cached until the next merge) or static."""
+        if not self.cfg.autotune_beam:
+            return self.cfg.index.beam_width
+        if self._tuned_w is None:
+            tuned = self._calibrate_beam(queries)
+            if tuned is None:          # no representative tier yet: don't
+                return self.cfg.index.beam_width   # cache the fallback
+            self._tuned_w = tuned
+        return self._tuned_w
+
+    def _calibrate_beam(self, queries: np.ndarray) -> Optional[int]:
+        """Probe the largest tier at each candidate W; pick by hop/cmp cost.
+
+        Returns None when no tier is big enough for the hop/cmp profile to
+        be representative (a handful of points terminates in 1-2 hops at
+        any W) — the caller then keeps using the static width WITHOUT
+        caching, so calibration re-runs once the index has grown.
+        """
+        L = self.cfg.index.L_search
+        probe = jnp.asarray(queries[:8], jnp.float32)
+        lti, _ = self._lti_pair
+        if int(lti.graph.n_total) >= L:
+            def run(W):
+                _, _, hops, cmps = search_lti(lti, probe, self.cfg.index,
+                                              k=1, L=L, beam_width=W)
+                return hops, cmps
+        elif self.rw.n >= L:
+            def run(W):
+                _, _, hops, cmps = mem.search(self.rw.state, probe,
+                                              self.temp_cfg, k=1, L=L,
+                                              beam_width=W)
+                return hops, cmps
+        else:
+            return None
+        points = autotune.measure_widths(run, self.cfg.beam_width_candidates)
+        return autotune.pick_beam_width(points)
+
     # ------------------------------------------------------------- plumbing
+    def _stacked_temps(self, temps: list) -> GraphState:
+        """The [T, ...] stacked graph pytree for the fan-out, cached by tier
+        identity (graph states are immutable values: a flush or rollover
+        replaces them, which drops the cache entry)."""
+        states = tuple(t.state for t in temps)
+        cached = self._fanout_cache
+        if (cached is not None and len(cached[0]) == len(states)
+                and all(a is b for a, b in zip(cached[0], states))):
+            return cached[1]
+        stacked = stack_graphs(list(states))
+        self._fanout_cache = (states, stacked)
+        return stacked
+
     def _new_temp(self) -> _Temp:
         return _Temp(empty_graph(self.temp_cfg),
                      np.full(self.cfg.temp_capacity, -1, np.int64))
@@ -205,6 +354,10 @@ class FreshDiskANN:
         return res_i.astype(np.int64), res_d.astype(np.float32)
 
     def _flush_inserts(self) -> None:
+        with self._insert_lock:
+            self._flush_inserts_locked()
+
+    def _flush_inserts_locked(self) -> None:
         if not self._insert_buf_id:
             return
         B = self.cfg.insert_batch
@@ -245,21 +398,35 @@ class FreshDiskANN:
             t.n += len(chunk_i)
 
     def _maybe_rollover(self) -> None:
-        if self.rw.n >= self.cfg.ro_snapshot_points:
-            self._flush_inserts()
-            frozen = self.rw
-            self.ro.append(frozen)
-            self.rw = self._new_temp()
-            # The frozen snapshot's points are now RO-resident: retag so the
-            # location map always names the tier a point actually lives in.
-            for slot in np.nonzero(frozen.ext_ids >= 0)[0]:
-                e = int(frozen.ext_ids[slot])
-                if self._ext_loc.get(e) == ("rw", int(slot)):
-                    self._ext_loc[e] = ("ro", int(slot))
-            self.stats.snapshots += 1
-        staged = sum(t.n for t in self.ro)
+        with self._insert_lock:
+            if self.rw.n >= self.cfg.ro_snapshot_points:
+                self._flush_inserts_locked()
+                frozen = self.rw
+                with self._ro_lock:
+                    self.ro.append(frozen)
+                self.rw = self._new_temp()
+                # The frozen snapshot's points are now RO-resident: retag so
+                # the location map always names the tier a point lives in.
+                for slot in np.nonzero(frozen.ext_ids >= 0)[0]:
+                    e = int(frozen.ext_ids[slot])
+                    if self._ext_loc.get(e) == ("rw", int(slot)):
+                        self._ext_loc[e] = ("ro", int(slot))
+                self.stats.snapshots += 1
+            # Points already being consumed by an in-flight background merge
+            # do not count toward the next threshold (they still sit in
+            # self.ro so searches see them, but a second merge must not
+            # re-stage them).  Read the RO list and the in-flight count
+            # together under _ro_lock — the merge updates them atomically
+            # under the same lock, and tearing the pair here would see the
+            # pre-trim list with a zeroed count and launch a spurious merge.
+            with self._ro_lock:
+                staged = sum(t.n for t in self.ro) - self._merge_inflight
+        # The merge itself runs OUTSIDE the insert lock (a foreground merge
+        # holding it would deadlock against a background merge's snapshot).
         if staged >= self.cfg.merge_threshold:
-            self.merge()
+            # With background_merge the insert path never stalls on the
+            # StreamingMerge (paper §5.3's "merge runs concurrently").
+            self.merge(background=self.cfg.background_merge)
 
     # -------------------------------------------------------------- merging
     def merge(self, background: bool = False) -> None:
@@ -279,60 +446,117 @@ class FreshDiskANN:
     def _merge_impl(self) -> None:
         with self._merge_lock:
             t0 = time.perf_counter()
-            ro, self.ro = self.ro, []
-            staged = sum(t.n for t in ro)
-            icfg = self.cfg.index
-            # Stage vectors + ids from the RO snapshots (skip re-deleted ones).
-            del_snapshot = set(self.deleted_ext)
-            vecs = np.zeros((max(staged, 1), icfg.dim), np.float32)
-            exts = np.full(max(staged, 1), -1, np.int64)
-            w = 0
-            for t in ro:
-                sl = np.nonzero(t.ext_ids >= 0)[0][:t.n]
-                v = np.asarray(t.state.vectors)[sl]
-                for s, row in zip(sl, v):
-                    e = int(t.ext_ids[s])
-                    if e in del_snapshot:
-                        continue
-                    vecs[w], exts[w] = row, e
-                    w += 1
-            valid = np.zeros(max(staged, 1), bool)
-            valid[:w] = True
-            # DeleteList restricted to LTI-resident points.
-            dmask = np.zeros(icfg.capacity, bool)
-            lti_ids = self.lti_ext_ids
-            if del_snapshot:
-                dl = np.asarray(sorted(del_snapshot), np.int64)
-                hit = np.isin(lti_ids, dl)
-                dmask[hit] = True
-            new_lti, stats = streaming_merge(
-                self.lti, jnp.asarray(vecs), jnp.asarray(valid),
-                jnp.asarray(dmask), icfg, self.cfg.pq,
-                insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block)
-            jax.block_until_ready(new_lti.graph.adjacency)
-            # Rebuild the external-id table: deleted rows out, new rows in
-            # (the merge reports the slot it assigned to each staged row).
-            new_ids = self.lti_ext_ids.copy()
-            new_ids[dmask] = -1
-            slots = np.asarray(stats.slots)
-            ok = valid & (slots >= 0)
-            for s, e in zip(slots[ok], exts[ok]):
-                new_ids[s] = e
-                self._ext_loc[e] = ("lti", int(s))
-            self.lti = new_lti
-            self.lti_ext_ids = new_ids
-            # Deletes consumed this cycle leave the DeleteList; deletes of
-            # never-merged temp points are consumed too (their points stayed
-            # out of the merge).
-            self.deleted_ext -= del_snapshot
-            if self.wal:
-                truncate(self.wal.path, icfg.dim, self.stats.merges + 1)
-            self.stats.merges += 1
-            self.stats.merge_seconds += time.perf_counter() - t0
+            # Snapshot the RO list but KEEP it searchable while the merge
+            # runs: its points leave self.ro only after the new LTI (which
+            # contains them) has been swapped in, so a concurrent search
+            # never observes a gap.  The brief window where a point exists in
+            # both the new LTI and an RO tier is resolved by the cross-tier
+            # dedupe in _aggregate.
+            with self._ro_lock:
+                ro = list(self.ro)
+                self._merge_inflight = sum(t.n for t in ro)
+            try:
+                self._merge_body(ro, t0)
+            finally:
+                # A failed merge must not leave the in-flight count set, or
+                # every future threshold check would under-count and no
+                # merge would ever run again.
+                self._merge_inflight = 0
+
+    def _merge_body(self, ro: list, t0: float) -> None:
+        staged = sum(t.n for t in ro)
+        icfg = self.cfg.index
+        # Stage vectors + ids from the RO snapshots (skip re-deleted ones).
+        del_snapshot = set(self.deleted_ext)
+        vecs = np.zeros((max(staged, 1), icfg.dim), np.float32)
+        exts = np.full(max(staged, 1), -1, np.int64)
+        w = 0
+        for t in ro:
+            sl = np.nonzero(t.ext_ids >= 0)[0][:t.n]
+            v = np.asarray(t.state.vectors)[sl]
+            for s, row in zip(sl, v):
+                e = int(t.ext_ids[s])
+                if e in del_snapshot:
+                    continue
+                vecs[w], exts[w] = row, e
+                w += 1
+        valid = np.zeros(max(staged, 1), bool)
+        valid[:w] = True
+        # Remove from the LTI: DeleteList members AND rows superseded by a
+        # staged re-insert — after delete(e) + insert(e, v2), e's old LTI
+        # row still holds the pre-delete vector; without this it would
+        # survive the merge as a stale duplicate and searches could return
+        # e ranked by the OLD vector.
+        dmask = np.zeros(icfg.capacity, bool)
+        lti_ids = self.lti_ext_ids
+        if del_snapshot:
+            dl = np.asarray(sorted(del_snapshot), np.int64)
+            dmask[np.isin(lti_ids, dl)] = True
+        if w:
+            dmask[np.isin(lti_ids, exts[:w])] = True
+        new_lti, stats = streaming_merge(
+            self.lti, jnp.asarray(vecs), jnp.asarray(valid),
+            jnp.asarray(dmask), icfg, self.cfg.pq,
+            insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block)
+        jax.block_until_ready(new_lti.graph.adjacency)
+        # Rebuild the external-id table: deleted rows out, new rows in
+        # (the merge reports the slot it assigned to each staged row).
+        new_ids = self.lti_ext_ids.copy()
+        for e in new_ids[dmask]:
+            e = int(e)
+            if e >= 0 and self._ext_loc.get(e, ("?",))[0] == "lti":
+                del self._ext_loc[e]     # removed from the LTI this cycle
+        new_ids[dmask] = -1
+        slots = np.asarray(stats.slots)
+        ok = valid & (slots >= 0)
+        for s, e in zip(slots[ok], exts[ok]):
+            new_ids[s] = e
+            self._ext_loc[e] = ("lti", int(s))
+        # One-shot generation swap (graph + ext table together), then
+        # retire exactly the RO snapshots this merge consumed — anything
+        # appended by a concurrent rollover stays.
+        self._lti_pair = (new_lti, new_ids)
+        with self._ro_lock:
+            self.ro = self.ro[len(ro):]
+            self._merge_inflight = 0
+        self._tuned_w = None       # the graph changed: re-calibrate W
+        self._fanout_cache = None  # retired RO stacks must not stay resident
+        # A delete may leave the DeleteList only when NO copy of the id
+        # survives the merge anywhere — LTI residents left via the dmask
+        # pass and merged-RO residents were skipped at staging, but a
+        # delete of a point still living in the RW tier (or an RO
+        # snapshot that rolled over after this merge began, or the
+        # insert buffer) must SURVIVE, or the live copy would be revived.
+        alive = self._live_ext_ids()
+        dl = np.fromiter(del_snapshot, np.int64, len(del_snapshot))
+        self.deleted_ext -= set(dl[~np.isin(dl, alive)].tolist())
+        if self.wal:
+            if self.cfg.snapshot_dir:
+                # Durability invariant (§5.6): snapshot BEFORE truncate, so
+                # snapshot + log-suffix always covers the full state.  One
+                # _insert_lock hold makes the pair atomic against concurrent
+                # WAL writers — a record logged between the snapshot and the
+                # truncation would otherwise be durable nowhere.  Restart
+                # goes THROUGH the live handle: truncating the file under an
+                # open positional handle would leave a zero-hole at its
+                # stale offset on the next append.
+                with self._insert_lock:
+                    self._save_locked(
+                        os.path.join(self.cfg.snapshot_dir,
+                                     f"merge_{self.stats.merges + 1}"))
+                    self.wal.restart(self.stats.merges + 1)
+            # else: keep the whole log — with no snapshot covering the
+            # pre-merge records, truncating would lose them on crash.
+        self.stats.merges += 1
+        self.stats.merge_seconds += time.perf_counter() - t0
 
     # ------------------------------------------------------------ snapshots
     def save(self, path: str) -> None:
-        self._flush_inserts()     # buffered inserts must land in the temps
+        with self._insert_lock:   # freeze buffer + RW tier while we snapshot
+            self._save_locked(path)
+
+    def _save_locked(self, path: str) -> None:
+        self._flush_inserts_locked()  # buffered inserts must land in temps
         os.makedirs(path, exist_ok=True)
         np.savez_compressed(
             os.path.join(path, "lti.npz"),
@@ -387,10 +611,23 @@ class FreshDiskANN:
         sys._wal_epoch = meta.get("wal_epoch")
         return sys
 
+    def latest_snapshot(self) -> Optional[str]:
+        """The most recent merge snapshot under ``cfg.snapshot_dir``."""
+        d = self.cfg.snapshot_dir
+        if not d or not os.path.isdir(d):
+            return None
+        snaps = [s for s in os.listdir(d) if s.startswith("merge_")]
+        if not snaps:
+            return None
+        return os.path.join(d, max(snaps, key=lambda s: int(s.split("_")[1])))
+
     def recover(self, snapshot_path: Optional[str] = None) -> int:
-        """Crash recovery (§5.6): restore the latest snapshot (when given),
-        then replay the WAL over it.  Returns the number of records replayed."""
+        """Crash recovery (§5.6): restore the latest snapshot (when given,
+        else the newest merge snapshot under ``cfg.snapshot_dir``), then
+        replay the WAL over it.  Returns the number of records replayed."""
         start = None
+        if snapshot_path is None:
+            snapshot_path = self.latest_snapshot()
         if snapshot_path:
             restored = FreshDiskANN.load(snapshot_path, self.cfg)
             if restored.wal:              # keep only our own WAL handle open
@@ -433,10 +670,33 @@ class FreshDiskANN:
     # -------------------------------------------------------------- helpers
     @property
     def size(self) -> int:
-        live = sum(t.n for t in [self.rw] + self.ro)
-        live += len(self._insert_buf_id)     # not yet flushed to the RW index
-        return (int(np.sum(self.lti_ext_ids >= 0)) + live
-                - len(self.deleted_ext & set(self._ext_loc)))
+        """Number of DISTINCT live external ids.
+
+        Counts ids, not copies: after a delete + re-insert an id may
+        transiently exist in the LTI *and* a TempIndex (or twice in one
+        tier) until a merge retires the stale copy — searches dedupe those,
+        and so does this accounting.
+        """
+        uniq = self._live_ext_ids()
+        # .copy() is atomic under the GIL — a background merge shrinking the
+        # set between len() and iteration would otherwise break fromiter.
+        deleted = self.deleted_ext.copy()
+        if not deleted:
+            return len(uniq)
+        dl = np.fromiter(deleted, np.int64, len(deleted))
+        return int(len(uniq) - np.isin(uniq, dl).sum())
+
+    def _live_ext_ids(self) -> np.ndarray:
+        """Sorted unique external ids with a copy in ANY tier or the insert
+        buffer (before DeleteList filtering).  Shared by ``size`` and the
+        merge's delete-retirement check so the two always agree.  Stays in
+        numpy end to end — no per-id Python object churn at scale."""
+        parts = [self.lti_ext_ids] + [t.ext_ids for t in [self.rw] + self.ro]
+        buf = list(self._insert_buf_id)      # atomic snapshot vs. inserts
+        if buf:                              # not yet flushed to the RW index
+            parts.append(np.asarray(buf, np.int64))
+        arr = np.concatenate(parts)
+        return np.unique(arr[arr >= 0])
 
 
 def bootstrap_system(vectors: np.ndarray, ext_ids: np.ndarray,

@@ -27,7 +27,12 @@ class WriteAheadLog:
                  fsync: bool = False):
         self.path, self.dim, self.fsync = path, dim, fsync
         exists = os.path.exists(path) and os.path.getsize(path) > 0
-        self._f = open(path, "ab" if exists else "wb")
+        # ALWAYS append mode (O_APPEND): every write lands at the real EOF
+        # even if the file is replaced underneath the handle.  A positional
+        # ("wb") handle would keep writing at its own stale offset after an
+        # external truncation, leaving a zero-hole that replay would parse
+        # as garbage records.
+        self._f = open(path, "ab")
         if not exists:
             self._f.write(_HDR.pack(MAGIC, dim, start_seqno))
             self._f.flush()
@@ -45,6 +50,13 @@ class WriteAheadLog:
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
+
+    def restart(self, start_seqno: int) -> None:
+        """Start a fresh log epoch THROUGH this handle (close-truncate-reopen)
+        — the only safe way to truncate a log that is still being written."""
+        self._f.close()
+        truncate(self.path, self.dim, start_seqno)
+        self._f = open(self.path, "ab")
 
     def close(self):
         self._f.close()

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused beam-search round step ("frontier select").
+
+One launch per IO round replaces the three separate device steps the search
+loop used to pay (candidate-list merge via ``block_topk``, open-mask
+recompute, frontier pick via ``argsort``):
+
+  1. **merge** — stable top-L selection over the concatenation of the sorted
+     candidate list (L lanes) and the freshly scored neighbors (K lanes),
+     by L rounds of (min, first-column, mask) — the same VPU-only scheme as
+     ``block_topk``.
+  2. **open mask** — membership test of every merged entry against the
+     visited set (one [L, V] broadcast compare).
+  3. **frontier pick** — the first ``min(W, max_visits - vis_cnt)`` open
+     entries in ascending-distance order (the merged list is sorted, so rank
+     = cumsum of the open mask).
+  4. **visited update** — the frontier is appended to the visited arrays at
+     positions ``vis_cnt ..`` (a vectorized one-hot scatter).
+
+``vis_cnt`` is *derived* from visited-array occupancy (the count of valid
+ids): the engine appends only valid ids contiguously from slot 0, so
+occupancy == vis_cnt by construction, and the kernel needs no scalar operand
+(which keeps it trivially vmappable over query lanes).
+
+All rows are [1, N] lane vectors padded to 128 multiples by the ops wrapper;
+padding lanes carry (INVALID, +inf) and are inert in every step above.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _frontier_kernel(d_ref, i_ref, vis_i_ref, vis_d_ref,
+                     m_d_ref, m_i_ref, f_d_ref, f_i_ref,
+                     ov_i_ref, ov_d_ref, *, L: int, W: int, max_visits: int):
+    all_d = d_ref[...].astype(jnp.float32)          # [1, M]
+    all_i = i_ref[...]                              # [1, M]
+    M = all_d.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, M), 1)
+
+    # -- 1. stable top-L merge (selection scheme shared with block_topk) ----
+    def select(j, carry):
+        cd, out_d, out_i = carry
+        m = jnp.min(cd, axis=1, keepdims=True)                  # [1, 1]
+        is_min = cd == m
+        col = jnp.min(jnp.where(is_min, cols, M), axis=1, keepdims=True)
+        sel = cols == col
+        picked_i = jnp.sum(jnp.where(sel, all_i, 0), axis=1)
+        out_d = jax.lax.dynamic_update_slice(out_d, m, (0, j))
+        out_i = jax.lax.dynamic_update_slice(
+            out_i, jnp.where(jnp.isfinite(m[:, 0]), picked_i,
+                             -1)[:, None].astype(jnp.int32), (0, j))
+        cd = jnp.where(sel, jnp.inf, cd)
+        return cd, out_d, out_i
+
+    init = (all_d, jnp.full((1, L), jnp.inf, jnp.float32),
+            jnp.full((1, L), -1, jnp.int32))
+    _, m_d, m_i = jax.lax.fori_loop(0, L, select, init)
+    m_d_ref[...] = m_d
+    m_i_ref[...] = m_i
+
+    # -- 2. open mask: merged entry valid, finite, and not yet visited ------
+    vis_i = vis_i_ref[...]                          # [1, Vp]
+    vis_d = vis_d_ref[...]
+    Vp = vis_i.shape[1]
+    in_vis = (m_i.reshape(L, 1) == vis_i.reshape(1, Vp)).any(
+        axis=1).reshape(1, L)
+    open_ = (m_i >= 0) & jnp.isfinite(m_d) & ~in_vis            # [1, L]
+
+    # -- 3. frontier: first `allowed` open entries (list is sorted) ---------
+    vis_cnt = jnp.sum((vis_i >= 0).astype(jnp.int32))
+    allowed = jnp.minimum(W, max_visits - vis_cnt)
+    rank = jnp.cumsum(open_.astype(jnp.int32), axis=1) - 1      # [1, L]
+    take = open_ & (rank < allowed)
+    wiota = jax.lax.broadcasted_iota(jnp.int32, (L, W), 1)
+    fm = take.reshape(L, 1) & (rank.reshape(L, 1) == wiota)     # [L, W]
+    fvalid = fm.any(axis=0).reshape(1, W)
+    f_i = jnp.where(fvalid,
+                    jnp.sum(jnp.where(fm, m_i.reshape(L, 1), 0),
+                            axis=0).reshape(1, W), -1)
+    f_d = jnp.where(fvalid,
+                    jnp.sum(jnp.where(fm, m_d.reshape(L, 1), 0.0),
+                            axis=0).reshape(1, W), jnp.inf)
+    f_i_ref[...] = f_i
+    f_d_ref[...] = f_d
+
+    # -- 4. visited append: one-hot scatter at slots vis_cnt.. --------------
+    viota = jax.lax.broadcasted_iota(jnp.int32, (Vp, W), 0)
+    slot = vis_cnt + jax.lax.broadcasted_iota(jnp.int32, (Vp, W), 1)
+    match = (viota == slot) & jnp.broadcast_to(fvalid, (Vp, W))
+    written = match.any(axis=1).reshape(1, Vp)
+    add_i = jnp.sum(jnp.where(match, jnp.broadcast_to(f_i, (Vp, W)), 0),
+                    axis=1).reshape(1, Vp)
+    add_d = jnp.sum(jnp.where(match, jnp.broadcast_to(f_d, (Vp, W)), 0.0),
+                    axis=1).reshape(1, Vp)
+    ov_i_ref[...] = jnp.where(written, add_i, vis_i)
+    ov_d_ref[...] = jnp.where(written, add_d, vis_d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("L", "W", "max_visits", "interpret"))
+def frontier_select_kernel(all_d: jax.Array, all_i: jax.Array,
+                           vis_i: jax.Array, vis_d: jax.Array, *,
+                           L: int, W: int, max_visits: int,
+                           interpret: bool = False):
+    """all_d/all_i [1, M] merged-input lanes, vis_i/vis_d [1, Vp] visited.
+
+    Returns (merged_d [1, L], merged_i [1, L], frontier_d [1, W],
+    frontier_i [1, W], new_vis_i [1, Vp], new_vis_d [1, Vp]).
+    """
+    _, M = all_d.shape
+    _, Vp = vis_i.shape
+    assert all_i.shape == (1, M) and vis_d.shape == (1, Vp)
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel, L=L, W=W, max_visits=max_visits),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, L), jnp.float32),
+            jax.ShapeDtypeStruct((1, L), jnp.int32),
+            jax.ShapeDtypeStruct((1, W), jnp.float32),
+            jax.ShapeDtypeStruct((1, W), jnp.int32),
+            jax.ShapeDtypeStruct((1, Vp), jnp.int32),
+            jax.ShapeDtypeStruct((1, Vp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(all_d, all_i, vis_i, vis_d)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .block_topk import block_topk_kernel
+from .frontier_select import frontier_select_kernel
 from .l2_distance import l2_distances_kernel
 from .pq_adc import adc_distances_kernel
 
@@ -74,6 +75,45 @@ def l2_distances(queries: jax.Array, points: jax.Array, *,
 
 def _ceil_mult(n: int, m: int) -> int:
     return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("W", "max_visits", "use_kernel"))
+def frontier_select(cand_ids: jax.Array, cand_d: jax.Array,
+                    new_ids: jax.Array, new_d: jax.Array,
+                    vis_ids: jax.Array, vis_d: jax.Array,
+                    vis_cnt: jax.Array, *, W: int,
+                    max_visits: int | None = None, use_kernel: bool = True):
+    """Fused beam-search round step (single query lane; vmap over queries).
+
+    Semantics are ``ref.frontier_select_ref``: merge the K fresh neighbors
+    into the sorted L-entry candidate list, pick the next W-wide open
+    frontier, and append it to the visited arrays — one kernel launch instead
+    of the block_topk + membership + argsort sequence.
+
+    Contract: ``vis_cnt`` must equal the number of valid (>= 0) ids in
+    ``vis_ids`` — the engine maintains this by construction and the Pallas
+    kernel re-derives the count from occupancy instead of taking a scalar
+    operand.  Returns (merged_ids [L], merged_d [L], frontier_ids [W],
+    frontier_d [W], vis_ids', vis_d', vis_cnt').
+    """
+    if max_visits is None:
+        max_visits = vis_ids.shape[0]
+    if not use_kernel:
+        return ref.frontier_select_ref(cand_ids, cand_d, new_ids, new_d,
+                                       vis_ids, vis_d, vis_cnt,
+                                       W=W, max_visits=max_visits)
+    L, V = cand_ids.shape[0], vis_ids.shape[0]
+    all_d = _pad_to(jnp.concatenate([cand_d, new_d])[None, :].astype(
+        jnp.float32), 1, 128, jnp.inf)
+    all_i = _pad_to(jnp.concatenate([cand_ids, new_ids])[None, :], 1, 128, -1)
+    vis_ip = _pad_to(vis_ids[None, :], 1, 128, -1)
+    vis_dp = _pad_to(vis_d[None, :].astype(jnp.float32), 1, 128, jnp.inf)
+    m_d, m_i, f_d, f_i, ov_i, ov_d = frontier_select_kernel(
+        all_d, all_i, vis_ip, vis_dp, L=L, W=W, max_visits=max_visits,
+        interpret=_interpret())
+    n_take = jnp.sum((f_i[0] >= 0).astype(jnp.int32))
+    return (m_i[0], m_d[0], f_i[0], f_d[0],
+            ov_i[0, :V], ov_d[0, :V], vis_cnt + n_take)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",

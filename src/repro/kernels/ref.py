@@ -29,6 +29,55 @@ def l2_distances_ref(queries: jax.Array, points: jax.Array) -> jax.Array:
     return jnp.maximum(qn - 2.0 * (q @ x.T) + xn[None, :], 0.0)
 
 
+def frontier_select_ref(cand_ids: jax.Array, cand_d: jax.Array,
+                        new_ids: jax.Array, new_d: jax.Array,
+                        vis_ids: jax.Array, vis_d: jax.Array,
+                        vis_cnt: jax.Array, *, W: int,
+                        max_visits: int | None = None):
+    """One fused beam-search round step (single query lane).
+
+    Merges the freshly scored neighbors ``(new_ids, new_d)`` into the sorted
+    candidate list ``(cand_ids, cand_d)`` (stable top-L over the [L + K]
+    concatenation), computes which merged entries are still *open* (valid,
+    finite, and not a member of the visited set), picks the next frontier —
+    the first ``min(W, max_visits - vis_cnt)`` open entries in ascending
+    distance order — and appends it to the visited arrays.
+
+    Returns ``(merged_ids [L], merged_d [L], frontier_ids [W],
+    frontier_d [W], vis_ids', vis_d', vis_cnt')``; unused frontier lanes are
+    INVALID/+inf.  ``max_visits`` defaults to ``len(vis_ids)`` (callers pass
+    the true bound explicitly when the visited arrays are padded).
+    """
+    L = cand_ids.shape[0]
+    if max_visits is None:
+        max_visits = vis_ids.shape[0]
+    all_ids = jnp.concatenate([cand_ids, new_ids])
+    all_d = jnp.concatenate([cand_d, new_d])
+    order = jnp.argsort(all_d, stable=True)[:L]
+    m_ids, m_d = all_ids[order], all_d[order]
+    # Non-finite lanes are reported as INVALID (the engine only ever produces
+    # +inf on INVALID lanes, so this is a normalization, not a change).
+    m_ids = jnp.where(jnp.isfinite(m_d), m_ids, -1)
+
+    in_vis = (m_ids[:, None] == vis_ids[None, :]).any(axis=1)
+    open_ = (m_ids >= 0) & jnp.isfinite(m_d) & ~in_vis
+    allowed = jnp.minimum(W, max_visits - vis_cnt)
+    rank = jnp.cumsum(open_.astype(jnp.int32)) - 1
+    take = open_ & (rank < allowed)
+    n_take = take.sum(dtype=jnp.int32)
+
+    fpos = jnp.argsort(~take, stable=True)[:W]        # taken slots first
+    fvalid = take[fpos]
+    f_ids = jnp.where(fvalid, m_ids[fpos], -1)
+    f_d = jnp.where(fvalid, m_d[fpos], jnp.inf)
+
+    wpos = jnp.where(fvalid, vis_cnt + jnp.arange(W, dtype=jnp.int32),
+                     vis_ids.shape[0])
+    vis_ids = vis_ids.at[wpos].set(f_ids, mode="drop")
+    vis_d = vis_d.at[wpos].set(f_d, mode="drop")
+    return m_ids, m_d, f_ids, f_d, vis_ids, vis_d, vis_cnt + n_take
+
+
 def block_topk_ref(dists: jax.Array, ids: jax.Array, k: int
                    ) -> tuple[jax.Array, jax.Array]:
     """Top-k smallest distances with their ids.

@@ -21,6 +21,16 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.5 exposes shard_map at the top level and calls the replication
+# check ``check_vma``; 0.4.x has it under experimental with ``check_rep``.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:                                           # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def _shard_map(f, *, check_vma=True, **kw):
+        return _shard_map_04(f, check_rep=check_vma, **kw)
+
 from ..core import pq as pqm
 from ..core.config import IndexConfig, PQConfig
 from ..core.graph import GraphState
@@ -128,7 +138,7 @@ def make_distributed_search(mesh: Mesh, cfg: IndexConfig, *, k: int,
 
     lti_specs = LTIState(graph=lti_specs.graph, codes=lti_specs.codes,
                          codebook=pqm.PQCodebook(P()))
-    return jax.jit(jax.shard_map(
+    return jax.jit(_shard_map(
         local, mesh=mesh, in_specs=(lti_specs, P()),
         out_specs=(P(), P()), check_vma=False))
 
@@ -175,7 +185,7 @@ def make_distributed_insert(mesh: Mesh, cfg: IndexConfig,
 
     lti_in = LTIState(graph=lti_specs.graph, codes=lti_specs.codes,
                       codebook=pqm.PQCodebook(P()))
-    return jax.jit(jax.shard_map(
+    return jax.jit(_shard_map(
         local, mesh=mesh, in_specs=(lti_in, P()), out_specs=lti_in,
         check_vma=False),
         donate_argnums=(0,))
@@ -218,7 +228,7 @@ def make_distributed_merge(mesh: Mesh, cfg: IndexConfig, pq_cfg: PQConfig,
 
     lti_in = LTIState(graph=lti_specs.graph, codes=lti_specs.codes,
                       codebook=pqm.PQCodebook(P()))
-    return jax.jit(jax.shard_map(
+    return jax.jit(_shard_map(
         local, mesh=mesh,
         in_specs=(lti_in, P(), P(), lti_specs.graph.deleted),
         out_specs=lti_in, check_vma=False),

@@ -9,18 +9,25 @@ from __future__ import annotations
 import jax
 
 
+def mesh_with_auto_axes(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (>= 0.5); on older versions Auto is already the default
+    and the kwarg/enum do not exist, so plain ``make_mesh`` is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return mesh_with_auto_axes(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / CPU smoke runs)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return mesh_with_auto_axes((data, model), ("data", "model"))

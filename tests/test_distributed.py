@@ -62,8 +62,8 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import mesh_with_auto_axes
+mesh = mesh_with_auto_axes((2, 4), ("data", "model"))
 
 # 1) distributed ANN search == single-shard brute force on union of shards
 from repro.core.config import IndexConfig, PQConfig
@@ -139,7 +139,8 @@ x = np.linspace(-1, 1, 8 * 32).astype(np.float32).reshape(8, 32)
 def red(xs, key):
     return int8_all_gather_reduce({"g": xs}, key, "data")["g"]
 
-out = jax.jit(jax.shard_map(
+from repro.launch.ann_steps import _shard_map
+out = jax.jit(_shard_map(
     partial(red, key=jax.random.PRNGKey(0)),
     mesh=Mesh(np.array(jax.devices()).reshape(8), ("data",)),
     in_specs=P("data"), out_specs=P("data")))(x.reshape(8, 32))

@@ -1,0 +1,132 @@
+"""Batched multi-tier query fan-out: the vmapped stacked-tier search must be
+bit-identical to the sequential per-tier loop, tier padding must be inert,
+k<=L must be validated, and threshold merges must honor the background knob."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import index as mem
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.graph import pad_graph, stack_graphs
+from repro.core.system import bootstrap_system
+
+from conftest import DIM
+
+
+def _sys_cfg(**kw):
+    base = dict(
+        index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                          L_search=64, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=64, merge_threshold=100_000,   # keep tiers staged
+        temp_capacity=256, insert_batch=32)
+    base.update(kw)
+    return SystemConfig(**base)
+
+
+def _three_tier_system(points, **kw):
+    """LTI + 2 frozen RO snapshots + a live RW tier."""
+    sys_ = bootstrap_system(points[:400], np.arange(400), _sys_cfg(**kw))
+    for i in range(150):                       # 2 rollovers at 64 and 128
+        sys_.insert(2000 + i, points[500 + i])
+    return sys_
+
+
+def test_batched_fanout_bit_identical_to_sequential(points, queries):
+    """The acceptance bar: identical (ids, dists) on a 3-tier system."""
+    sys_b = _three_tier_system(points)
+    sys_s = _three_tier_system(points, batch_fanout=False)
+    assert len(sys_b.ro) == 2 and len(sys_s.ro) == 2
+    ids_b, d_b = sys_b.search(queries, k=5)
+    ids_s, d_s = sys_s.search(queries, k=5)
+    np.testing.assert_array_equal(ids_b, ids_s)
+    np.testing.assert_array_equal(d_b, d_s)
+
+
+def test_batched_fanout_bit_identical_kernel_path(points, queries):
+    """Same parity with the Pallas ops layer engaged (interpret on CPU)."""
+    kcfg = IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                       L_search=64, alpha=1.2, use_kernel=True)
+    sys_b = _three_tier_system(points, index=kcfg)
+    sys_s = _three_tier_system(points, index=kcfg, batch_fanout=False)
+    ids_b, d_b = sys_b.search(queries[:8], k=5)
+    ids_s, d_s = sys_s.search(queries[:8], k=5)
+    np.testing.assert_array_equal(ids_b, ids_s)
+    np.testing.assert_array_equal(d_b, d_s)
+
+
+def test_search_tiers_matches_per_tier_search(points, queries):
+    """index.search_tiers lane t == index.search on tier t, bit for bit —
+    including a tier padded up to a larger common capacity."""
+    cfg_small = IndexConfig(capacity=300, dim=DIM, R=16, L_build=24,
+                            L_search=32, alpha=1.2)
+    cfg_big = IndexConfig(capacity=512, dim=DIM, R=16, L_build=24,
+                          L_search=32, alpha=1.2)
+    g1 = mem.build(points[:250], cfg_small, batch=64)
+    g2 = mem.build(points[250:600], cfg_big, batch=64)
+    q = jnp.asarray(queries[:8])
+    stacked = stack_graphs([g1, g2])           # pads g1 from 300 -> 512
+    ids, d, hops, cmps = mem.search_tiers(stacked, q, cfg_big, k=5, L=32)
+    for ti, (g, cfg) in enumerate([(g1, cfg_small), (g2, cfg_big)]):
+        wids, wd, whops, wcmps = mem.search(g, q, cfg_big, k=5, L=32)
+        np.testing.assert_array_equal(np.asarray(ids[ti]), np.asarray(wids),
+                                      err_msg=f"tier {ti}")
+        np.testing.assert_array_equal(np.asarray(d[ti]), np.asarray(wd))
+        np.testing.assert_array_equal(np.asarray(hops[ti]),
+                                      np.asarray(whops))
+        np.testing.assert_array_equal(np.asarray(cmps[ti]),
+                                      np.asarray(wcmps))
+
+
+def test_pad_graph_is_inert(points, queries):
+    """Padding slots are inactive/unnavigable: search results unchanged."""
+    cfg = IndexConfig(capacity=300, dim=DIM, R=16, L_build=24,
+                      L_search=32, alpha=1.2)
+    g = mem.build(points[:250], cfg, batch=64)
+    q = jnp.asarray(queries[:8])
+    a = mem.search(g, q, cfg, k=5, L=32)
+    b = mem.search(pad_graph(g, 512), q, cfg, k=5, L=32)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_search_rejects_k_greater_than_L(points):
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    with pytest.raises(ValueError, match="k must be <= L"):
+        sys_.search(points[:4], k=65, L=64)
+    with pytest.raises(ValueError, match="k must be <= L"):
+        sys_.search(points[:4], k=100)         # default L = 64
+
+
+def test_threshold_merge_routes_through_background(points):
+    """With background_merge on, the threshold merge runs on a worker thread;
+    inserts return immediately and points stay searchable throughout."""
+    sys_ = bootstrap_system(points[:400], np.arange(400),
+                            _sys_cfg(merge_threshold=128,
+                                     background_merge=True))
+    for i in range(200):
+        sys_.insert(2000 + i, points[500 + i])
+    ids, _ = sys_.search(points[500:510], k=3)   # merge may be in flight
+    assert (np.asarray(ids[:, 0]) == np.arange(2000, 2010)).mean() >= 0.8
+    sys_.wait_merge()
+    assert sys_.stats.merges >= 1
+    ids, _ = sys_.search(points[500:510], k=3)
+    assert (np.asarray(ids[:, 0]) == np.arange(2000, 2010)).mean() >= 0.8
+
+
+def test_autotune_beam_picks_and_caches(points, queries):
+    sys_ = bootstrap_system(points[:400], np.arange(400),
+                            _sys_cfg(autotune_beam=True,
+                                     merge_threshold=128))
+    assert sys_._tuned_w is None
+    sys_.search(queries[:4], k=5)
+    w = sys_._tuned_w
+    assert w in sys_.cfg.beam_width_candidates
+    sys_.search(queries[:4], k=5)
+    assert sys_._tuned_w == w                   # cached, not re-measured
+    for i in range(160):                        # force a merge
+        sys_.insert(3000 + i, points[600 + i])
+    sys_.wait_merge()
+    assert sys_.stats.merges >= 1
+    assert sys_._tuned_w is None                # merge invalidates the cache

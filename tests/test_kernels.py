@@ -58,6 +58,112 @@ def test_topk_with_inf_padding():
     assert np.asarray(gi[0])[3] == -1   # inf -> id -1
 
 
+def _frontier_case(seed, L, K, V, W, nvis_frac=0.5):
+    """A random but engine-consistent frontier_select input: sorted candidate
+    list with an INVALID tail, fresh neighbors with masked lanes, a visited
+    set that is a subset of the candidate ids, vis_cnt == occupancy."""
+    r = np.random.default_rng(seed)
+    ncand = int(r.integers(1, L + 1))
+    nnew = int(r.integers(0, K + 1))
+    pool = r.permutation(10_000)[:ncand + nnew].astype(np.int32)
+    cand_ids = np.full(L, -1, np.int32)
+    cand_d = np.full(L, np.inf, np.float32)
+    cand_ids[:ncand] = pool[:ncand]
+    cand_d[:ncand] = np.sort(r.random(ncand).astype(np.float32))
+    new_ids = np.full(K, -1, np.int32)
+    new_d = np.full(K, np.inf, np.float32)
+    new_ids[:nnew] = pool[ncand:]
+    new_d[:nnew] = r.random(nnew).astype(np.float32)
+    vis_ids = np.full(V, -1, np.int32)
+    vis_d = np.full(V, np.inf, np.float32)
+    nvis = min(int(ncand * nvis_frac), V - 1)
+    taken = r.permutation(ncand)[:nvis]
+    vis_ids[:nvis] = cand_ids[taken]
+    vis_d[:nvis] = cand_d[taken]
+    args = tuple(jnp.asarray(x) for x in
+                 (cand_ids, cand_d, new_ids, new_d, vis_ids, vis_d))
+    return args + (jnp.int32(nvis),)
+
+
+@pytest.mark.parametrize("W", [1, 4, 16])       # 16 == L: full-width beam
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_frontier_select_matches_ref(seed, W):
+    """Fused kernel vs jnp reference: bit-identical merged list, frontier,
+    and visited arrays — including INVALID-padded candidate/neighbor lanes."""
+    L, K, V = 16, 24, 30
+    args = _frontier_case(seed, L, K, V, W)
+    want = ops.frontier_select(*args, W=W, max_visits=V, use_kernel=False)
+    got = ops.frontier_select(*args, W=W, max_visits=V, use_kernel=True)
+    names = ["m_ids", "m_d", "f_ids", "f_d", "vis_ids", "vis_d", "vis_cnt"]
+    for w, g, name in zip(want, got, names):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                      err_msg=f"{name} (W={W}, seed={seed})")
+
+
+def test_frontier_select_visit_budget():
+    """The frontier never exceeds the remaining visit budget, and a full
+    visited set yields an empty frontier (the loop's stop condition)."""
+    L, K, V, W = 8, 8, 6, 4
+    args = _frontier_case(7, L, K, V, W, nvis_frac=0.0)
+    # Exhaust the budget: visited occupancy == max_visits.
+    full_vis = jnp.asarray(np.arange(20_000, 20_000 + V, dtype=np.int32))
+    full_vd = jnp.zeros((V,), jnp.float32)
+    for use_kernel in (False, True):
+        out = ops.frontier_select(args[0], args[1], args[2], args[3],
+                                  full_vis, full_vd, jnp.int32(V),
+                                  W=W, max_visits=V, use_kernel=use_kernel)
+        assert (np.asarray(out[2]) == -1).all()      # empty frontier
+        assert int(out[6]) == V                      # count unchanged
+
+
+def test_frontier_select_under_vmap():
+    """The engine calls frontier_select inside jax.vmap over query lanes."""
+    L, K, V, W = 12, 16, 20, 3
+    batched = [jnp.stack(x) for x in zip(*[
+        _frontier_case(100 + i, L, K, V, W) for i in range(5)])]
+
+    def run(use_kernel):
+        return jax.vmap(lambda *a: ops.frontier_select(
+            *a, W=W, max_visits=V, use_kernel=use_kernel))(*batched)
+
+    for w, g in zip(run(False), run(True)):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+def test_batch_distances_kernel_parity_both_backends():
+    """batch_distances: kernels.ops vs jnp reference on FullPrecision and PQ
+    backends, with INVALID-masked id lanes -> +inf on both paths."""
+    from repro.core import pq as pqm
+    from repro.core.config import PQConfig
+    from repro.core.search import (FullPrecisionBackend, PQBackend,
+                                   batch_distances)
+    dim, n, B, K = 32, 400, 6, 40
+    vecs = jnp.asarray(rng.standard_normal((n, dim)).astype(np.float32))
+    qs = jnp.asarray(rng.standard_normal((B, dim)).astype(np.float32))
+    ids = rng.integers(0, n, (B, K)).astype(np.int32)
+    ids[:, -5:] = -1
+    ids = jnp.asarray(ids)
+
+    fp = FullPrecisionBackend(vecs)
+    d_ref = batch_distances(fp, qs, ids, use_kernel=False)
+    d_ker = batch_distances(fp, qs, ids, use_kernel=True)
+    assert bool(jnp.isinf(d_ref[:, -5:]).all())
+    assert bool(jnp.isinf(d_ker[:, -5:]).all())
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-3)
+
+    pq_cfg = PQConfig(dim=dim, m=8, ksub=32, kmeans_iters=3)
+    cb = pqm.train_pq(vecs, pq_cfg)
+    codes = pqm.encode(cb, vecs, pq_cfg)
+    pq = PQBackend(codes, cb)
+    d_ref = batch_distances(pq, qs, ids, use_kernel=False)
+    d_ker = batch_distances(pq, qs, ids, use_kernel=True)
+    assert bool(jnp.isinf(d_ref[:, -5:]).all())
+    assert bool(jnp.isinf(d_ker[:, -5:]).all())
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
 def test_adc_is_used_equivalently_in_core():
     """core.pq.adc == kernel adc (the wiring contract)."""
     from repro.core import pq as pqm

@@ -1,0 +1,196 @@
+"""Streaming-correctness properties: random insert/delete/re-insert/search/
+merge interleavings against a brute-force oracle.
+
+The driver replays one op stream on a live FreshDiskANN while mirroring it in
+a plain dict (the oracle).  After every search it asserts the §5.2 contract:
+
+  * no deleted (and not re-inserted) id is ever returned,
+  * no id the oracle has never seen is returned,
+  * recall@k against oracle brute force stays above a floor — across RW->RO
+    rollovers and StreamingMerges alike,
+  * ``size`` equals the oracle's live count.
+
+Runs as a deterministic seed sweep everywhere; when hypothesis is installed
+the same driver is additionally driven by generated op streams.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.index import brute_force
+from repro.core.system import FreshDiskANN, bootstrap_system
+
+DIM = 16
+RECALL_FLOOR = 0.70
+
+
+def _cfg(**kw):
+    base = dict(
+        index=IndexConfig(capacity=1024, dim=DIM, R=16, L_build=24,
+                          L_search=32, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=4, ksub=16, kmeans_iters=3),
+        ro_snapshot_points=24, merge_threshold=48,
+        temp_capacity=128, insert_batch=8)
+    base.update(kw)
+    return SystemConfig(**base)
+
+
+def _mk_vec(rng):
+    return rng.standard_normal(DIM).astype(np.float32)
+
+
+def run_interleaving(seed: int, n_ops: int = 120, *, explicit_merges=True,
+                     **cfg_kw) -> None:
+    """Drive one random interleaving; raises on any broken invariant."""
+    rng = np.random.default_rng(seed)
+    n0 = 64
+    base = rng.standard_normal((n0, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(base, np.arange(n0), _cfg(**cfg_kw))
+    oracle: dict[int, np.ndarray] = {e: base[e] for e in range(n0)}
+    graveyard: dict[int, np.ndarray] = {}      # deleted ids keep their vector
+    next_id = 1000
+
+    def check_search():
+        k = int(rng.integers(1, 6))
+        nq = int(rng.integers(1, 5))
+        q = rng.standard_normal((nq, DIM)).astype(np.float32)
+        ids, dists = sys_.search(q, k=k)
+        live = set(oracle)
+        dead = set(graveyard)
+        for row in np.asarray(ids):
+            for e in row:
+                e = int(e)
+                if e < 0:
+                    continue
+                assert e not in dead, f"deleted id {e} returned (seed {seed})"
+                assert e in live, f"unknown id {e} returned (seed {seed})"
+        # recall floor vs oracle brute force
+        keys = np.asarray(sorted(oracle))
+        mat = np.stack([oracle[e] for e in keys])
+        kk = min(k, len(keys))
+        gt_rows = np.asarray(brute_force(
+            jnp.asarray(mat), jnp.ones(len(keys), bool), jnp.asarray(q), kk))
+        hits = total = 0
+        for row, gt in zip(np.asarray(ids), keys[gt_rows]):
+            hits += len(set(int(x) for x in row if x >= 0) & set(gt.tolist()))
+            total += kk
+        assert hits / total >= RECALL_FLOOR, (
+            f"recall {hits}/{total} below floor (seed {seed}, "
+            f"merges={sys_.stats.merges}, snapshots={sys_.stats.snapshots})")
+
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.45 or not oracle:                       # insert a new point
+            v = _mk_vec(rng)
+            sys_.insert(next_id, v)
+            oracle[next_id] = v
+            next_id += 1
+        elif r < 0.60 and len(oracle) > 4:               # delete a live point
+            e = int(rng.choice(sorted(oracle)))
+            sys_.delete(e)
+            graveyard[e] = oracle.pop(e)
+        elif r < 0.70 and graveyard:                     # re-insert (revive)
+            e = int(rng.choice(sorted(graveyard)))
+            v = graveyard.pop(e)
+            sys_.insert(e, v)
+            oracle[e] = v
+        elif r < 0.75 and explicit_merges:               # forced merge
+            sys_.merge()
+            sys_.wait_merge()
+        else:                                            # search + invariants
+            check_search()
+
+    sys_.wait_merge()
+    check_search()
+    sys_._flush_inserts()
+    assert sys_.size == len(oracle), (
+        f"size {sys_.size} != oracle {len(oracle)} (seed {seed})")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_streaming_interleavings_fixed_seeds(seed):
+    run_interleaving(seed)
+
+
+def test_streaming_interleaving_background_merge():
+    """Same invariants with threshold merges running on the worker thread."""
+    run_interleaving(11, explicit_merges=False, background_merge=True,
+                     merge_threshold=32)
+
+
+def test_delete_then_flush_does_not_revive():
+    """Regression: delete of a still-buffered insert must stick — the flush
+    used to discard the delete and revive the id."""
+    rng = np.random.default_rng(3)
+    base = rng.standard_normal((32, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(base, np.arange(32), _cfg(insert_batch=64))
+    v = _mk_vec(rng)
+    sys_.insert(500, v)              # stays in the insert buffer (batch 64)
+    sys_.delete(500)                 # delete while buffered
+    ids, _ = sys_.search(v[None, :], k=5)    # search flushes the buffer
+    assert 500 not in set(int(x) for x in np.asarray(ids)[0])
+    assert sys_.size == 32
+
+
+def test_reinsert_after_delete_across_merge():
+    """delete -> merge (consumes the delete) -> re-insert must revive."""
+    rng = np.random.default_rng(4)
+    base = rng.standard_normal((48, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(base, np.arange(48), _cfg())
+    sys_.delete(7)
+    sys_.merge()
+    sys_.wait_merge()
+    ids, _ = sys_.search(base[7:8], k=3)
+    assert 7 not in set(int(x) for x in np.asarray(ids)[0])
+    sys_.insert(7, base[7])
+    ids, _ = sys_.search(base[7:8], k=1)
+    assert int(ids[0, 0]) == 7
+
+
+def test_reinsert_with_new_vector_supersedes_old_copy():
+    """Regression: delete(e) + insert(e, v2) + merge must remove e's OLD
+    LTI row — a stale duplicate would let searches return e ranked by the
+    pre-delete vector."""
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((48, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(base, np.arange(48), _cfg())
+    v2 = base[7] + 100.0                 # far from the old value
+    sys_.delete(7)
+    sys_.insert(7, v2)
+    sys_._flush_inserts()
+    sys_.ro.append(sys_.rw)              # roll the revive into an RO tier
+    sys_.rw = sys_._new_temp()
+    sys_.merge()
+    sys_.wait_merge()
+    # exactly one LTI slot maps id 7, and it holds the NEW vector
+    slots = np.nonzero(sys_.lti_ext_ids == 7)[0]
+    assert len(slots) == 1, slots
+    np.testing.assert_allclose(
+        np.asarray(sys_.lti.graph.vectors[slots[0]]), v2, atol=1e-5)
+    # a query at the OLD value must not see id 7 at distance ~0
+    ids, d = sys_.search(base[7:8], k=3)
+    row = {int(i): float(x) for i, x in zip(np.asarray(ids)[0],
+                                            np.asarray(d)[0])}
+    assert 7 not in row or row[7] > 1.0, row
+    # ... while a query at the new value finds it immediately
+    ids, _ = sys_.search(v2[None, :], k=1)
+    assert int(ids[0, 0]) == 7
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven variant: generated op streams through the same driver.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.integers(40, 120))
+    @settings(max_examples=10, deadline=None)
+    def test_streaming_interleavings_hypothesis(seed, n_ops):
+        run_interleaving(seed, n_ops=n_ops)
