@@ -3,6 +3,14 @@ stream against a FreshDiskANN system with background merges — the paper's
 §6.2 steady-state experiment at CPU scale.
 
     PYTHONPATH=src python examples/serve_ann.py --minutes 0.5
+
+By default every search runs the unified §5.2 fan-out: the RW tier, all
+frozen RO snapshots, AND the PQ-navigated LTI lane as ONE jitted device
+program (watch the ``disp/search`` column sit at 1.0 however many tiers are
+live).  ``--split-fanout`` switches to the sequential per-tier oracle —
+bit-identical results, one device program per tier.  ``--autotune-beam``
+lets the system pick the beam width W by probing the unified program
+(see docs/ARCHITECTURE.md for knobs and architecture).
 """
 import argparse
 import time
@@ -22,6 +30,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=float, default=0.5)
     ap.add_argument("--points", type=int, default=2048)
+    ap.add_argument("--split-fanout", action="store_true",
+                    help="sequential per-tier search loop (the bit-parity "
+                         "oracle) instead of the one-program unified fan-out")
+    ap.add_argument("--autotune-beam", action="store_true",
+                    help="calibrate the beam width W against the unified "
+                         "fan-out program instead of using the static W")
     args = ap.parse_args()
     n = args.points
 
@@ -31,7 +45,9 @@ def main():
                           L_search=48, alpha=1.2),
         pq=PQConfig(dim=DIM, m=8, ksub=64, kmeans_iters=6),
         ro_snapshot_points=n // 8, merge_threshold=n // 4,
-        temp_capacity=n, insert_batch=64)
+        temp_capacity=n, insert_batch=64,
+        batch_fanout=not args.split_fanout,
+        autotune_beam=args.autotune_beam)
     system = bootstrap_system(corpus, np.arange(n), cfg)
     live = dict(enumerate(corpus))
     upd = vector_stream(64, DIM, seed=7)
@@ -41,7 +57,7 @@ def main():
     next_id = n
     deadline = time.time() + args.minutes * 60
     ins_lat, recalls = [], []
-    cycle = 0
+    cycle = searches = 0
     while time.time() < deadline:
         batch = next(upd)
         for v in batch:                      # steady state: equal in/out
@@ -60,6 +76,7 @@ def main():
             t = time.perf_counter()
             ids, _ = system.search(q, k=5)
             s_lat = time.perf_counter() - t
+            searches += 1
             keys = np.asarray(sorted(live))
             mat = np.stack([live[k] for k in keys])
             gt = brute_force(jnp.asarray(mat), jnp.ones(len(keys), bool),
@@ -70,11 +87,15 @@ def main():
             print(f"[steady-state] t={time.time() - deadline + args.minutes * 60:5.0f}s "
                   f"size={system.size} recall@5={rec:.3f} "
                   f"search={s_lat * 1e3:.0f}ms "
+                  f"disp/search={system.stats.search_dispatches / searches:.1f} "
                   f"ins_p50={np.median(ins_lat) * 1e3:.1f}ms "
                   f"merges={system.stats.merges}")
+    mode = "split" if args.split_fanout else "unified"
     print(f"final: mean recall {np.mean(recalls):.3f}, "
           f"{system.stats.inserts} inserts, {system.stats.deletes} deletes, "
-          f"{system.stats.merges} merges")
+          f"{system.stats.merges} merges, {mode} fan-out: "
+          f"{system.stats.search_dispatches / max(searches, 1):.1f} "
+          f"device programs per search batch")
 
 
 if __name__ == "__main__":

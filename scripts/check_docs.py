@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Docs reference checker (run by CI smoke via scripts/smoke.sh).
+
+Validates that the prose in docs/*.md and README.md stays true to the tree:
+
+  1. every relative markdown link [text](target) resolves to a real file;
+  2. every backticked repo path (``src/.../x.py``, ``tests/x.py``, ...)
+     exists;
+  3. every ``path.py::symbol`` code reference names a symbol that actually
+     appears in that file (function/class/assignment or test name);
+  4. every fenced ``python`` snippet parses (syntax check only — snippets
+     are illustrative, not executed).
+
+Exits non-zero listing every stale reference, so a refactor that renames a
+module or test cannot silently orphan the documentation.
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|sh|yml|yaml|json|bin)$")
+SYMREF_RE = re.compile(r"^([\w./-]+\.py)::(\w+)$")
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+
+
+def check_file(md_path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(md_path)
+    rel = os.path.relpath(md_path, ROOT)
+    with open(md_path) as f:
+        text = f.read()
+
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = target.split("#")[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link -> {target}")
+
+    # Strip fenced code before scanning inline ticks (fences have their own
+    # check), then validate path-shaped and ``file.py::symbol`` spans.
+    prose = FENCE_RE.sub("", text)
+    for span in TICK_RE.findall(prose):
+        span = span.strip()
+        m = SYMREF_RE.match(span)
+        if m:
+            fpath, sym = m.groups()
+            resolved = os.path.normpath(os.path.join(ROOT, fpath))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: code ref to missing file `{span}`")
+            else:
+                # A real definition, not a substring: def/class (any
+                # indentation, so methods count) or a top-level assignment.
+                def_re = re.compile(
+                    rf"^\s*(?:def|class)\s+{re.escape(sym)}\b"
+                    rf"|^{re.escape(sym)}\s*=", re.M)
+                if not def_re.search(open(resolved).read()):
+                    errors.append(
+                        f"{rel}: `{fpath}` does not define `{sym}`")
+            continue
+        if "/" in span and PATH_RE.match(span) and "*" not in span:
+            resolved = os.path.normpath(os.path.join(ROOT, span))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: backticked path missing -> `{span}`")
+
+    for lang, body in FENCE_RE.findall(text):
+        if lang == "python":
+            try:
+                ast.parse(body)
+            except SyntaxError as e:
+                errors.append(f"{rel}: python snippet fails to parse: {e}")
+    return errors
+
+
+def main() -> int:
+    targets = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    targets.append(os.path.join(ROOT, "README.md"))
+    missing = [t for t in targets if not os.path.exists(t)]
+    errors = [f"expected doc missing: {os.path.relpath(t, ROOT)}"
+              for t in missing]
+    for t in targets:
+        if os.path.exists(t):
+            errors.extend(check_file(t))
+    if errors:
+        print("\n".join(errors))
+        print(f"# check_docs: {len(errors)} stale reference(s)")
+        return 1
+    print(f"# check_docs: {len(targets)} files ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 tests + a short kernel-path throughput probe.
+# CI smoke: docs reference check + tier-1 tests + a short kernel-path
+# throughput probe.
 #
 # REPRO_PALLAS_INTERPRET=1 forces the Pallas kernels through the interpreter,
 # so kernel-path regressions (shape/padding/semantics) surface on any CPU box
@@ -10,7 +11,11 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export REPRO_PALLAS_INTERPRET=1
 
-# Kernel probe first: surfaces kernel-path regressions even when an
+# Docs first (cheapest): docs/*.md + README references (file paths, links,
+# file.py::symbol refs, python snippets) must match the tree.
+python scripts/check_docs.py
+
+# Kernel probe next: surfaces kernel-path regressions even when an
 # unrelated (e.g. env-dependent) test failure would abort the -x suite run.
 python - <<'PY'
 import time

@@ -15,9 +15,14 @@ cost model is counter-based (hops and cmps are deterministic), so the choice
 is reproducible and immune to wall-clock noise on a shared machine.
 
 ``FreshDiskANN`` wires this in behind ``SystemConfig.autotune_beam``: the
-first search calibrates against the largest tier and caches the width; a
-StreamingMerge invalidates the cache (the graph — and hence the hop counts —
-changed).
+first search calibrates and caches the width; a StreamingMerge invalidates
+the cache (the graph — and hence the hop counts — changed).  Under
+``batch_fanout`` the probe runs the unified fan-out program itself
+(``index.unified_search``) and costs it the way the hardware pays for it:
+per-query IO rounds = max over lanes (the vmapped lanes run concurrently,
+so latency follows the slowest lane — normally the LTI), distance
+computations = sum over lanes (total work).  Without batching it probes the
+largest single tier, as before.
 """
 from __future__ import annotations
 

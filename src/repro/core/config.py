@@ -88,7 +88,8 @@ class SystemConfig:
     insert_batch: int = 256
     # Merge internals.
     merge_block: int = 1024       # nodes per sequential block pass ("SSD block")
-    rerank: bool = True           # exact rerank of the final candidate list
+    rerank: bool = True           # exact full-precision rerank of the LTI's
+    #   final candidate list (paper §5.2; navigation stays on PQ codes)
     wal_dir: Optional[str] = None
     # Durability (§5.6): when set, every merge saves a snapshot here BEFORE
     # truncating the WAL, so snapshot + log-suffix always reconstructs the
@@ -96,11 +97,15 @@ class SystemConfig:
     # covering snapshot would lose the pre-merge records on crash).
     snapshot_dir: Optional[str] = None
     # Query engine (paper §5.2 fan-out).
-    batch_fanout: bool = True     # one vmapped search over all temp tiers
-    #   (False: sequential per-tier loop — the bit-parity oracle)
+    batch_fanout: bool = True     # ONE jitted device program per query
+    #   batch: RW + RO tiers + the PQ-navigated LTI lane searched as a
+    #   heterogeneous LaneStack, with the DeleteList filter and cross-tier
+    #   top-k merge on-device (index.unified_search).  False: sequential
+    #   per-tier loop + host aggregation — the bit-parity oracle.
     background_merge: bool = False  # threshold merges run on a worker thread
     #   so inserts never stall on a foreground StreamingMerge
-    autotune_beam: bool = False   # pick W per batch from the hop/cmp trade-off
+    autotune_beam: bool = False   # pick W from the hop/cmp trade-off, costed
+    #   against the unified fan-out program (see core.autotune)
     beam_width_candidates: tuple = (1, 2, 4, 8)
 
 

@@ -13,7 +13,7 @@ slots.  ``deleted`` nodes remain navigable (paper §4.2 lazy deletion) until
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,70 @@ def stack_graphs(states: list[GraphState]) -> GraphState:
     cap = max(s.capacity for s in states)
     padded = [pad_graph(s, cap) for s in states]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+
+
+class LaneStack(NamedTuple):
+    """A heterogeneous-lane stack: the §5.2 query fan-out as ONE pytree.
+
+    ``graphs`` holds every tier's graph padded to a common capacity with
+    [T, ...] leaves (exactly ``stack_graphs``); ``is_pq`` selects, per lane,
+    which distance backend the vmapped search uses — exact L2 over the lane's
+    full-precision vectors for TempIndex lanes, PQ asymmetric distances (ADC)
+    for the LTI lane.  ``codes``/``codebook`` are *shared* across lanes
+    rather than stacked: only the PQ lane gathers meaningful rows from them,
+    and the full-precision lanes' (discarded) ADC results never feed a
+    ``where``-selected output, so one copy suffices and the stack stays
+    O(sum of graph bytes) instead of O(T x LTI codes).
+
+    Built by ``stack_lanes``; consumed by ``index.search_lanes`` /
+    ``index.unified_search``.  See docs/ARCHITECTURE.md for the full
+    query-engine picture.
+    """
+
+    graphs: GraphState     # [T, ...] leaves (stacked + padded)
+    codes: jax.Array       # [capacity, m] uint8 — PQ codes (PQ lane only)
+    codebook: jax.Array    # [m, ksub, dsub] f32 centroids (PQ lane only)
+    is_pq: jax.Array       # [T] bool — lane backend select
+
+    @property
+    def n_lanes(self) -> int:
+        return self.is_pq.shape[0]
+
+
+def stack_lanes(states: list[GraphState], *,
+                codes: Optional[jax.Array] = None,
+                codebook: Optional[jax.Array] = None,
+                pq_lane: Optional[int] = None) -> LaneStack:
+    """Stack full-precision tier graphs and (optionally) one PQ-navigated
+    lane into a ``LaneStack``.
+
+    ``states[pq_lane]`` is the LTI's graph; ``codes`` ([lti_capacity, m]
+    uint8) and ``codebook`` ([m, ksub, dsub] f32 centroids) are its PQ data,
+    row-padded with zeros up to the common stacked capacity.  With
+    ``pq_lane=None`` every lane is full-precision and tiny zero placeholders
+    keep the pytree structure (and jit cache keys) stable.
+    """
+    stacked = stack_graphs(states)
+    cap = stacked.vectors.shape[1]
+    T = len(states)
+    is_pq = jnp.zeros((T,), bool)
+    if pq_lane is None:
+        codes = jnp.zeros((cap, 1), jnp.uint8)
+        codebook = jnp.zeros((1, 1, states[0].dim), jnp.float32)
+    else:
+        if codes is None or codebook is None:
+            raise ValueError("pq_lane set but codes/codebook missing")
+        is_pq = is_pq.at[pq_lane].set(True)
+        pad = cap - codes.shape[0]
+        if pad < 0:
+            raise ValueError(
+                f"PQ codes cover {codes.shape[0]} slots but the stacked "
+                f"capacity is only {cap}")
+        if pad:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros((pad, codes.shape[1]), codes.dtype)])
+        codebook = codebook.astype(jnp.float32)
+    return LaneStack(stacked, codes, codebook, is_pq)
 
 
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:

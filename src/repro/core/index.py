@@ -11,11 +11,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import pq as pqm
 from .config import IndexConfig
 from .distance import INVALID
-from .graph import GraphState, empty_graph, medoid
+from .graph import GraphState, LaneStack, empty_graph, medoid
 from .insert import apply_back_edges, compute_insert_edges
-from .search import FullPrecisionBackend, beam_search, topk_results
+from .search import (FullPrecisionBackend, LaneSelectBackend, batch_distances,
+                     beam_search, rerank_candidates, topk_results)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "L", "reprune"))
@@ -93,6 +95,107 @@ def search_tiers(states: GraphState, queries: jax.Array, cfg: IndexConfig,
                             beam_width=beam_width)
 
     return jax.vmap(one)(states)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "beam_width",
+                                             "rerank"))
+def search_lanes(stack: LaneStack, queries: jax.Array, cfg: IndexConfig,
+                 *, k: int, L: int, beam_width: Optional[int] = None,
+                 rerank: bool = True):
+    """Heterogeneous-lane fan-out: one vmapped search over T stacked lanes.
+
+    Like ``search_tiers``, but each lane picks its distance backend from
+    ``stack.is_pq`` (``LaneSelectBackend``): exact L2 for TempIndex lanes,
+    PQ ADC navigation for the LTI lane.  With ``rerank`` the PQ lane's final
+    candidate list gets the exact full-precision rerank *inside the same
+    program* (DeleteList members masked before the gather, matching the
+    ``search_lti`` contract).  Returns (ids [T,B,k], dists [T,B,k],
+    hops [T,B], cmps [T,B]) — lane t bit-identical to running the dedicated
+    engine (``search`` / ``search_lti``) on tier t alone.
+    """
+    use_kernel = cfg.kernel_enabled()
+    codebook = pqm.PQCodebook(stack.codebook)
+
+    def one(g: GraphState, is_pq: jax.Array):
+        backend = LaneSelectBackend(g.vectors, stack.codes, codebook, is_pq)
+        res = beam_search(g.adjacency, g.active, g.start, queries, backend,
+                          L=L, max_visits=cfg.visits_bound(L),
+                          beam_width=beam_width or cfg.beam_width,
+                          use_kernel=use_kernel)
+        reportable = g.active & ~g.deleted
+        if rerank:
+            exact = batch_distances(
+                FullPrecisionBackend(g.vectors), queries,
+                rerank_candidates(res.ids, reportable),
+                use_kernel=use_kernel)
+            # Only the PQ lane navigated on approximate distances; the
+            # full-precision lanes' search distances ARE exact already.
+            res = res._replace(dists=jnp.where(is_pq, exact, res.dists))
+        ids, d = topk_results(res, k, reportable)
+        return ids, d, res.n_hops, res.n_cmps
+
+    return jax.vmap(one)(stack.graphs, stack.is_pq)
+
+
+def fanout_merge(slot_ids: jax.Array, dists: jax.Array, tables: jax.Array,
+                 drop: jax.Array, *, k: int):
+    """On-device cross-tier merge (the device half of §5.2 aggregation).
+
+    slot_ids/dists [T, B, C] per-lane top-C results (slot-local ids);
+    tables [T, capacity] int32 slot -> external id; drop [T, capacity] bool
+    marks DeleteList members.  Maps slots to external ids, infs out dropped
+    and invalid lanes, dedupes cross-tier copies keeping the closest
+    instance, and returns the global top-k per query: (ext_ids [B, k] int32,
+    dists [B, k] f32) with (-1, +inf) padding.  Bit-identical to the
+    host-side ``FreshDiskANN._aggregate`` on the same per-lane inputs.
+    """
+
+    def one(tab, dr, sl, d):
+        s = jnp.maximum(sl, 0)
+        ext = jnp.where(sl >= 0, tab[s], -1)
+        dead = (sl >= 0) & dr[s]
+        return ext, jnp.where(dead, jnp.inf, d)
+
+    ext, d = jax.vmap(one)(tables, drop, slot_ids, dists)
+    T, B, C = ext.shape
+    ids = jnp.transpose(ext, (1, 0, 2)).reshape(B, T * C)
+    ds = jnp.transpose(d, (1, 0, 2)).reshape(B, T * C).astype(jnp.float32)
+    ds = jnp.where(ids < 0, jnp.inf, ds)
+    # Dedupe keeping the closest copy of each id, then rank by distance —
+    # the same lexsort / dup-mask / stable-argsort sequence as _aggregate.
+    order = jnp.lexsort((ds, ids))
+    sid = jnp.take_along_axis(ids, order, axis=1)
+    sd = jnp.take_along_axis(ds, order, axis=1)
+    dup = jnp.zeros(sid.shape, bool).at[:, 1:].set(
+        (sid[:, 1:] == sid[:, :-1]) & (sid[:, 1:] >= 0))
+    sd = jnp.where(dup, jnp.inf, sd)
+    top = jnp.argsort(sd, axis=1, stable=True)[:, :k]
+    rd = jnp.take_along_axis(sd, top, axis=1)
+    ri = jnp.where(jnp.isfinite(rd),
+                   jnp.take_along_axis(sid, top, axis=1), -1)
+    return ri, jnp.where(jnp.isfinite(rd), rd, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "k_lane", "L",
+                                             "beam_width", "rerank"))
+def unified_search(stack: LaneStack, tables: jax.Array, drop: jax.Array,
+                   queries: jax.Array, cfg: IndexConfig, *, k: int,
+                   k_lane: int, L: int, beam_width: Optional[int] = None,
+                   rerank: bool = True):
+    """The whole §5.2 steady-state query as ONE jitted device program.
+
+    Beam-searches every lane (TempIndex tiers on exact L2, the LTI lane on
+    PQ ADC) in one vmapped pass, exact-reranks the LTI lane's candidates,
+    takes the per-lane top-``k_lane``, maps slots to external ids, filters
+    the DeleteList (``drop``), and merges to the global top-``k`` — all
+    on-device, one dispatch per query batch however many tiers are live.
+    Returns (ext_ids [B, k], dists [B, k], hops [T, B], cmps [T, B]); the
+    per-lane counters feed the beam-width autotuner's unified cost model.
+    """
+    ids, d, hops, cmps = search_lanes(stack, queries, cfg, k=k_lane, L=L,
+                                      beam_width=beam_width, rerank=rerank)
+    mi, md = fanout_merge(ids, d, tables, drop, k=k)
+    return mi, md, hops, cmps
 
 
 def build(vectors: np.ndarray | jax.Array, cfg: IndexConfig,

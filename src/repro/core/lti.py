@@ -6,11 +6,15 @@ vectors resident in the capacity tier ("SSD" = pod HBM here) used only for the
 final exact rerank of the candidate list — exactly DiskANN's search recipe.
 
 ``search_lti`` rides the fused beam engine (``core.search``): each IO round
-is one batched ADC distance call plus one ``frontier_select`` launch.  In the
-system fan-out (§5.2) the LTI is queried alongside the batched temp-tier
-search; its (hops, cmps) counters are what the beam-width autotuner
-(``core.autotune``) calibrates against, since the LTI is the tier whose IO
-rounds model the paper's SSD round trips.
+is one batched ADC distance call plus one ``frontier_select`` launch.  In
+the system fan-out (§5.2) the LTI normally rides as the PQ lane of the ONE
+unified device program (``index.unified_search`` selects ADC for it and
+exact L2 for the temp lanes, and reranks its candidates in-program);
+``search_lti`` remains the standalone engine — the sequential oracle path
+(``batch_fanout=False``), direct LTI queries, and the per-lane bit-parity
+contract the unified program is tested against.  Its IO rounds model the
+paper's SSD round trips, which is why the LTI lane dominates the beam-width
+autotuner's max-over-lanes latency cost (``core.autotune``).
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ from .config import IndexConfig, PQConfig
 from .graph import GraphState
 from .index import build as mem_build
 from .search import (FullPrecisionBackend, PQBackend, batch_distances,
-                     beam_search, topk_results)
+                     beam_search, rerank_candidates, topk_results)
 
 
 class LTIState(NamedTuple):
@@ -70,9 +74,12 @@ def search_lti(lti: LTIState, queries: jax.Array, cfg: IndexConfig,
     reportable = g.active & ~g.deleted
     if rerank:
         # Exact distances for the final L candidates ("full-precision vectors
-        # fetched from the capacity tier").
-        exact = batch_distances(FullPrecisionBackend(g.vectors), queries,
-                                res.ids, use_kernel=use_kernel)
+        # fetched from the capacity tier").  DeleteList members are masked
+        # BEFORE the gather: they can never be reported, so fetching their
+        # full-precision rows would burn rerank reads for nothing.
+        exact = batch_distances(
+            FullPrecisionBackend(g.vectors), queries,
+            rerank_candidates(res.ids, reportable), use_kernel=use_kernel)
         res = res._replace(dists=exact)
     ids, d = topk_results(res, k, reportable)
     return ids, d, res.n_hops, res.n_cmps

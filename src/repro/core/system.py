@@ -12,20 +12,24 @@ search during a merge sees every point in exactly one consistent place (or
 transiently in two, which the cross-tier dedupe in ``_aggregate`` resolves).
 
 Query fan-out (§5.2): a query must consult the LTI *and* every TempIndex.
-The frozen RO snapshots share a capacity and a distance backend, so they are
-searched as ONE vmapped device call over a stacked graph pytree
-(``index.search_tiers``); the stack is immutable between rollover/merge
-events and therefore cached, while the live RW tier (which mutates on every
-flush) takes the ordinary per-tier path.  The fan-out thus costs a constant
-number of device dispatches (LTI + RW + one batched RO call) however many
-snapshots accumulate, and on lane-parallel hardware search wall-clock stays
-near-flat in RO count.  ``SystemConfig.batch_fanout=False`` restores the
-fully sequential per-tier loop (the bit-parity oracle for tests).
+All live tiers — the RW tier, every frozen RO snapshot, AND the PQ-navigated
+LTI — are folded into one heterogeneous ``LaneStack`` (``graph.stack_lanes``)
+and searched as ONE jitted device program (``index.unified_search``): a
+vmapped beam search with a per-lane backend select (exact L2 on TempIndex
+lanes, PQ ADC on the LTI lane), the LTI's exact rerank, the slot->external-id
+mapping, the DeleteList filter, and the cross-tier top-k merge all happen
+on-device.  The stack and the DeleteList drop-mask are cached between
+mutations, so a pure query workload pays one dispatch per batch however many
+snapshots accumulate.  ``SystemConfig.batch_fanout=False`` restores the
+fully sequential per-tier loop + host-side aggregation (the bit-parity
+oracle for tests): both paths return bit-identical (ids, dists).
+See docs/ARCHITECTURE.md for the full picture.
 
 External ids are user-provided int64s; the system maps them to (tier, slot).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import pickle
 import threading
@@ -42,7 +46,7 @@ from . import index as mem
 from . import pq as pqm
 from .config import IndexConfig, PQConfig, SystemConfig
 from .distance import INVALID
-from .graph import GraphState, empty_graph, stack_graphs
+from .graph import GraphState, empty_graph, pad_graph, stack_lanes
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
 from .wal import WriteAheadLog, log_epoch, replay
@@ -67,6 +71,11 @@ class SystemStats:
     merges: int = 0
     snapshots: int = 0
     merge_seconds: float = 0.0
+    # Jitted device programs launched by `search` calls (the §5.2 fan-out's
+    # serving-cost metric): the unified path pays 1 per batch; the
+    # sequential oracle pays 1 per live tier.  Flush/autotune dispatches are
+    # not counted — this tracks the steady-state query path only.
+    search_dispatches: int = 0
     # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
     # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
     insert_latencies: list = field(default_factory=list)
@@ -89,10 +98,12 @@ class FreshDiskANN:
                  lti_ext_ids: Optional[np.ndarray] = None):
         self.cfg = cfg
         icfg = cfg.index
-        self.temp_cfg = IndexConfig(
-            capacity=cfg.temp_capacity, dim=icfg.dim, R=icfg.R,
-            L_build=icfg.L_build, L_search=icfg.L_search, alpha=icfg.alpha,
-            beam_width=icfg.beam_width, use_kernel=icfg.use_kernel)
+        # Everything except capacity mirrors the LTI's config: the unified
+        # fan-out searches temp lanes and the LTI lane with ONE IndexConfig
+        # (visit bounds, dtype, kernel routing), so any field that diverged
+        # here would break the bit-parity contract with the sequential
+        # oracle (which searches temp tiers with THIS config).
+        self.temp_cfg = dataclasses.replace(icfg, capacity=cfg.temp_capacity)
         if lti is None:
             g = empty_graph(icfg)
             cb = pqm.PQCodebook(jnp.zeros(
@@ -126,7 +137,16 @@ class FreshDiskANN:
         self._merge_inflight = 0             # staged points being merged now
         self._merge_thread: Optional[threading.Thread] = None
         self._tuned_w: Optional[int] = None  # cached autotuned beam width
-        self._fanout_cache: Optional[tuple] = None  # (states, stacked pytree)
+        # Unified-fan-out caches: the LaneStack + ext-id tables (keyed by
+        # tier-state identity — states are immutable values, so a flush /
+        # rollover / merge replaces them and misses the cache) and the
+        # DeleteList drop-mask (additionally keyed by _delete_epoch, bumped
+        # on every DeleteList mutation the tier states don't witness).
+        self._fanout_cache: Optional[tuple] = None
+        self._frozen_cache: Optional[tuple] = None
+        self._drop_cache: Optional[tuple] = None
+        self._delete_epoch = 0
+        self._int32_warned = False
         self.wal: Optional[WriteAheadLog] = None
         if cfg.wal_dir:
             os.makedirs(cfg.wal_dir, exist_ok=True)
@@ -162,7 +182,9 @@ class FreshDiskANN:
             self._insert_buf_v.append(np.asarray(vec, np.float32))
             # Re-insert revives the id immediately (not just at flush time),
             # so `size` and the DeleteList agree while the point is buffered.
-            self.deleted_ext.discard(int(ext_id))
+            if int(ext_id) in self.deleted_ext:
+                self.deleted_ext.discard(int(ext_id))
+                self._delete_epoch += 1  # drop-mask caches must see the revive
             if len(self._insert_buf_id) >= self.cfg.insert_batch:
                 self._flush_inserts()
         self.stats.inserts += 1
@@ -185,6 +207,7 @@ class FreshDiskANN:
                 self._insert_buf_id = [self._insert_buf_id[i] for i in keep]
                 self._insert_buf_v = [self._insert_buf_v[i] for i in keep]
             self.deleted_ext.add(e)
+            self._delete_epoch += 1    # invalidate cached drop-masks
         self.stats.deletes += 1
 
     def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
@@ -192,17 +215,20 @@ class FreshDiskANN:
                ) -> tuple[np.ndarray, np.ndarray]:
         """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2).
 
-        ``beam_width`` overrides the configured W for every per-tier search
-        in the fan-out (LTI and all TempIndices alike); with
-        ``cfg.autotune_beam`` and no override, W comes from the cached
-        hop/cmp calibration (see ``core.autotune``).
+        ``beam_width`` overrides the configured W for every lane in the
+        fan-out (LTI and all TempIndices alike); with ``cfg.autotune_beam``
+        and no override, W comes from the cached hop/cmp calibration
+        (see ``core.autotune``).
 
-        The frozen RO snapshots are searched as one vmapped device call over
-        their stacked graphs (the stack stays cached until a rollover or
-        merge changes the RO set); the live RW tier takes the per-tier path
-        (its graph mutates on every flush, so stacking it would defeat the
-        cache).  Results are bit-identical to the fully sequential loop
-        (``cfg.batch_fanout=False``).
+        With ``cfg.batch_fanout`` (the default) the whole fan-out — RW tier,
+        every frozen RO snapshot, and the PQ-navigated LTI lane — runs as
+        ONE jitted device program (``index.unified_search``): per-lane
+        backend select, LTI exact rerank, DeleteList filter, and cross-tier
+        top-k merge all on-device.  The LaneStack is cached by tier-state
+        identity, so only mutations (flush / rollover / merge) pay a
+        restack.  ``cfg.batch_fanout=False`` runs the sequential per-tier
+        loop with host-side aggregation — the bit-parity oracle: both paths
+        return bit-identical (ids, dists).
         """
         self._flush_inserts()
         L = L or self.cfg.index.L_search
@@ -213,46 +239,43 @@ class FreshDiskANN:
                 f"returned; raise L or lower k")
         W = beam_width or self._beam_width(queries)
         q = jnp.asarray(queries, jnp.float32)
-        cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
         # Over-fetch so DeleteList filtering + cross-tier dedupe still leave k.
         kk = min(max(k * 2, k + 8), L)
-        # Capture order matters: RW before RO before LTI.  A concurrent
-        # rollover moves RW -> RO, and a concurrent merge moves RO -> LTI,
-        # so capturing each tier BEFORE its points' destination means an
-        # interleaved move lands the points in BOTH captures (the dedupe in
-        # _aggregate resolves that) rather than in neither (a gap).
-        rw = self.rw                             # single read
-        rw_t = rw if rw.n > 0 else None
-        with self._ro_lock:
-            ro_temps = [t for t in self.ro if t.n > 0]
-        lti, lti_table = self._lti_pair          # one consistent generation
-        if int(lti.graph.n_total) > 0:
+        rw_t, ro_temps, lti_entry = self._capture_lanes()
+        self.stats.searches += len(queries)
+        nq = queries.shape[0]
+        if rw_t is None and not ro_temps and lti_entry is None:
+            return self._aggregate([], k, nq)
+        if self.cfg.batch_fanout:
+            bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
+            if bundle is not None:
+                key, stack, tables, tables_np = bundle
+                drop = self._drop_mask(key, tables_np)
+                # rerank only matters to the PQ lane (is_pq selects its
+                # exact pass); with no LTI lane it would be dead compute.
+                ids, d, _, _ = mem.unified_search(
+                    stack, tables, drop, q, self.cfg.index, k=k, k_lane=kk,
+                    L=L, beam_width=W,
+                    rerank=self.cfg.rerank and lti_entry is not None)
+                self.stats.search_dispatches += 1
+                return (np.asarray(ids).astype(np.int64),
+                        np.asarray(d).astype(np.float32))
+        # Sequential oracle: one device program per tier + host aggregation.
+        cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
+        if lti_entry is not None:
+            lti, lti_table = lti_entry
             ids, d, _, _ = search_lti(lti, q, self.cfg.index, k=kk, L=L,
-                                      beam_width=W)
+                                      beam_width=W, rerank=self.cfg.rerank)
+            self.stats.search_dispatches += 1
             cands.append((self._map_ext(np.asarray(ids), lti_table),
                           np.asarray(d)))
-        batched = (ro_temps if self.cfg.batch_fanout and len(ro_temps) >= 2
-                   else [])                      # frozen RO tiers only
-        sequential = ([rw_t] if rw_t is not None else []) + (
-            [] if batched else ro_temps)
-        for t in sequential:
+        for t in ([rw_t] if rw_t is not None else []) + ro_temps:
             ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
                                       L=L, beam_width=W)
+            self.stats.search_dispatches += 1
             cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
                           np.asarray(d)))
-        if batched:
-            # One fused fan-out over the frozen snapshots: stack their
-            # graphs (same capacity, so the stack is copy-only) and run
-            # every tier x query lane in a single vmapped search.
-            stacked = self._stacked_temps(batched)
-            ids, d, _, _ = mem.search_tiers(stacked, q, self.temp_cfg,
-                                            k=kk, L=L, beam_width=W)
-            ids_np, d_np = np.asarray(ids), np.asarray(d)
-            for ti, t in enumerate(batched):
-                cands.append((self._map_ext(ids_np[ti], t.ext_ids),
-                              d_np[ti]))
-        self.stats.searches += len(queries)
-        return self._aggregate(cands, k, queries.shape[0])
+        return self._aggregate(cands, k, nq)
 
     def _beam_width(self, queries: np.ndarray) -> int:
         """Resolve W: autotuned (and cached until the next merge) or static."""
@@ -266,7 +289,15 @@ class FreshDiskANN:
         return self._tuned_w
 
     def _calibrate_beam(self, queries: np.ndarray) -> Optional[int]:
-        """Probe the largest tier at each candidate W; pick by hop/cmp cost.
+        """Probe the serving configuration at each candidate W; pick by
+        hop/cmp cost.
+
+        With ``batch_fanout`` the probe runs the SAME unified device program
+        queries pay for, so the tuner costs what serving costs: per-query
+        IO rounds are the max over lanes (lanes run concurrently, latency
+        follows the slowest lane — the LTI in steady state) and distance
+        computations are summed across lanes (total work).  Without it the
+        probe falls back to the largest single tier, as before.
 
         Returns None when no tier is big enough for the hop/cmp profile to
         be representative (a handful of points terminates in 1-2 hops at
@@ -275,36 +306,165 @@ class FreshDiskANN:
         """
         L = self.cfg.index.L_search
         probe = jnp.asarray(queries[:8], jnp.float32)
-        lti, _ = self._lti_pair
-        if int(lti.graph.n_total) >= L:
-            def run(W):
-                _, _, hops, cmps = search_lti(lti, probe, self.cfg.index,
-                                              k=1, L=L, beam_width=W)
-                return hops, cmps
-        elif self.rw.n >= L:
-            def run(W):
-                _, _, hops, cmps = mem.search(self.rw.state, probe,
-                                              self.temp_cfg, k=1, L=L,
-                                              beam_width=W)
-                return hops, cmps
-        else:
+        rw_t, ro_temps, lti_entry = self._capture_lanes()
+        sizes = ([rw_t.n] if rw_t is not None else []) \
+            + [t.n for t in ro_temps] \
+            + ([int(lti_entry[0].graph.n_total)] if lti_entry else [])
+        if not sizes or max(sizes) < L:
             return None
+        run = None
+        if self.cfg.batch_fanout:
+            bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
+            if bundle is not None:
+                key, stack, tables, tables_np = bundle
+                drop = self._drop_mask(key, tables_np)
+
+                def run(W):
+                    _, _, hops, cmps = mem.unified_search(
+                        stack, tables, drop, probe, self.cfg.index, k=1,
+                        k_lane=1, L=L, beam_width=W,
+                        rerank=self.cfg.rerank and lti_entry is not None)
+                    return (np.asarray(hops).max(axis=0),
+                            np.asarray(cmps).sum(axis=0))
+        if run is None:
+            lti, _ = self._lti_pair
+            if int(lti.graph.n_total) >= L:
+                def run(W):
+                    _, _, hops, cmps = search_lti(lti, probe, self.cfg.index,
+                                                  k=1, L=L, beam_width=W)
+                    return hops, cmps
+            elif self.rw.n >= L:
+                def run(W):
+                    _, _, hops, cmps = mem.search(self.rw.state, probe,
+                                                  self.temp_cfg, k=1, L=L,
+                                                  beam_width=W)
+                    return hops, cmps
+            else:
+                return None
         points = autotune.measure_widths(run, self.cfg.beam_width_candidates)
         return autotune.pick_beam_width(points)
 
     # ------------------------------------------------------------- plumbing
-    def _stacked_temps(self, temps: list) -> GraphState:
-        """The [T, ...] stacked graph pytree for the fan-out, cached by tier
-        identity (graph states are immutable values: a flush or rollover
-        replaces them, which drops the cache entry)."""
-        states = tuple(t.state for t in temps)
+    def _capture_lanes(self):
+        """One consistent capture of every searchable tier.
+
+        Capture order matters: RW before RO before LTI.  A concurrent
+        rollover moves RW -> RO, and a concurrent merge moves RO -> LTI, so
+        capturing each tier BEFORE its points' destination means an
+        interleaved move lands the points in BOTH captures (the cross-tier
+        dedupe resolves that) rather than in neither (a gap).
+        """
+        rw = self.rw                             # single read
+        rw_t = rw if rw.n > 0 else None
+        with self._ro_lock:
+            ro_temps = [t for t in self.ro if t.n > 0]
+        lti, lti_table = self._lti_pair          # one consistent generation
+        lti_entry = (lti, lti_table) if int(lti.graph.n_total) > 0 else None
+        return rw_t, ro_temps, lti_entry
+
+    @staticmethod
+    def _key_hits(cached_key, key) -> bool:
+        return (cached_key is not None and len(cached_key) == len(key)
+                and all(a is b for a, b in zip(cached_key, key)))
+
+    @staticmethod
+    def _fits_int32(a: np.ndarray) -> bool:
+        return (a.max(initial=-1) <= np.iinfo(np.int32).max
+                and a.min(initial=0) >= np.iinfo(np.int32).min)
+
+    def _lane_bundle(self, rw_t, ro_temps, lti_entry):
+        """(key, LaneStack, ext tables [T, cap] i32 device, tables np) for
+        the unified fan-out — cached by tier-state identity (states are
+        immutable values: a flush / rollover / merge replaces them, which
+        misses the cache).  Returns None when an external id overflows
+        int32 (the on-device merge carries ids as i32); the verdict is
+        cached too, so the fallback costs nothing per search.
+
+        Two cache levels: the full bundle (missed by any tier mutation),
+        and a frozen sub-cache of the RO + LTI lanes' padded graphs, table
+        rows, and id-range verdict — those only change on rollover/merge,
+        so the RW flushes that dominate a steady-state insert+search
+        stream re-pad and re-scan ONLY the RW lane (the final [T, ...]
+        device stack is still rebuilt: that copy is what buys the single
+        dispatch).
+        """
+        fp = ([rw_t] if rw_t is not None else []) + ro_temps
+        key = tuple(t.state for t in fp) + (
+            (lti_entry[0],) if lti_entry is not None else ())
         cached = self._fanout_cache
-        if (cached is not None and len(cached[0]) == len(states)
-                and all(a is b for a, b in zip(cached[0], states))):
+        if cached is not None and self._key_hits(cached[0], key):
             return cached[1]
-        stacked = stack_graphs(list(states))
-        self._fanout_cache = (states, stacked)
-        return stacked
+
+        states = [t.state for t in fp]
+        ext_tabs = [t.ext_ids for t in fp]
+        pq_lane = codes = codebook = None
+        if lti_entry is not None:
+            lti, lti_table = lti_entry
+            states.append(lti.graph)
+            ext_tabs.append(lti_table)
+            pq_lane = len(states) - 1
+            codes, codebook = lti.codes, lti.codebook.centroids
+        cap = max(s.capacity for s in states)
+
+        n_froz = len(ro_temps) + (1 if lti_entry is not None else 0)
+        fkey = (tuple(t.state for t in ro_temps)
+                + ((lti_entry[0],) if lti_entry is not None else ()))
+        fcached = self._frozen_cache
+        if (fcached is not None and fcached[1] == cap
+                and self._key_hits(fcached[0], fkey)):
+            froz_states, froz_tabs, froz_ok = fcached[2:]
+        else:
+            froz_states = [pad_graph(s, cap) for s in states[-n_froz:]
+                           ] if n_froz else []
+            froz_tabs = np.full((n_froz, cap), -1, np.int64)
+            for fi, tab in enumerate(ext_tabs[len(ext_tabs) - n_froz:]):
+                froz_tabs[fi, :len(tab)] = tab
+            froz_ok = self._fits_int32(froz_tabs)
+            self._frozen_cache = (fkey, cap, froz_states, froz_tabs,
+                                  froz_ok)
+
+        n_rw = 1 if rw_t is not None else 0
+        rw_tabs = np.full((n_rw, cap), -1, np.int64)
+        if n_rw:
+            rw_tabs[0, :len(rw_t.ext_ids)] = rw_t.ext_ids
+        tables_np = np.concatenate([rw_tabs, froz_tabs])
+        if not (froz_ok and self._fits_int32(rw_tabs)):
+            if not self._int32_warned:
+                self._int32_warned = True
+                import warnings
+                warnings.warn(
+                    "external ids exceed int32: the on-device unified "
+                    "fan-out is disabled, searches use the sequential "
+                    "per-tier path")
+            self._fanout_cache = (key, None)
+            return None
+        lanes = ([pad_graph(rw_t.state, cap)] if n_rw else []) + froz_states
+        stack = stack_lanes(lanes, codes=codes, codebook=codebook,
+                            pq_lane=pq_lane)
+        bundle = (key, stack, jnp.asarray(tables_np.astype(np.int32)),
+                  tables_np)
+        self._fanout_cache = (key, bundle)
+        return bundle
+
+    def _drop_mask(self, key: tuple, tables_np: np.ndarray) -> jax.Array:
+        """[T, cap] bool DeleteList membership per slot, for the on-device
+        filter.  Cached by (lane key, delete epoch): tier mutations change
+        the key; DeleteList mutations the states don't witness (delete of
+        an LTI/RO resident, re-insert revival) bump ``_delete_epoch``."""
+        epoch = self._delete_epoch
+        cached = self._drop_cache
+        if (cached is not None and cached[1] == epoch
+                and self._key_hits(cached[0], key)):
+            return cached[2]
+        deleted = self.deleted_ext.copy()        # GIL-atomic vs bg merge
+        if deleted:
+            dl = np.fromiter(deleted, np.int64, len(deleted))
+            mask = np.isin(tables_np, dl)
+        else:
+            mask = np.zeros(tables_np.shape, bool)
+        drop = jnp.asarray(mask)
+        self._drop_cache = (key, epoch, drop)
+        return drop
 
     def _new_temp(self) -> _Temp:
         return _Temp(empty_graph(self.temp_cfg),
@@ -521,6 +681,8 @@ class FreshDiskANN:
             self._merge_inflight = 0
         self._tuned_w = None       # the graph changed: re-calibrate W
         self._fanout_cache = None  # retired RO stacks must not stay resident
+        self._frozen_cache = None
+        self._drop_cache = None
         # A delete may leave the DeleteList only when NO copy of the id
         # survives the merge anywhere — LTI residents left via the dmask
         # pass and merged-RO residents were skipped at staging, but a
@@ -530,6 +692,7 @@ class FreshDiskANN:
         alive = self._live_ext_ids()
         dl = np.fromiter(del_snapshot, np.int64, len(del_snapshot))
         self.deleted_ext -= set(dl[~np.isin(dl, alive)].tolist())
+        self._delete_epoch += 1
         if self.wal:
             if self.cfg.snapshot_dir:
                 # Durability invariant (§5.6): snapshot BEFORE truncate, so

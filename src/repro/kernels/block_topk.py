@@ -10,6 +10,9 @@ pure VPU ops, no sort network needed for the k≲128 regime the paper uses.
 
 Grid: (Q / block_q, N / block_n); the output tile is written on the final
 N-step only.
+
+Contract: ``ref.block_topk_ref`` (see docs/KERNELS.md); parity enforced by
+``tests/test_kernels.py::test_topk_matches_ref``.
 """
 from __future__ import annotations
 

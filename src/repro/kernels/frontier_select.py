@@ -23,6 +23,9 @@ occupancy == vis_cnt by construction, and the kernel needs no scalar operand
 
 All rows are [1, N] lane vectors padded to 128 multiples by the ops wrapper;
 padding lanes carry (INVALID, +inf) and are inert in every step above.
+
+Contract: ``ref.frontier_select_ref`` (see docs/KERNELS.md); parity
+enforced by ``tests/test_kernels.py::test_frontier_select_matches_ref``.
 """
 from __future__ import annotations
 

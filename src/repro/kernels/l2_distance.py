@@ -10,6 +10,9 @@ is computed entirely in VMEM with one HBM read per operand tile.
 Grid: (Q / block_q, N / block_n, d / block_d) with accumulation over the
 contraction dimension in a VMEM scratch accumulator (classic Pallas matmul
 schedule; the d-axis is the innermost, sequential grid dimension).
+
+Contract: ``ref.l2_distances_ref`` (see docs/KERNELS.md); parity enforced
+by ``tests/test_kernels.py::test_l2_matches_ref``.
 """
 from __future__ import annotations
 

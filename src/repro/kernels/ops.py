@@ -3,7 +3,9 @@
 Responsibilities: pad inputs to block multiples, pick interpret mode on CPU
 (this container validates kernels with ``interpret=True``; on TPU the same
 code compiles to Mosaic), and slice padding back off.  Every wrapper is
-numerically interchangeable with its ``ref.py`` oracle.
+numerically interchangeable with its ``ref.py`` oracle — the per-kernel
+contracts (reference, shape/dtype/padding invariants, parity tests) are
+tabulated in docs/KERNELS.md.
 """
 from __future__ import annotations
 

@@ -15,6 +15,9 @@ comparison, so HBM traffic is exactly codes (1 byte/entry) + LUTs + outputs.
 
 Grid: (N / block_n, Q / block_q); each cell reads a [block_n, m] uint8 code
 block and a [block_q, m, ksub] LUT block, both VMEM-resident.
+
+Contract: ``ref.adc_distances_ref`` (see docs/KERNELS.md); parity enforced
+by ``tests/test_kernels.py::test_adc_matches_ref``.
 """
 from __future__ import annotations
 

@@ -2,7 +2,9 @@
 
 These are the semantics the kernels must match (asserted by the per-kernel
 allclose sweeps in ``tests/test_kernels.py``).  They are also the CPU
-fallback used when a kernel is disabled.
+fallback used when a kernel is disabled.  docs/KERNELS.md tabulates each
+contract: reference function, shape/dtype/padding invariants, and the
+bit-parity test that enforces it.
 """
 from __future__ import annotations
 

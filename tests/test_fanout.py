@@ -1,6 +1,9 @@
-"""Batched multi-tier query fan-out: the vmapped stacked-tier search must be
-bit-identical to the sequential per-tier loop, tier padding must be inert,
-k<=L must be validated, and threshold merges must honor the background knob."""
+"""Batched multi-tier query fan-out: the unified heterogeneous-lane program
+(RW + RO tiers + PQ-navigated LTI lane in ONE device dispatch) must be
+bit-identical to the sequential per-tier loop across deletes, merges and
+beam-width sweeps; per-lane results must match the dedicated engines
+counter-for-counter; tier padding must be inert; k<=L must be validated;
+and threshold merges must honor the background knob."""
 import numpy as np
 import pytest
 
@@ -8,7 +11,9 @@ import jax.numpy as jnp
 
 from repro.core import index as mem
 from repro.core.config import IndexConfig, PQConfig, SystemConfig
-from repro.core.graph import pad_graph, stack_graphs
+from repro.core.graph import pad_graph, stack_graphs, stack_lanes
+from repro.core.lti import build_lti, search_lti
+from repro.core.search import rerank_candidates
 from repro.core.system import bootstrap_system
 
 from conftest import DIM
@@ -77,6 +82,169 @@ def test_search_tiers_matches_per_tier_search(points, queries):
                                       np.asarray(whops))
         np.testing.assert_array_equal(np.asarray(cmps[ti]),
                                       np.asarray(wcmps))
+
+
+_CROSS_TIER_DELETES = (0, 5, 399,      # LTI residents
+                       2000, 2010,     # first RO snapshot residents
+                       2149)           # RW resident
+
+
+@pytest.mark.parametrize("W", [1, 4])
+def test_unified_lti_lane_parity_with_deletes(points, queries, W):
+    """The tentpole acceptance bar: LTI + RO + RW as ONE device program,
+    bit-identical to the sequential search_lti + per-tier loop — with
+    DeleteList members spread across every tier, at multiple beam widths."""
+    sys_u = _three_tier_system(points)
+    sys_s = _three_tier_system(points, batch_fanout=False)
+    for s in (sys_u, sys_s):
+        for e in _CROSS_TIER_DELETES:
+            s.delete(e)
+    ids_u, d_u = sys_u.search(queries, k=5, beam_width=W)
+    ids_s, d_s = sys_s.search(queries, k=5, beam_width=W)
+    np.testing.assert_array_equal(ids_u, ids_s)
+    np.testing.assert_array_equal(d_u, d_s)
+    assert not np.isin(ids_u, _CROSS_TIER_DELETES).any()
+
+
+def test_unified_parity_across_delete_then_reinsert(points, queries):
+    """A delete followed by re-insert revives the id in BOTH paths: the
+    device-side drop-mask cache must see the revival (delete-epoch key)."""
+    sys_u = _three_tier_system(points)
+    sys_s = _three_tier_system(points, batch_fanout=False)
+    for s in (sys_u, sys_s):
+        s.search(queries[:4], k=5)          # warm the drop-mask cache
+        s.delete(2000)
+        s.delete(3)
+        s.insert(3, points[3])              # revive an LTI resident
+    ids_u, d_u = sys_u.search(queries, k=5)
+    ids_s, d_s = sys_s.search(queries, k=5)
+    np.testing.assert_array_equal(ids_u, ids_s)
+    np.testing.assert_array_equal(d_u, d_s)
+    assert 3 in np.asarray(sys_u.search(points[3:4], k=1)[0])
+
+
+def test_unified_parity_after_merge(points, queries):
+    """StreamingMerge retires RO tiers into the LTI; the unified program
+    must restack and stay bit-identical to the oracle afterwards."""
+    sys_u = _three_tier_system(points)
+    sys_s = _three_tier_system(points, batch_fanout=False)
+    for s in (sys_u, sys_s):
+        s.delete(2001)
+        s.merge()
+    assert sys_u.stats.merges == 1 and not sys_u.ro
+    ids_u, d_u = sys_u.search(queries, k=5)
+    ids_s, d_s = sys_s.search(queries, k=5)
+    np.testing.assert_array_equal(ids_u, ids_s)
+    np.testing.assert_array_equal(d_u, d_s)
+
+
+def test_search_lanes_matches_dedicated_engines(points, queries):
+    """Per-lane (ids, dists, hops, cmps) of the heterogeneous-lane search ==
+    the dedicated engines: mem.search on each temp tier, search_lti on the
+    PQ lane — counters included (IO-round accounting must not drift)."""
+    icfg = IndexConfig(capacity=1024, dim=DIM, R=20, L_build=28,
+                      L_search=40, alpha=1.2)
+    pqc = PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4)
+    lti = build_lti(points[:500], icfg, pqc, batch=64)
+    tcfg = IndexConfig(capacity=256, dim=DIM, R=20, L_build=28,
+                       L_search=40, alpha=1.2)
+    g1 = mem.build(points[500:700], tcfg, batch=32)
+    g2 = mem.build(points[700:950], tcfg, batch=32)
+    stack = stack_lanes([g1, g2, lti.graph], codes=lti.codes,
+                        codebook=lti.codebook.centroids, pq_lane=2)
+    q = jnp.asarray(queries[:8])
+    ids, d, hops, cmps = mem.search_lanes(stack, q, icfg, k=6, L=40)
+    for ti, g in enumerate([g1, g2]):
+        wids, wd, whops, wcmps = mem.search(g, q, icfg, k=6, L=40)
+        np.testing.assert_array_equal(np.asarray(ids[ti]), np.asarray(wids),
+                                      err_msg=f"lane {ti}")
+        np.testing.assert_array_equal(np.asarray(d[ti]), np.asarray(wd))
+        np.testing.assert_array_equal(np.asarray(hops[ti]), np.asarray(whops))
+        np.testing.assert_array_equal(np.asarray(cmps[ti]), np.asarray(wcmps))
+    wids, wd, whops, wcmps = search_lti(lti, q, icfg, k=6, L=40)
+    np.testing.assert_array_equal(np.asarray(ids[2]), np.asarray(wids),
+                                  err_msg="PQ lane")
+    np.testing.assert_array_equal(np.asarray(d[2]), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(hops[2]), np.asarray(whops))
+    np.testing.assert_array_equal(np.asarray(cmps[2]), np.asarray(wcmps))
+
+
+def test_unified_dispatch_count(points, queries):
+    """The serving-cost claim: one device program per batch under the
+    unified fan-out vs one per live tier (LTI + RW + 2 RO = 4) without."""
+    sys_u = _three_tier_system(points)
+    sys_s = _three_tier_system(points, batch_fanout=False)
+    d0 = sys_u.stats.search_dispatches
+    sys_u.search(queries[:4], k=5)
+    assert sys_u.stats.search_dispatches - d0 == 1
+    d0 = sys_s.stats.search_dispatches
+    sys_s.search(queries[:4], k=5)
+    assert sys_s.stats.search_dispatches - d0 == 4
+
+
+def test_unified_parity_with_explicit_max_visits(points, queries):
+    """An explicit IndexConfig.max_visits must bound temp lanes and the LTI
+    lane identically in BOTH paths (temp_cfg mirrors every non-capacity
+    field), or the unified program and the oracle diverge."""
+    icfg = IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                       L_search=64, alpha=1.2, max_visits=40)
+    sys_u = _three_tier_system(points, index=icfg)
+    sys_s = _three_tier_system(points, index=icfg, batch_fanout=False)
+    ids_u, d_u = sys_u.search(queries[:16], k=5)
+    ids_s, d_s = sys_s.search(queries[:16], k=5)
+    np.testing.assert_array_equal(ids_u, ids_s)
+    np.testing.assert_array_equal(d_u, d_s)
+
+
+def test_unified_falls_back_on_non_int32_ext_ids(points):
+    """External ids outside int32 range cannot ride the on-device merge
+    (ids travel as i32): the system must warn once and serve every search
+    from the sequential oracle instead of silently wrapping the id."""
+    import warnings
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    sys_.insert(-(2 ** 35), points[500])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sys_.search(points[:4], k=3)
+        assert any("int32" in str(x.message) for x in w)
+    d0 = sys_.stats.search_dispatches
+    sys_.search(points[:4], k=3)
+    assert sys_.stats.search_dispatches - d0 == 2    # LTI + RW, per tier
+
+
+def test_rerank_candidates_masks_deleted():
+    """Regression (§5.2 small fix): DeleteList members must be masked to
+    INVALID *before* the exact-rerank gather so they don't burn rerank
+    reads; valid live candidates pass through untouched."""
+    reportable = jnp.asarray([True, False, True, False])
+    ids = jnp.asarray([[0, 1, 2, 3, -1]], jnp.int32)
+    out = np.asarray(rerank_candidates(ids, reportable))
+    np.testing.assert_array_equal(out, [[0, -1, 2, -1, -1]])
+
+
+def test_search_lti_rerank_ignores_deleted_vectors(points, queries):
+    """End-to-end: poison the full-precision vectors of deleted LTI rows
+    (simulating freed capacity-tier storage) — the rerank must not read
+    them, so results stay finite and identical to the unpoisoned graph."""
+    from repro.core.lti import LTIState
+    icfg = IndexConfig(capacity=600, dim=DIM, R=20, L_build=28,
+                       L_search=33, alpha=1.2)
+    pqc = PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4)
+    lti = build_lti(points[:400], icfg, pqc, batch=64)
+    victims = jnp.arange(0, 400, 7)
+    g = lti.graph._replace(
+        deleted=lti.graph.deleted.at[victims].set(True))
+    poisoned = LTIState(
+        g._replace(vectors=g.vectors.at[victims].set(jnp.nan)),
+        lti.codes, lti.codebook)
+    clean = LTIState(g, lti.codes, lti.codebook)
+    q = jnp.asarray(queries[:8])
+    ids_p, d_p, _, _ = search_lti(poisoned, q, icfg, k=5, L=33)
+    ids_c, d_c, _, _ = search_lti(clean, q, icfg, k=5, L=33)
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_c))
+    np.testing.assert_array_equal(np.asarray(d_p), np.asarray(d_c))
+    assert np.isfinite(np.asarray(d_p)).all()
+    assert not np.isin(np.asarray(ids_p), np.asarray(victims)).any()
 
 
 def test_pad_graph_is_inert(points, queries):
