@@ -1,0 +1,149 @@
+"""Update-path benchmarks: the mutation engine's throughput trajectory.
+
+Two record families, both with an ``engine`` column (jnp oracle vs fused
+Pallas kernels):
+
+  ``prune_launch_*``   engine-level microbench of ONE ``robust_prune_batch``
+                       launch at the insert and repair operating shapes —
+                       the direct jnp-vs-fused comparison the acceptance
+                       bar reads (the fused launch must not be slower).
+  everything else      end-to-end mutation ops: batched inserts
+                       (Algorithm 2), delete consolidation (Algorithm 4),
+                       and the three-phase StreamingMerge (§5.3, both
+                       distance flavors).  On CPU these run the Pallas
+                       *interpreter*; the insert/build rows also inherit
+                       the query-side kernels' known interpreter overhead
+                       (see ROADMAP.md), so the end-to-end kernel columns
+                       bound — not demonstrate — the fusion win until run
+                       on TPU (the JSON's top-level ``backend`` field
+                       labels the columns).
+
+Emits ``BENCH_update_path.json``.  Run:
+``python -c "from benchmarks.bench_update_path import main; main()"``
+(``main(quick=True)`` in CI / scripts/smoke.sh).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (dataset, default_cfg, default_pq, emit,
+                               timed, write_bench_json)
+from repro.core import index as mem
+from repro.core.delete import consolidate_deletes, delete
+from repro.core.lti import build_lti
+from repro.core.merge import streaming_merge
+
+
+def bench_prune_launch(engine: str, use_kernel: bool, dim: int) -> None:
+    """One robust_prune_batch launch at the three hot operating shapes:
+    the Algorithm-2 insert prune (visited-pool candidates), the Delta patch
+    (combine = R + d_max lanes over a big affected block), and the
+    StreamingMerge SDC repair (capped expansion over PQ codes)."""
+    from repro.core.prune import (FullPrecisionPrune, SDCPrune,
+                                  robust_prune_batch)
+    from repro.core import pq as pqm
+    from repro.core.config import PQConfig
+
+    r = np.random.default_rng(0)
+    table = jnp.asarray(r.standard_normal((4096, dim)).astype(np.float32))
+    pq_cfg = PQConfig(dim=dim, m=8, ksub=64, kmeans_iters=2)
+    cb = pqm.train_pq(table[:1024], pq_cfg)
+    sdc = SDCPrune(pqm.encode(cb, table, pq_cfg), pqm.sdc_tables(cb))
+    shapes = (("insert", "fp", 128, 116), ("patch", "fp", 1024, 56),
+              ("repair_sdc", "sdc", 256, 252))
+    for tag, kind, B, C in shapes:
+        cand = jnp.asarray(r.integers(-1, 4096, (B, C)).astype(np.int32))
+        ok = (cand >= 0)
+        if kind == "fp":
+            pb = FullPrecisionPrune(table)
+            anchors = jnp.asarray(
+                r.standard_normal((B, dim)).astype(np.float32))
+        else:
+            pb = sdc
+            anchors = pb.anchor_of(jnp.asarray(
+                r.integers(0, 4096, B).astype(np.int32)))
+        run = jax.jit(lambda pb=pb, cand=cand, ok=ok, anchors=anchors:
+                      robust_prune_batch(pb, cand, ok, alpha=1.2, R=28,
+                                         use_kernel=use_kernel,
+                                         anchors=anchors).ids)
+        jax.block_until_ready(run())      # engine callers are always jitted
+        _, t = timed(run, repeats=10)
+        emit(f"prune_launch_{tag}_{engine}", t, f"B={B} C={C}",
+             rows_per_s=B / t, engine=engine)
+
+
+def bench_engine(engine: str, use_kernel: bool, pts: np.ndarray,
+                 quick: bool) -> None:
+    n, dim = pts.shape
+    half = n // 2
+    cfg = default_cfg(n, dim, use_kernel=use_kernel)
+    pq_cfg = default_pq(dim)
+
+    t0 = time.perf_counter()
+    state = mem.build(pts[:half], cfg, batch=128)
+    jax.block_until_ready(state.adjacency)
+    emit(f"build_{engine}", time.perf_counter() - t0, f"n={half}",
+         points_per_s=half / (time.perf_counter() - t0), engine=engine)
+
+    # Batched insert (Algorithm 2): steady-state RW-tier flush shape.
+    B = 128
+    slots = jnp.arange(half, half + B, dtype=jnp.int32)
+    vecs = jnp.asarray(pts[half:half + B])
+    mem.insert(state, slots, vecs, cfg)                  # compile
+    _, t_ins = timed(mem.insert, state, slots, vecs, cfg,
+                     repeats=1 if quick else 3)
+    emit(f"insert_batch_{engine}", t_ins, f"B={B}",
+         inserts_per_s=B / t_ins, engine=engine)
+
+    # Delete consolidation (Algorithm 4) over ~8% of the index.
+    victims = jnp.asarray(np.arange(0, half, 13), jnp.int32)
+    gd = delete(state, victims)
+    consolidate_deletes(gd, cfg)                         # compile
+    _, t_con = timed(consolidate_deletes, gd, cfg,
+                     repeats=1 if quick else 3)
+    nv = victims.shape[0]
+    emit(f"consolidate_{engine}", t_con, f"ndel={nv}",
+         deletes_per_s=nv / t_con, engine=engine)
+
+    # StreamingMerge: deletes + staged inserts folded into the LTI.
+    lti = build_lti(pts[:half], cfg, pq_cfg, batch=128)
+    n_new = min(n - half, 256)
+    newv = jnp.asarray(pts[half:half + n_new])
+    valid = jnp.ones((n_new,), bool)
+    dmask = jnp.zeros((cfg.capacity,), bool).at[
+        jnp.arange(0, half, 17)].set(True)
+    flavors = ((("sdc", True),) if quick               # the §5.3 operating
+               else (("decoded", False), ("sdc", True)))   # point
+    for flavor, use_sdc in flavors:
+        args = (lti, newv, valid, dmask, cfg, pq_cfg)
+        kw = dict(insert_chunk=128, block=512, use_sdc=use_sdc)
+        jax.block_until_ready(
+            streaming_merge(*args, **kw)[0].graph.adjacency)   # compile
+        _, t_m = timed(lambda: streaming_merge(*args, **kw)[0].graph)
+        emit(f"merge_{flavor}_{engine}", t_m,
+             f"staged={n_new} del={int(dmask.sum())}",
+             staged_per_s=n_new / t_m, engine=engine)
+
+
+def main(quick: bool = False) -> str:
+    import gc
+    n = 600 if quick else 3000
+    dim = 32
+    pts = dataset(n, dim)
+    for engine, use_kernel in (("jnp", False), ("kernel", True)):
+        # Fresh executable cache per engine pass: the suite compiles many
+        # jit variants and the CPU jaxlib arena otherwise grows enough to
+        # distort the later engine's warm timings (see tests/conftest.py).
+        jax.clear_caches()
+        gc.collect()
+        bench_prune_launch(engine, use_kernel, dim)
+        bench_engine(engine, use_kernel, pts, quick)
+    return write_bench_json("update_path", quick=quick)
+
+
+if __name__ == "__main__":
+    main()

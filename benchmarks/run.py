@@ -13,7 +13,7 @@ import traceback
 
 from . import (bench_alpha_ablation, bench_build, bench_concurrent,
                bench_io_cost, bench_merge_recall, bench_merge_vs_rebuild,
-               bench_recall_stability, bench_throughput)
+               bench_recall_stability, bench_throughput, bench_update_path)
 
 MODULES = [
     ("fig1_fig2_recall_stability", bench_recall_stability),
@@ -24,6 +24,7 @@ MODULES = [
     ("fig5_fig6_concurrent", bench_concurrent),
     ("fig7_throughput_scaling", bench_throughput),
     ("sec6_io_cost", bench_io_cost),
+    ("sec5_update_path", bench_update_path),
 ]
 
 

@@ -55,6 +55,22 @@ b = ops.frontier_select(cand_i, cand_d, new_i, new_d, vis_i, vis_d,
                         jnp.int32(1), W=W, max_visits=V, use_kernel=False)
 for x, y in zip(a, b):
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+# Mutation engine: fused robust_prune (Pallas interpret) must match the jnp
+# oracle bit-for-bit on an engine-shaped candidate row.
+C, d, Rp = 48, 16, 8
+vecs = jnp.asarray(rng.standard_normal((C, d)).astype(np.float32))
+ids = jnp.asarray(rng.permutation(1000)[:C].astype(np.int32))
+ok = jnp.asarray(rng.random(C) > 0.3)
+anchor = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+diff = anchor[None] - vecs
+d_p = jnp.sum(diff * diff, -1)
+pw = ops.robust_prune_fp(d_p[None], vecs[None], ids[None], ok[None],
+                         alpha=1.2, R=Rp, use_kernel=False)
+pg = ops.robust_prune_fp(d_p[None], vecs[None], ids[None], ok[None],
+                         alpha=1.2, R=Rp, use_kernel=True)
+np.testing.assert_array_equal(np.asarray(pw[0]), np.asarray(pg[0]))
+np.testing.assert_array_equal(np.asarray(pw[1]), np.asarray(pg[1]))
 print(f"# kernel-path smoke ok in {time.time() - t0:.1f}s")
 PY
 

@@ -25,9 +25,13 @@ class IndexConfig:
       beam_width: W — frontier nodes expanded per search iteration (paper
         §6.2 beamwidth).  Each iteration issues W concurrent adjacency
         fetches as one IO round; W=1 is the classic single-expansion search.
-      use_kernel: route batched search distances + candidate-list top-k
-        through the Pallas kernels in ``repro.kernels.ops``.  None (default)
-        auto-selects: kernels on TPU, jnp reference path elsewhere.
+      use_kernel: route the device hot paths through the Pallas kernels in
+        ``repro.kernels.ops`` — batched search distances + the fused
+        frontier step on the query side, AND the mutation engine's fused
+        RobustPrune / delete-repair launches (insert, consolidation,
+        StreamingMerge) on the update side.  None (default) auto-selects:
+        kernels on TPU, jnp reference path elsewhere.  Both paths are
+        bit-identical; the jnp path is the parity oracle.
     """
 
     capacity: int

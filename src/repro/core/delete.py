@@ -9,15 +9,20 @@ is the batched graph repair: every live node p with deleted out-neighbors gets
 
 The pass is blocked (``lax.map`` over node blocks) — the TPU rendition of the
 paper's sequential block-by-block SSD scan: one block of adjacency rows is
-streamed HBM->VMEM, repaired in parallel, written back.
+streamed HBM->VMEM, repaired in parallel, written back.  Under
+``IndexConfig.use_kernel`` each block's repair is ONE fused Pallas launch
+(``kernels.delete_repair``: candidate assembly + all R prune rounds +
+changed-row select, vectorized across the block's rows); the pre-engine
+jnp blocks are kept verbatim as the bit-parity oracle.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .config import IndexConfig
-from .distance import INVALID
+from .distance import INVALID, l2_sq
 from .graph import GraphState, medoid
 from .prune import prune_node
 
@@ -32,7 +37,10 @@ def delete(state: GraphState, slots: jax.Array) -> GraphState:
 
 
 def _repair_block(adjacency, prune_table, deleted, usable, node_ids, alpha, R):
-    """Repair one block of nodes; returns new adjacency rows for the block."""
+    """Repair one block of nodes; returns new adjacency rows for the block.
+
+    The jnp oracle path (``use_kernel=False``): per-node candidate assembly
+    + ``prune_node`` (R sequential rounds as XLA loop steps)."""
 
     def one(p):
         row = adjacency[p]                                        # [R]
@@ -52,6 +60,26 @@ def _repair_block(adjacency, prune_table, deleted, usable, node_ids, alpha, R):
     return jax.vmap(one)(node_ids)
 
 
+def _repair_block_kernel(adjacency, prune_table, deleted, usable, node_ids,
+                         alpha, R):
+    """Kernel path: gathers stay in XLA; masks + R prune rounds + the
+    changed-row select fuse into ONE ``delete_repair_fp`` launch for the
+    whole block.  Bit-identical to ``_repair_block``."""
+    rows = adjacency[node_ids]                                   # [B, R]
+    safe = jnp.maximum(rows, 0)
+    nbr_del = (rows >= 0) & deleted[safe]
+    exp = adjacency[safe]                                        # [B, R, R]
+    B = rows.shape[0]
+    raw = jnp.concatenate([rows, exp.reshape(B, -1)], axis=1)
+    safe_raw = jnp.maximum(raw, 0)
+    cand_vecs = prune_table[safe_raw].astype(jnp.float32)        # [B, C, d]
+    d_p = l2_sq(prune_table[node_ids][:, None, :].astype(jnp.float32),
+                cand_vecs)
+    return ops.delete_repair_fp(
+        rows, nbr_del, exp, nbr_del, usable[safe_raw], d_p, cand_vecs,
+        node_ids, usable[node_ids], alpha=alpha, R=R, use_kernel=True)
+
+
 def consolidate_deletes(state: GraphState, cfg: IndexConfig,
                         block: int = 256,
                         prune_table: jax.Array | None = None) -> GraphState:
@@ -67,10 +95,12 @@ def consolidate_deletes(state: GraphState, cfg: IndexConfig,
     n_blocks = -(-N // block)
     pad = n_blocks * block
     ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(n_blocks, block)
+    repair = (_repair_block_kernel if cfg.kernel_enabled()
+              else _repair_block)
 
     rows = jax.lax.map(
-        lambda b: _repair_block(state.adjacency, table, state.deleted,
-                                usable, b, cfg.alpha, cfg.R),
+        lambda b: repair(state.adjacency, table, state.deleted,
+                         usable, b, cfg.alpha, cfg.R),
         ids)
     adjacency = rows.reshape(pad, cfg.R)[:N]
     # Reclaim: deleted slots become free (edges cleared, flags reset).
@@ -111,6 +141,32 @@ def _repair_block_codes(adjacency, codes, tables, deleted, usable, node_ids,
     return jax.vmap(one)(node_ids)
 
 
+def _repair_block_codes_kernel(adjacency, codes, tables, deleted, usable,
+                               node_ids, alpha, R, cap):
+    """Kernel path of the capped SDC repair — one fused
+    ``delete_repair_sdc`` launch for the whole block.  Bit-identical to
+    ``_repair_block_codes``."""
+    from . import pq as pqm
+
+    rows = adjacency[node_ids]                                   # [B, R]
+    safe = jnp.maximum(rows, 0)
+    nbr_del = (rows >= 0) & deleted[safe]
+    take, idx = jax.lax.top_k(nbr_del.astype(jnp.int32), cap)    # [B, cap]
+    dn = jnp.where(take > 0, jnp.take_along_axis(rows, idx, axis=1), 0)
+    exp = adjacency[dn]                                          # [B, cap, R]
+    B = rows.shape[0]
+    raw = jnp.concatenate([rows, exp.reshape(B, -1)], axis=1)
+    safe_raw = jnp.maximum(raw, 0)
+    cand_codes = codes[safe_raw].astype(jnp.int32)               # [B, C, m]
+    d_p = jax.vmap(lambda sr, p: pqm.adc(codes[sr],
+                                         pqm.sdc_lut(tables, codes[p])))(
+        safe_raw, node_ids)
+    return ops.delete_repair_sdc(
+        rows, nbr_del, exp, take > 0, usable[safe_raw], d_p, cand_codes,
+        tables, node_ids, usable[node_ids], alpha=alpha, R=R,
+        use_kernel=True)
+
+
 def consolidate_deletes_codes(state: GraphState, cfg: IndexConfig,
                               codes: jax.Array, tables: jax.Array,
                               block: int = 1024,
@@ -123,10 +179,12 @@ def consolidate_deletes_codes(state: GraphState, cfg: IndexConfig,
     pad = n_blocks * block
     ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(
         n_blocks, block)
+    repair = (_repair_block_codes_kernel if cfg.kernel_enabled()
+              else _repair_block_codes)
     rows = jax.lax.map(
-        lambda b: _repair_block_codes(state.adjacency, codes, tables,
-                                      state.deleted, usable, b,
-                                      cfg.alpha, cfg.R, cap),
+        lambda b: repair(state.adjacency, codes, tables,
+                         state.deleted, usable, b,
+                         cfg.alpha, cfg.R, cap),
         ids)
     adjacency = rows.reshape(pad, cfg.R)[:N]
     adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)

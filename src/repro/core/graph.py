@@ -86,65 +86,62 @@ def stack_graphs(states: list[GraphState]) -> GraphState:
 class LaneStack(NamedTuple):
     """A heterogeneous-lane stack: the §5.2 query fan-out as ONE pytree.
 
-    ``graphs`` holds every tier's graph padded to a common capacity with
-    [T, ...] leaves (exactly ``stack_graphs``); ``is_pq`` selects, per lane,
-    which distance backend the vmapped search uses — exact L2 over the lane's
-    full-precision vectors for TempIndex lanes, PQ asymmetric distances (ADC)
-    for the LTI lane.  ``codes``/``codebook`` are *shared* across lanes
-    rather than stacked: only the PQ lane gathers meaningful rows from them,
-    and the full-precision lanes' (discarded) ADC results never feed a
-    ``where``-selected output, so one copy suffices and the stack stays
-    O(sum of graph bytes) instead of O(T x LTI codes).
+    Two lane groups, each at its own natural capacity:
+
+    ``temps``  every TempIndex tier (RW + frozen RO snapshots), padded to
+               the largest *temp* capacity and stacked into [Tt, ...] leaves
+               (exactly ``stack_graphs``) — searched with exact L2 over each
+               lane's full-precision vectors, vmapped.
+    ``lti``    the LTI's graph at its OWN capacity, plus its PQ
+               ``codes``/``codebook`` — searched with asymmetric PQ
+               distances (ADC) as a single lane in the same program.
+
+    Keeping the LTI lane un-stacked means the temp group costs
+    O(Tt x temp_cap) instead of O(T x LTI_cap): at production scale the LTI
+    capacity dwarfs every TempIndex, so padding temp lanes up to it (the
+    pre-engine layout) multiplied the dominant term by the tier count.
+    Either group may be ``None`` (no live temps / no LTI yet); the pytree
+    treedef keys the jit cache, so the structure is stable per tier census.
 
     Built by ``stack_lanes``; consumed by ``index.search_lanes`` /
     ``index.unified_search``.  See docs/ARCHITECTURE.md for the full
     query-engine picture.
     """
 
-    graphs: GraphState     # [T, ...] leaves (stacked + padded)
-    codes: jax.Array       # [capacity, m] uint8 — PQ codes (PQ lane only)
-    codebook: jax.Array    # [m, ksub, dsub] f32 centroids (PQ lane only)
-    is_pq: jax.Array       # [T] bool — lane backend select
+    temps: Optional[GraphState]    # [Tt, ...] leaves (stacked + temp-padded)
+    lti: Optional[GraphState]      # LTI graph, own capacity
+    codes: Optional[jax.Array]     # [lti_capacity, m] uint8 — PQ codes
+    codebook: Optional[jax.Array]  # [m, ksub, dsub] f32 centroids
+
+    @property
+    def n_temp_lanes(self) -> int:
+        return 0 if self.temps is None else self.temps.active.shape[0]
 
     @property
     def n_lanes(self) -> int:
-        return self.is_pq.shape[0]
+        return self.n_temp_lanes + (0 if self.lti is None else 1)
 
 
-def stack_lanes(states: list[GraphState], *,
+def stack_lanes(temp_states: list[GraphState], *,
+                lti: Optional[GraphState] = None,
                 codes: Optional[jax.Array] = None,
-                codebook: Optional[jax.Array] = None,
-                pq_lane: Optional[int] = None) -> LaneStack:
-    """Stack full-precision tier graphs and (optionally) one PQ-navigated
-    lane into a ``LaneStack``.
-
-    ``states[pq_lane]`` is the LTI's graph; ``codes`` ([lti_capacity, m]
-    uint8) and ``codebook`` ([m, ksub, dsub] f32 centroids) are its PQ data,
-    row-padded with zeros up to the common stacked capacity.  With
-    ``pq_lane=None`` every lane is full-precision and tiny zero placeholders
-    keep the pytree structure (and jit cache keys) stable.
-    """
-    stacked = stack_graphs(states)
-    cap = stacked.vectors.shape[1]
-    T = len(states)
-    is_pq = jnp.zeros((T,), bool)
-    if pq_lane is None:
-        codes = jnp.zeros((cap, 1), jnp.uint8)
-        codebook = jnp.zeros((1, 1, states[0].dim), jnp.float32)
-    else:
+                codebook: Optional[jax.Array] = None) -> LaneStack:
+    """Stack the full-precision temp tiers (padded to the largest TEMP
+    capacity only) and attach the optional PQ-navigated LTI lane at its own
+    capacity.  ``codes`` ([lti_capacity, m] uint8) and ``codebook``
+    ([m, ksub, dsub] f32 centroids) are required with ``lti``."""
+    stacked = stack_graphs(temp_states) if temp_states else None
+    if lti is not None:
         if codes is None or codebook is None:
-            raise ValueError("pq_lane set but codes/codebook missing")
-        is_pq = is_pq.at[pq_lane].set(True)
-        pad = cap - codes.shape[0]
-        if pad < 0:
+            raise ValueError("lti lane set but codes/codebook missing")
+        if codes.shape[0] != lti.capacity:
             raise ValueError(
-                f"PQ codes cover {codes.shape[0]} slots but the stacked "
-                f"capacity is only {cap}")
-        if pad:
-            codes = jnp.concatenate(
-                [codes, jnp.zeros((pad, codes.shape[1]), codes.dtype)])
+                f"PQ codes cover {codes.shape[0]} slots but the LTI "
+                f"capacity is {lti.capacity}")
         codebook = codebook.astype(jnp.float32)
-    return LaneStack(stacked, codes, codebook, is_pq)
+    else:
+        codes = codebook = None
+    return LaneStack(stacked, lti, codes, codebook)
 
 
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:

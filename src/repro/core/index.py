@@ -16,7 +16,7 @@ from .config import IndexConfig
 from .distance import INVALID
 from .graph import GraphState, LaneStack, empty_graph, medoid
 from .insert import apply_back_edges, compute_insert_edges
-from .search import (FullPrecisionBackend, LaneSelectBackend, batch_distances,
+from .search import (FullPrecisionBackend, PQBackend, batch_distances,
                      beam_search, rerank_candidates, topk_results)
 
 
@@ -52,7 +52,7 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
     pairs_j = jnp.where(valid[:, None], edges.new_adj, INVALID).reshape(-1)
     adjacency = apply_back_edges(
         adjacency, st.vectors, usable, pairs_j, edges.pairs_p,
-        alpha=cfg.alpha, R=cfg.R)
+        alpha=cfg.alpha, R=cfg.R, use_kernel=cfg.kernel_enabled())
     return st._replace(adjacency=adjacency)
 
 
@@ -102,23 +102,31 @@ def search_tiers(states: GraphState, queries: jax.Array, cfg: IndexConfig,
 def search_lanes(stack: LaneStack, queries: jax.Array, cfg: IndexConfig,
                  *, k: int, L: int, beam_width: Optional[int] = None,
                  rerank: bool = True):
-    """Heterogeneous-lane fan-out: one vmapped search over T stacked lanes.
+    """Heterogeneous-lane fan-out: every live tier in one device program.
 
-    Like ``search_tiers``, but each lane picks its distance backend from
-    ``stack.is_pq`` (``LaneSelectBackend``): exact L2 for TempIndex lanes,
-    PQ ADC navigation for the LTI lane.  With ``rerank`` the PQ lane's final
-    candidate list gets the exact full-precision rerank *inside the same
-    program* (DeleteList members masked before the gather, matching the
+    The temp group runs as one vmapped exact-L2 search over the [Tt, ...]
+    stack; the LTI lane (if present) runs PQ-ADC navigation at its own
+    capacity in the same program.  With ``rerank`` the LTI lane's final
+    candidate list gets the exact full-precision rerank *in-program*
+    (DeleteList members masked before the gather, matching the
     ``search_lti`` contract).  Returns (ids [T,B,k], dists [T,B,k],
-    hops [T,B], cmps [T,B]) — lane t bit-identical to running the dedicated
-    engine (``search`` / ``search_lti``) on tier t alone.
+    hops [T,B], cmps [T,B]) with the LTI as the LAST lane — lane t
+    bit-identical to running the dedicated engine (``search`` /
+    ``search_lti``) on tier t alone.
     """
     use_kernel = cfg.kernel_enabled()
-    codebook = pqm.PQCodebook(stack.codebook)
+    outs = []
+    if stack.temps is not None:
+        def one(g: GraphState):
+            return _search_impl(g, queries, cfg, k=k, L=L,
+                                beam_width=beam_width)
 
-    def one(g: GraphState, is_pq: jax.Array):
-        backend = LaneSelectBackend(g.vectors, stack.codes, codebook, is_pq)
-        res = beam_search(g.adjacency, g.active, g.start, queries, backend,
+        outs.append(jax.vmap(one)(stack.temps))
+    if stack.lti is not None:
+        g = stack.lti
+        res = beam_search(g.adjacency, g.active, g.start, queries,
+                          PQBackend(stack.codes, pqm.PQCodebook(
+                              stack.codebook)),
                           L=L, max_visits=cfg.visits_bound(L),
                           beam_width=beam_width or cfg.beam_width,
                           use_kernel=use_kernel)
@@ -128,26 +136,24 @@ def search_lanes(stack: LaneStack, queries: jax.Array, cfg: IndexConfig,
                 FullPrecisionBackend(g.vectors), queries,
                 rerank_candidates(res.ids, reportable),
                 use_kernel=use_kernel)
-            # Only the PQ lane navigated on approximate distances; the
-            # full-precision lanes' search distances ARE exact already.
-            res = res._replace(dists=jnp.where(is_pq, exact, res.dists))
+            res = res._replace(dists=exact)
         ids, d = topk_results(res, k, reportable)
-        return ids, d, res.n_hops, res.n_cmps
+        outs.append(tuple(x[None] for x in (ids, d, res.n_hops,
+                                            res.n_cmps)))
+    if not outs:
+        raise ValueError("search_lanes: empty LaneStack")
+    return tuple(jnp.concatenate(parts, axis=0) for parts in zip(*outs))
 
-    return jax.vmap(one)(stack.graphs, stack.is_pq)
 
+def lanes_to_ext(tables: jax.Array, drop: jax.Array, slot_ids: jax.Array,
+                 dists: jax.Array):
+    """Slot->external-id map + DeleteList mask for one lane group.
 
-def fanout_merge(slot_ids: jax.Array, dists: jax.Array, tables: jax.Array,
-                 drop: jax.Array, *, k: int):
-    """On-device cross-tier merge (the device half of §5.2 aggregation).
-
-    slot_ids/dists [T, B, C] per-lane top-C results (slot-local ids);
-    tables [T, capacity] int32 slot -> external id; drop [T, capacity] bool
-    marks DeleteList members.  Maps slots to external ids, infs out dropped
-    and invalid lanes, dedupes cross-tier copies keeping the closest
-    instance, and returns the global top-k per query: (ext_ids [B, k] int32,
-    dists [B, k] f32) with (-1, +inf) padding.  Bit-identical to the
-    host-side ``FreshDiskANN._aggregate`` on the same per-lane inputs.
+    tables [G, capacity] int32/int64, drop [G, capacity] bool,
+    slot_ids/dists [G, B, C] -> (ext [G, B, C], dists with DeleteList
+    members inf'd out).  The device half of the §5.2 aggregation that
+    depends on a lane's capacity; groups of different capacities map
+    separately and meet in ``fanout_merge``.
     """
 
     def one(tab, dr, sl, d):
@@ -156,11 +162,20 @@ def fanout_merge(slot_ids: jax.Array, dists: jax.Array, tables: jax.Array,
         dead = (sl >= 0) & dr[s]
         return ext, jnp.where(dead, jnp.inf, d)
 
-    ext, d = jax.vmap(one)(tables, drop, slot_ids, dists)
-    T, B, C = ext.shape
-    ids = jnp.transpose(ext, (1, 0, 2)).reshape(B, T * C)
-    ds = jnp.transpose(d, (1, 0, 2)).reshape(B, T * C).astype(jnp.float32)
-    ds = jnp.where(ids < 0, jnp.inf, ds)
+    return jax.vmap(one)(tables, drop, slot_ids, dists)
+
+
+def fanout_merge(ids: jax.Array, ds: jax.Array, *, k: int):
+    """On-device cross-tier merge (the device half of §5.2 aggregation).
+
+    ids/ds [B, M] — every lane's externally-mapped candidates concatenated
+    (``lanes_to_ext`` output, flattened lane-major).  Dedupes cross-tier
+    copies keeping the closest instance and returns the global top-k per
+    query: (ext_ids [B, k], dists [B, k] f32) with (-1, +inf) padding.
+    Bit-identical to the host-side ``FreshDiskANN._aggregate`` on the same
+    per-lane inputs; ids may be int32 or int64 (``jax_enable_x64``).
+    """
+    ds = jnp.where(ids < 0, jnp.inf, ds.astype(jnp.float32))
     # Dedupe keeping the closest copy of each id, then rank by distance —
     # the same lexsort / dup-mask / stable-argsort sequence as _aggregate.
     order = jnp.lexsort((ds, ids))
@@ -178,23 +193,42 @@ def fanout_merge(slot_ids: jax.Array, dists: jax.Array, tables: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "k_lane", "L",
                                              "beam_width", "rerank"))
-def unified_search(stack: LaneStack, tables: jax.Array, drop: jax.Array,
+def unified_search(stack: LaneStack, temp_tables: Optional[jax.Array],
+                   lti_table: Optional[jax.Array],
+                   temp_drop: Optional[jax.Array],
+                   lti_drop: Optional[jax.Array],
                    queries: jax.Array, cfg: IndexConfig, *, k: int,
                    k_lane: int, L: int, beam_width: Optional[int] = None,
                    rerank: bool = True):
     """The whole §5.2 steady-state query as ONE jitted device program.
 
-    Beam-searches every lane (TempIndex tiers on exact L2, the LTI lane on
-    PQ ADC) in one vmapped pass, exact-reranks the LTI lane's candidates,
-    takes the per-lane top-``k_lane``, maps slots to external ids, filters
-    the DeleteList (``drop``), and merges to the global top-``k`` — all
-    on-device, one dispatch per query batch however many tiers are live.
-    Returns (ext_ids [B, k], dists [B, k], hops [T, B], cmps [T, B]); the
-    per-lane counters feed the beam-width autotuner's unified cost model.
+    Beam-searches every lane (TempIndex tiers on exact L2, vmapped at temp
+    capacity; the LTI lane on PQ ADC at its own capacity), exact-reranks
+    the LTI lane's candidates, takes the per-lane top-``k_lane``, maps each
+    group's slots to external ids against its own table
+    (``temp_tables`` [Tt, temp_cap], ``lti_table`` [lti_cap]), filters the
+    DeleteList (``temp_drop``/``lti_drop``), and merges to the global
+    top-``k`` — all on-device, one dispatch per query batch however many
+    tiers are live.  Returns (ext_ids [B, k], dists [B, k], hops [T, B],
+    cmps [T, B]); the per-lane counters feed the beam-width autotuner's
+    unified cost model.
     """
     ids, d, hops, cmps = search_lanes(stack, queries, cfg, k=k_lane, L=L,
                                       beam_width=beam_width, rerank=rerank)
-    mi, md = fanout_merge(ids, d, tables, drop, k=k)
+    B = queries.shape[0]
+    Tt = stack.n_temp_lanes
+    parts_i, parts_d = [], []
+    if stack.temps is not None:
+        ext, dd = lanes_to_ext(temp_tables, temp_drop, ids[:Tt], d[:Tt])
+        parts_i.append(jnp.transpose(ext, (1, 0, 2)).reshape(B, -1))
+        parts_d.append(jnp.transpose(dd, (1, 0, 2)).reshape(B, -1))
+    if stack.lti is not None:
+        ext, dd = lanes_to_ext(lti_table[None], lti_drop[None],
+                               ids[Tt:], d[Tt:])
+        parts_i.append(ext[0])
+        parts_d.append(dd[0])
+    mi, md = fanout_merge(jnp.concatenate(parts_i, axis=1),
+                          jnp.concatenate(parts_d, axis=1), k=k)
     return mi, md, hops, cmps
 
 

@@ -10,6 +10,13 @@ A batch of B new points is inserted in three fixed-shape stages:
      trick, then every affected node either appends (if still under the degree
      budget R) or re-prunes N_out(j) + {p...} — exactly Algorithm 2's branch.
 
+Every prune in stages 2 and 3 rides the batched prune engine
+(``prune.robust_prune_batch``): one fused Pallas launch per node block under
+``use_kernel``, the vmapped jnp oracle otherwise — bit-identical either way.
+The Delta combine is deduplicated before the append-or-prune branch: a
+source p already present in N_out(j) (or appearing twice in the pair list)
+must not be appended again, silently burning degree budget.
+
 Points inside one batch do not see each other (the paper's concurrent inserts
 under fine-grained locking have the same quiescent-consistency window).
 """
@@ -21,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from .distance import INVALID
-from .prune import prune_node, robust_prune
+from .prune import (FullPrecisionPrune, SDCPrune, prune_node_batch,
+                    robust_prune_batch)
 from .search import DistanceBackend, SearchResult, beam_search
 
 
@@ -50,7 +58,9 @@ def compute_insert_edges(
     use_kernel: bool = False,
 ) -> InsertEdges:
     """Stages 1+2: search & prune.  Graph arrays are pre-insert (new points
-    are stored but have no in-edges, so searches cannot reach them)."""
+    are stored but have no in-edges, so searches cannot reach them).
+    ``use_kernel`` routes BOTH the search hot loop and the batched prune
+    through the Pallas ops layer."""
     res = beam_search(adjacency, navigable, start, new_vecs, backend,
                       L=L, max_visits=max_visits, beam_width=beam_width,
                       use_kernel=use_kernel)
@@ -58,12 +68,12 @@ def compute_insert_edges(
     # closer nodes, strictly improving the pool).
     cand = jnp.concatenate([res.visited, res.ids], axis=1)          # [B, V+L]
 
-    def one(slot, vec, cand_ids):
-        safe = jnp.maximum(cand_ids, 0)
-        ok = (cand_ids >= 0) & usable[safe] & (cand_ids != slot)
-        return robust_prune(vec, cand_ids, prune_table[safe], ok, alpha, R).ids
-
-    new_adj = jax.vmap(one)(new_slots, new_vecs.astype(jnp.float32), cand)
+    safe = jnp.maximum(cand, 0)
+    ok = (cand >= 0) & usable[safe] & (cand != new_slots[:, None])
+    pb = FullPrecisionPrune(prune_table)
+    d_p = pb.anchor_dists(new_vecs.astype(jnp.float32), cand)
+    new_adj = robust_prune_batch(pb, cand, ok, alpha=alpha, R=R,
+                                 use_kernel=use_kernel, d_p=d_p).ids
     B = new_slots.shape[0]
     pairs_j = new_adj.reshape(B * R)
     pairs_p = jnp.broadcast_to(new_slots[:, None], (B, R)).reshape(B * R)
@@ -94,6 +104,68 @@ def group_pairs(pairs_j: jax.Array, pairs_p: jax.Array, n_slots: int,
     return buf, cnt
 
 
+def _dedupe_combine(combine: jax.Array) -> jax.Array:
+    """Mask later duplicates to INVALID, keeping the first occurrence.
+
+    The Delta append path would otherwise append a source already present in
+    N_out(j) (or listed twice in the pair buffer) a second time — a silent
+    degree-budget burn.  Prune outputs are unaffected (a duplicate of the
+    selected candidate is alpha-covered at distance 0 and retired anyway),
+    so deduping changes only the append branch and its budget test.
+    """
+    Ct = combine.shape[-1]
+    iota = jnp.arange(Ct)
+    eq = combine[..., :, None] == combine[..., None, :]       # [.., i, j]
+    dup = ((eq & (iota[None, :] < iota[:, None])).any(axis=-1)
+           & (combine >= 0))
+    return jnp.where(dup, INVALID, combine)
+
+
+def _apply_back_edges_impl(adjacency, backend, usable, pairs_j, pairs_p, *,
+                           alpha, R, d_max, chunk, use_kernel):
+    """Shared Delta application (stage 3 / StreamingMerge Patch phase).
+
+    Affected nodes are processed in blocks via ``lax.scan`` — the Patch-phase
+    block pass of StreamingMerge (one block of rows streamed, patched, written
+    back) and a memory bound for plain batched inserts alike.
+    """
+    N = adjacency.shape[0]
+    P = pairs_j.shape[0]
+    buf, cnt = group_pairs(pairs_j, pairs_p, N, d_max)
+    # Every affected node appears (<= P of them); top_k over the 0/1 indicator
+    # returns lowest-index ties first, so all 1s are captured when P <= a_max.
+    a_max = min(P, N)
+    _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
+
+    def rows_for(adj, js, usable):
+        rows = adj[js]
+        extra = buf[js]
+        combine = _dedupe_combine(jnp.concatenate([rows, extra], axis=1))
+        total = (combine >= 0).sum(axis=1)
+        app_order = jnp.argsort(~(combine >= 0), axis=1)
+        appended = jnp.take_along_axis(combine, app_order, axis=1)[:, :R]
+        pruned = prune_node_batch(backend, js, combine, usable,
+                                  alpha=alpha, R=R,
+                                  use_kernel=use_kernel).ids
+        new_rows = jnp.where((total > R)[:, None], pruned, appended)
+        return jnp.where((cnt[js] > 0)[:, None], new_rows, rows)
+
+    if a_max <= chunk:
+        rows = rows_for(adjacency, affected, usable)
+        return adjacency.at[affected].set(rows)
+    n_chunks = -(-a_max // chunk)
+    pad = n_chunks * chunk - a_max
+    aff = jnp.concatenate(
+        [affected, jnp.full((pad,), N, jnp.int32)]).reshape(n_chunks, chunk)
+
+    def block(adj, js):
+        rows = rows_for(adj, jnp.minimum(js, N - 1), usable)
+        return adj.at[jnp.where(js < N, js, N)].set(rows, mode="drop"), None
+
+    adjacency, _ = jax.lax.scan(block, adjacency, aff)
+    return adjacency
+
+
 def apply_back_edges_codes(
     adjacency: jax.Array,
     codes: jax.Array,        # [N, m] PQ codes
@@ -106,45 +178,13 @@ def apply_back_edges_codes(
     R: int,
     d_max: int | None = None,
     chunk: int = 1024,
+    use_kernel: bool = False,
 ) -> jax.Array:
     """Patch phase with SDC distances (see apply_back_edges)."""
-    from .prune import prune_node_codes
-
-    N = adjacency.shape[0]
-    P = pairs_j.shape[0]
     d_max = d_max if d_max is not None else R
-    buf, cnt = group_pairs(pairs_j, pairs_p, N, d_max)
-    a_max = min(P, N)
-    _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
-
-    def one(adj, j):
-        row = adj[j]
-        extra = buf[j]
-        deg = (row >= 0).sum()
-        add = jnp.minimum(cnt[j], d_max)
-        combine = jnp.concatenate([row, extra])
-        app_order = jnp.argsort(~(combine >= 0))
-        appended = combine[app_order][:R]
-        pruned = prune_node_codes(codes, tables, j, combine, usable,
-                                  alpha, R).ids
-        needs_prune = deg + add > R
-        new_row = jnp.where(needs_prune, pruned, appended)
-        return jnp.where(cnt[j] > 0, new_row, row)
-
-    if a_max <= chunk:
-        rows = jax.vmap(lambda j: one(adjacency, j))(affected)
-        return adjacency.at[affected].set(rows)
-    n_chunks = -(-a_max // chunk)
-    pad = n_chunks * chunk - a_max
-    aff = jnp.concatenate(
-        [affected, jnp.full((pad,), N, jnp.int32)]).reshape(n_chunks, chunk)
-
-    def block(adj, js):
-        rows = jax.vmap(lambda j: one(adj, jnp.minimum(j, N - 1)))(js)
-        return adj.at[jnp.where(js < N, js, N)].set(rows, mode="drop"), None
-
-    adjacency, _ = jax.lax.scan(block, adjacency, aff)
-    return adjacency
+    return _apply_back_edges_impl(
+        adjacency, SDCPrune(codes, tables), usable, pairs_j, pairs_p,
+        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel)
 
 
 def apply_back_edges(
@@ -158,47 +198,10 @@ def apply_back_edges(
     R: int,
     d_max: int | None = None,
     chunk: int = 1024,
+    use_kernel: bool = False,
 ) -> jax.Array:
-    """Stage 3: apply Delta.  Affected nodes append or re-prune (Alg. 2).
-
-    Affected nodes are processed in chunks via ``lax.map`` — the Patch-phase
-    block pass of StreamingMerge (one block of rows streamed, patched, written
-    back) and a memory bound for plain batched inserts alike.
-    """
-    N = adjacency.shape[0]
-    P = pairs_j.shape[0]
+    """Stage 3: apply Delta.  Affected nodes append or re-prune (Alg. 2)."""
     d_max = d_max if d_max is not None else R
-    buf, cnt = group_pairs(pairs_j, pairs_p, N, d_max)
-    # Every affected node appears (<= P of them); top_k over the 0/1 indicator
-    # returns lowest-index ties first, so all 1s are captured when P <= a_max.
-    a_max = min(P, N)
-    _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
-
-    def one(adj, j):
-        row = adj[j]
-        extra = buf[j]
-        deg = (row >= 0).sum()
-        add = jnp.minimum(cnt[j], d_max)
-        combine = jnp.concatenate([row, extra])                    # [R + d_max]
-        # append path: valid entries first, truncated to R.
-        app_order = jnp.argsort(~(combine >= 0))                   # valids first
-        appended = combine[app_order][:R]
-        pruned = prune_node(prune_table, j, combine, usable, alpha, R).ids
-        needs_prune = deg + add > R
-        new_row = jnp.where(needs_prune, pruned, appended)
-        return jnp.where(cnt[j] > 0, new_row, row)
-
-    if a_max <= chunk:
-        rows = jax.vmap(lambda j: one(adjacency, j))(affected)
-        return adjacency.at[affected].set(rows)
-    n_chunks = -(-a_max // chunk)
-    pad = n_chunks * chunk - a_max
-    aff = jnp.concatenate(
-        [affected, jnp.full((pad,), N, jnp.int32)]).reshape(n_chunks, chunk)
-
-    def block(adj, js):
-        rows = jax.vmap(lambda j: one(adj, jnp.minimum(j, N - 1)))(js)
-        return adj.at[jnp.where(js < N, js, N)].set(rows, mode="drop"), None
-
-    adjacency, _ = jax.lax.scan(block, adjacency, aff)
-    return adjacency
+    return _apply_back_edges_impl(
+        adjacency, FullPrecisionPrune(prune_table), usable, pairs_j, pairs_p,
+        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel)

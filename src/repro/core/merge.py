@@ -15,6 +15,14 @@ In the paper phases 1/3 are sequential SSD passes; here they are ``lax.map``
 block streams (HBM->VMEM).  Insert-phase searches are vmapped chunks: new
 points have no in-edges until the Patch phase, so chunked execution is
 order-equivalent to the paper's sequential inserts.
+
+All three phases ride the batched mutation engine: the Delete phase repairs
+each block through ``delete.consolidate_deletes{_codes}`` (fused
+``delete_repair`` kernel under ``IndexConfig.use_kernel``), the Insert
+phase prunes each chunk with ONE ``prune.robust_prune_batch`` call, and the
+Patch phase applies Delta through ``insert.apply_back_edges{_codes}`` —
+kernel- and jnp-path outputs are bit-identical (docs/ARCHITECTURE.md,
+"Mutation engine").
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ from .distance import INVALID
 from .insert import (apply_back_edges, apply_back_edges_codes,
                      compute_insert_edges)
 from .lti import LTIState
-from .prune import robust_prune_codes
+from .prune import SDCPrune, robust_prune_batch
 from .search import PQBackend, beam_search
 
 
@@ -116,23 +124,23 @@ def streaming_merge(
         sl, vv = inp
         if use_sdc:
             # search via ADC; prune with d_p = exact-vector ADC and
-            # candidate-candidate distances via SDC on codes.
+            # candidate-candidate distances via SDC on codes — one batched
+            # prune-engine call per insert chunk (fused kernel under
+            # use_kernel).
             res = beam_search(adjacency, g.active, g.start, vv, backend,
                               L=cfg.L_build,
                               max_visits=cfg.visits_bound(cfg.L_build),
                               beam_width=cfg.beam_width,
                               use_kernel=use_kernel)
             cand = jnp.concatenate([res.visited, res.ids], axis=1)
-
-            def one(slot, vec, cand_ids):
-                safe = jnp.maximum(cand_ids, 0)
-                ok = (cand_ids >= 0) & usable[safe] & (cand_ids != slot)
-                d_p = pqm.adc(codes[safe], pqm.lut(codebook, vec))
-                return robust_prune_codes(
-                    d_p, cand_ids, codes[safe], ok, cfg.alpha, cfg.R,
-                    tables).ids
-
-            new_adj = jax.vmap(one)(sl, vv, cand)
+            safe = jnp.maximum(cand, 0)
+            ok = (cand >= 0) & usable[safe] & (cand != sl[:, None])
+            d_p = jax.vmap(
+                lambda c, vec: pqm.adc(codes[c], pqm.lut(codebook, vec))
+            )(safe, vv)
+            new_adj = robust_prune_batch(
+                SDCPrune(codes, tables), cand, ok, alpha=cfg.alpha,
+                R=cfg.R, use_kernel=use_kernel, d_p=d_p).ids
             src = jnp.broadcast_to(sl[:, None],
                                    new_adj.shape).reshape(-1)
         else:
@@ -161,11 +169,11 @@ def streaming_merge(
     if use_sdc:
         adjacency = apply_back_edges_codes(
             adjacency, codes, tables, usable, pairs_j, pairs_p,
-            alpha=cfg.alpha, R=cfg.R, chunk=block)
+            alpha=cfg.alpha, R=cfg.R, chunk=block, use_kernel=use_kernel)
     else:
         adjacency = apply_back_edges(
             adjacency, decoded, usable, pairs_j, pairs_p,
-            alpha=cfg.alpha, R=cfg.R, chunk=block)
+            alpha=cfg.alpha, R=cfg.R, chunk=block, use_kernel=use_kernel)
 
     g = g._replace(adjacency=adjacency)
     stats = MergeStats(n_del, (slots >= 0).sum(),

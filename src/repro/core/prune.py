@@ -1,60 +1,180 @@
-"""RobustPrune (Algorithm 3) — the alpha-RNG pruning rule.
-
-Fixed-shape, vmappable: candidates arrive as padded id arrays; the loop runs
-exactly R rounds with masking (each round either selects one neighbor or is a
-no-op once the candidate pool is exhausted).
+"""RobustPrune (Algorithm 3) — the alpha-RNG pruning rule, as an engine.
 
 An edge to c is dropped once some retained p* satisfies
 ``alpha * d(p*, c) <= d(p, c)`` — retained edges cover their "cone" with slack
 alpha (paper §4).  With alpha = 1 this degenerates to the aggressive HNSW/NSG
 rule (the paper's unstable baseline, reproduced in tests/benchmarks).
+
+Mirroring ``core.search``'s ``DistanceBackend``, pruning is dispatched
+through a ``PruneBackend`` — the distance source for the anchor->candidate
+and candidate<->candidate computations:
+
+  ``FullPrecisionPrune``  exact squared-L2 over a stored vector table
+                          (in-memory TempIndex mutations, LTI build);
+  ``SDCPrune``            symmetric distances straight from PQ codes
+                          (StreamingMerge's traffic-optimal operating
+                          point — m bytes per candidate per round).
+
+``robust_prune_batch`` is the row-batched engine: a whole block of nodes per
+call, each row fixed-shape (padded candidate ids + a usability mask), with
+two execution paths per backend:
+
+  ``use_kernel=False``  the jnp oracle — exactly R masked-argmin rounds per
+                        row (``kernels.ref.robust_prune_*_ref``), vmapped.
+                        Bit-identical to the pre-engine per-node functions.
+  ``use_kernel=True``   ONE fused Pallas launch per row
+                        (``kernels.robust_prune``): argmin + winner coverage
+                        row + alpha-mask update for all R rounds in-kernel,
+                        vmapped over the block.  Bit-identical to the oracle
+                        (the acceptance bar; see docs/KERNELS.md).
+
+The single-node helpers (``robust_prune``/``prune_node``/``*_codes``) remain
+the oracle surface the property tests exercise directly.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Protocol
 
 import jax
 import jax.numpy as jnp
 
-from .distance import INVALID, l2_sq
+from .distance import l2_sq
+from ..kernels import ops, ref
 
 
 class PruneResult(NamedTuple):
-    ids: jax.Array   # [R] selected out-neighbors, INVALID padded
-    count: jax.Array  # scalar int32
+    ids: jax.Array    # [R] ([B, R] from the batched engine), INVALID padded
+    count: jax.Array  # scalar ([B]) int32
 
+
+class PruneBackend(Protocol):
+    """Distance dispatch for the prune engine (see module doc)."""
+
+    def anchor_of(self, ps: jax.Array):
+        """Node ids [B] -> per-row anchor context (vector / SDC lut)."""
+        ...
+
+    def anchor_dists(self, anchors, cand_ids: jax.Array) -> jax.Array:
+        """Anchors x cand_ids [B, C] -> raw d(p, c) [B, C] (unmasked)."""
+        ...
+
+    def prune_rows(self, d_p, cand_ids, cand_ok, *, alpha: float, R: int,
+                   use_kernel: bool) -> PruneResult:
+        """Run the prune rounds over a block of rows."""
+        ...
+
+
+class FullPrecisionPrune(NamedTuple):
+    """Exact squared-L2 pruning against a stored table ([N, d])."""
+
+    table: jax.Array
+
+    def anchor_of(self, ps: jax.Array) -> jax.Array:
+        return self.table[jnp.maximum(ps, 0)].astype(jnp.float32)
+
+    def anchor_dists(self, anchors: jax.Array, cand_ids: jax.Array
+                     ) -> jax.Array:
+        safe = jnp.maximum(cand_ids, 0)
+        return jax.vmap(
+            lambda a, c: l2_sq(a[None, :], self.table[c]))(anchors, safe)
+
+    def prune_rows(self, d_p, cand_ids, cand_ok, *, alpha, R, use_kernel
+                   ) -> PruneResult:
+        vecs = self.table[jnp.maximum(cand_ids, 0)]          # [B, C, d]
+        out, cnt = ops.robust_prune_fp(d_p, vecs, cand_ids, cand_ok,
+                                       alpha=alpha, R=R,
+                                       use_kernel=use_kernel)
+        return PruneResult(out, cnt)
+
+
+class SDCPrune(NamedTuple):
+    """PQ-code pruning: every distance symmetric-distance-computed from
+    ``codes`` [N, m] via ``tables`` [m, ksub, ksub] (``pq.sdc_tables``) —
+    numerically identical to pruning on decoded vectors, ~16x less HBM
+    traffic."""
+
+    codes: jax.Array
+    tables: jax.Array
+
+    def anchor_of(self, ps: jax.Array) -> jax.Array:
+        from . import pq as pqm
+        return jax.vmap(lambda p: pqm.sdc_lut(
+            self.tables, self.codes[jnp.maximum(p, 0)]))(ps)  # [B, m, ksub]
+
+    def anchor_dists(self, anchors: jax.Array, cand_ids: jax.Array
+                     ) -> jax.Array:
+        from . import pq as pqm
+        safe = jnp.maximum(cand_ids, 0)
+        return jax.vmap(
+            lambda lut, c: pqm.adc(self.codes[c], lut))(anchors, safe)
+
+    def prune_rows(self, d_p, cand_ids, cand_ok, *, alpha, R, use_kernel
+                   ) -> PruneResult:
+        codes = self.codes[jnp.maximum(cand_ids, 0)].astype(jnp.int32)
+        out, cnt = ops.robust_prune_sdc(d_p, codes, self.tables, cand_ids,
+                                        cand_ok, alpha=alpha, R=R,
+                                        use_kernel=use_kernel)
+        return PruneResult(out, cnt)
+
+
+def robust_prune_batch(
+    backend: PruneBackend,
+    cand_ids: jax.Array,       # [B, C] candidate ids (dups / INVALID ok)
+    cand_ok: jax.Array,        # [B, C] bool — candidate usable
+    *,
+    alpha: float,
+    R: int,
+    use_kernel: bool = False,
+    anchors=None,              # backend.anchor_of output (or caller-built)
+    d_p: jax.Array | None = None,  # [B, C] precomputed anchor distances
+) -> PruneResult:
+    """Row-batched Algorithm 3: a whole block of nodes per call.
+
+    Anchor distances come from ``d_p`` when given (e.g. the StreamingMerge
+    insert phase anchors on the exact new vector via an ADC lut), else from
+    ``backend.anchor_dists(anchors, cand_ids)``.  Returns ids [B, R] +
+    counts [B].  ``use_kernel`` selects the fused Pallas path; both paths
+    are bit-identical (tests/test_update_engine.py).
+    """
+    if d_p is None:
+        d_p = backend.anchor_dists(anchors, cand_ids)
+    return backend.prune_rows(d_p, cand_ids, cand_ok,
+                              alpha=alpha, R=R, use_kernel=use_kernel)
+
+
+def prune_node_batch(backend: PruneBackend, ps: jax.Array,
+                     cand_ids: jax.Array, usable: jax.Array, *,
+                     alpha: float, R: int, use_kernel: bool = False
+                     ) -> PruneResult:
+    """Batched ``prune_node``: anchors are stored nodes ``ps`` [B]; the
+    usability mask excludes INVALID lanes, unusable slots, and self-edges."""
+    safe = jnp.maximum(cand_ids, 0)
+    ok = (cand_ids >= 0) & usable[safe] & (cand_ids != ps[:, None])
+    return robust_prune_batch(backend, cand_ids, ok, alpha=alpha, R=R,
+                              use_kernel=use_kernel,
+                              anchors=backend.anchor_of(ps))
+
+
+# ---------------------------------------------------------------------------
+# Single-node oracles (the pre-engine surface; property tests use these).
+# ---------------------------------------------------------------------------
 
 def robust_prune(
     p_vec: jax.Array,        # [d] the node being pruned
     cand_ids: jax.Array,     # [C] candidate ids (may contain dups / INVALID)
     cand_vecs: jax.Array,    # [C, d] candidate vectors (garbage where INVALID)
-    cand_ok: jax.Array,      # [C] bool — candidate usable (valid, not deleted, != p)
+    cand_ok: jax.Array,      # [C] bool — candidate usable (valid, not deleted)
     alpha: float,
     R: int,
 ) -> PruneResult:
-    C = cand_ids.shape[0]
+    """Algorithm 3 over one node, full precision (delegates to the jnp
+    contract in ``kernels.ref`` — the same rounds the Pallas kernel fuses)."""
     p_vec = p_vec.astype(jnp.float32)
     cand_vecs = cand_vecs.astype(jnp.float32)
-    d_p = jnp.where(cand_ok, l2_sq(p_vec[None, :], cand_vecs), jnp.inf)  # [C]
-
-    def body(i, s):
-        alive, out_ids, cnt = s
-        masked = jnp.where(alive, d_p, jnp.inf)
-        star = jnp.argmin(masked)
-        ok = jnp.isfinite(masked[star])
-        out_ids = out_ids.at[i].set(jnp.where(ok, cand_ids[star], INVALID))
-        cnt = cnt + ok.astype(jnp.int32)
-        # alpha-RNG coverage: drop candidates the new neighbor covers.
-        d_star = l2_sq(cand_vecs[star][None, :], cand_vecs)              # [C]
-        covered = alpha * d_star <= d_p
-        alive = alive & ~covered & (jnp.arange(C) != star)
-        alive = jnp.where(ok, alive, jnp.zeros_like(alive))
-        return alive, out_ids, cnt
-
-    alive0 = cand_ok & jnp.isfinite(d_p)
-    out0 = jnp.full((R,), INVALID, jnp.int32)
-    _, out_ids, cnt = jax.lax.fori_loop(0, R, body, (alive0, out0, jnp.int32(0)))
-    return PruneResult(out_ids, cnt)
+    d_p = l2_sq(p_vec[None, :], cand_vecs)                   # [C]
+    out, cnt = ref.robust_prune_fp_ref(d_p, cand_vecs, cand_ids, cand_ok,
+                                       alpha=alpha, R=R)
+    return PruneResult(out, cnt)
 
 
 def prune_node(
@@ -85,29 +205,10 @@ def robust_prune_codes(
     """Algorithm 3 with all candidate-candidate distances computed from PQ
     codes (SDC) — numerically identical to pruning on decoded vectors but
     touching m bytes per candidate per round instead of dim*4."""
-    from . import pq as pqm
-
-    C = cand_ids.shape[0]
-    d_p = jnp.where(cand_ok, d_p, jnp.inf)
-
-    def body(i, s):
-        alive, out_ids, cnt = s
-        masked = jnp.where(alive, d_p, jnp.inf)
-        star = jnp.argmin(masked)
-        ok = jnp.isfinite(masked[star])
-        out_ids = out_ids.at[i].set(jnp.where(ok, cand_ids[star], INVALID))
-        cnt = cnt + ok.astype(jnp.int32)
-        d_star = pqm.adc(cand_codes, pqm.sdc_lut(tables, cand_codes[star]))
-        covered = alpha * d_star <= d_p
-        alive = alive & ~covered & (jnp.arange(C) != star)
-        alive = jnp.where(ok, alive, jnp.zeros_like(alive))
-        return alive, out_ids, cnt
-
-    alive0 = cand_ok & jnp.isfinite(d_p)
-    out0 = jnp.full((R,), INVALID, jnp.int32)
-    _, out_ids, cnt = jax.lax.fori_loop(0, R, body, (alive0, out0,
-                                                     jnp.int32(0)))
-    return PruneResult(out_ids, cnt)
+    out, cnt = ref.robust_prune_sdc_ref(d_p, cand_codes.astype(jnp.int32),
+                                        tables, cand_ids, cand_ok,
+                                        alpha=alpha, R=R)
+    return PruneResult(out, cnt)
 
 
 def prune_node_codes(codes, tables, p, cand_ids, usable, alpha, R
@@ -128,7 +229,9 @@ def check_alpha_rng(adj_row: jax.Array, p_vec: jax.Array, vectors: jax.Array,
     """Property check: no retained edge is alpha-covered by an earlier one.
 
     Returns True when the row satisfies the alpha-RNG invariant.  Used by the
-    hypothesis property tests.
+    property tests and as a post-condition over ``consolidate_deletes`` /
+    ``streaming_merge`` outputs (pass the table the prune actually ran on —
+    PQ-decoded vectors for the merge phases).
     """
     R = adj_row.shape[0]
     safe = jnp.maximum(adj_row, 0)

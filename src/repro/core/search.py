@@ -105,42 +105,6 @@ class PQBackend(NamedTuple):
         return pqm.adc_gather(self.codes, ctx, ids)
 
 
-class LaneSelectBackend(NamedTuple):
-    """Per-lane backend select for the heterogeneous §5.2 fan-out.
-
-    Inside one vmapped multi-lane search, each lane must score with a
-    different metric: exact L2 for TempIndex lanes, PQ ADC for the LTI lane.
-    A traced per-lane branch under ``vmap`` lowers to a ``select`` that
-    evaluates both sides anyway, so this backend makes that explicit: it
-    computes BOTH distances over the (small, W*R-sized) id batch and selects
-    with ``use_pq``.  The selected values are bit-identical to the dedicated
-    ``FullPrecisionBackend`` / ``PQBackend`` — the unified fan-out inherits
-    the sequential oracle's exact results, lane by lane.
-
-    ``codes``/``codebook`` may be another lane's data on full-precision
-    lanes (the ``LaneStack`` shares one copy): their ADC output is computed
-    and discarded, never observed.
-    """
-
-    vectors: jax.Array            # [capacity, d] — this lane's vectors
-    codes: jax.Array              # [capacity, m] uint8 (shared PQ codes)
-    codebook: pqm.PQCodebook      # shared PQ codebook
-    use_pq: jax.Array             # scalar bool — this lane's backend
-
-    def prepare(self, query: jax.Array) -> tuple:
-        return (query.astype(jnp.float32),
-                pqm.lut(self.codebook, query))            # (q, [m, ksub])
-
-    def distances(self, ctx: tuple, ids: jax.Array, *,
-                  use_kernel: bool = False) -> jax.Array:
-        q, table = ctx
-        d_fp = FullPrecisionBackend(self.vectors).distances(
-            q, ids, use_kernel=use_kernel)
-        d_pq = PQBackend(self.codes, self.codebook).distances(
-            table, ids, use_kernel=use_kernel)
-        return jnp.where(self.use_pq, d_pq, d_fp)
-
-
 def batch_distances(backend: DistanceBackend, queries: jax.Array,
                     ids: jax.Array, *, use_kernel: bool = False) -> jax.Array:
     """[B, ...] queries x [B, K] ids -> [B, K] distances (exact-rerank path)."""

@@ -14,16 +14,17 @@ transiently in two, which the cross-tier dedupe in ``_aggregate`` resolves).
 Query fan-out (§5.2): a query must consult the LTI *and* every TempIndex.
 All live tiers — the RW tier, every frozen RO snapshot, AND the PQ-navigated
 LTI — are folded into one heterogeneous ``LaneStack`` (``graph.stack_lanes``)
-and searched as ONE jitted device program (``index.unified_search``): a
-vmapped beam search with a per-lane backend select (exact L2 on TempIndex
-lanes, PQ ADC on the LTI lane), the LTI's exact rerank, the slot->external-id
-mapping, the DeleteList filter, and the cross-tier top-k merge all happen
-on-device.  The stack and the DeleteList drop-mask are cached between
-mutations, so a pure query workload pays one dispatch per batch however many
-snapshots accumulate.  ``SystemConfig.batch_fanout=False`` restores the
-fully sequential per-tier loop + host-side aggregation (the bit-parity
-oracle for tests): both paths return bit-identical (ids, dists).
-See docs/ARCHITECTURE.md for the full picture.
+and searched as ONE jitted device program (``index.unified_search``): the
+temp tiers as a vmapped exact-L2 group padded to the largest TEMP capacity,
+the LTI lane at its own capacity on PQ ADC, then the LTI's exact rerank, the
+per-group slot->external-id mapping, the DeleteList filter, and the
+cross-tier top-k merge all on-device.  The stack and the DeleteList
+drop-mask are cached between mutations, so a pure query workload pays one
+dispatch per batch however many snapshots accumulate.
+``SystemConfig.batch_fanout=False`` restores the fully sequential per-tier
+loop + host-side aggregation (the bit-parity oracle for tests): both paths
+return bit-identical (ids, dists).  See docs/ARCHITECTURE.md for the full
+picture.
 
 External ids are user-provided int64s; the system maps them to (tier, slot).
 """
@@ -222,13 +223,14 @@ class FreshDiskANN:
 
         With ``cfg.batch_fanout`` (the default) the whole fan-out — RW tier,
         every frozen RO snapshot, and the PQ-navigated LTI lane — runs as
-        ONE jitted device program (``index.unified_search``): per-lane
-        backend select, LTI exact rerank, DeleteList filter, and cross-tier
-        top-k merge all on-device.  The LaneStack is cached by tier-state
-        identity, so only mutations (flush / rollover / merge) pay a
-        restack.  ``cfg.batch_fanout=False`` runs the sequential per-tier
-        loop with host-side aggregation — the bit-parity oracle: both paths
-        return bit-identical (ids, dists).
+        ONE jitted device program (``index.unified_search``): the vmapped
+        temp group + the LTI lane at its own capacity, LTI exact rerank,
+        DeleteList filter, and cross-tier top-k merge all on-device.  The
+        LaneStack is cached by tier-state identity, so only mutations
+        (flush / rollover / merge) pay a restack.
+        ``cfg.batch_fanout=False`` runs the sequential per-tier loop with
+        host-side aggregation — the bit-parity oracle: both paths return
+        bit-identical (ids, dists).
         """
         self._flush_inserts()
         L = L or self.cfg.index.L_search
@@ -249,13 +251,13 @@ class FreshDiskANN:
         if self.cfg.batch_fanout:
             bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
             if bundle is not None:
-                key, stack, tables, tables_np = bundle
-                drop = self._drop_mask(key, tables_np)
-                # rerank only matters to the PQ lane (is_pq selects its
-                # exact pass); with no LTI lane it would be dead compute.
+                key, stack, t_tabs, l_tab, tables_np = bundle
+                t_drop, l_drop = self._drop_mask(key, tables_np)
+                # rerank only matters to the PQ lane; with no LTI lane it
+                # would be dead compute.
                 ids, d, _, _ = mem.unified_search(
-                    stack, tables, drop, q, self.cfg.index, k=k, k_lane=kk,
-                    L=L, beam_width=W,
+                    stack, t_tabs, l_tab, t_drop, l_drop, q,
+                    self.cfg.index, k=k, k_lane=kk, L=L, beam_width=W,
                     rerank=self.cfg.rerank and lti_entry is not None)
                 self.stats.search_dispatches += 1
                 return (np.asarray(ids).astype(np.int64),
@@ -316,13 +318,13 @@ class FreshDiskANN:
         if self.cfg.batch_fanout:
             bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
             if bundle is not None:
-                key, stack, tables, tables_np = bundle
-                drop = self._drop_mask(key, tables_np)
+                key, stack, t_tabs, l_tab, tables_np = bundle
+                t_drop, l_drop = self._drop_mask(key, tables_np)
 
                 def run(W):
                     _, _, hops, cmps = mem.unified_search(
-                        stack, tables, drop, probe, self.cfg.index, k=1,
-                        k_lane=1, L=L, beam_width=W,
+                        stack, t_tabs, l_tab, t_drop, l_drop, probe,
+                        self.cfg.index, k=1, k_lane=1, L=L, beam_width=W,
                         rerank=self.cfg.rerank and lti_entry is not None)
                     return (np.asarray(hops).max(axis=0),
                             np.asarray(cmps).sum(axis=0))
@@ -373,20 +375,25 @@ class FreshDiskANN:
                 and a.min(initial=0) >= np.iinfo(np.int32).min)
 
     def _lane_bundle(self, rw_t, ro_temps, lti_entry):
-        """(key, LaneStack, ext tables [T, cap] i32 device, tables np) for
-        the unified fan-out — cached by tier-state identity (states are
-        immutable values: a flush / rollover / merge replaces them, which
-        misses the cache).  Returns None when an external id overflows
-        int32 (the on-device merge carries ids as i32); the verdict is
-        cached too, so the fallback costs nothing per search.
+        """(key, LaneStack, temp tables [Tt, temp_cap] device, LTI table
+        [lti_cap] device, tables np) for the unified fan-out — cached by
+        tier-state identity (states are immutable values: a flush /
+        rollover / merge replaces them, which misses the cache).
+
+        Temp lanes are padded to the largest TEMP capacity only; the LTI
+        lane rides at its own capacity (the stack is O(Tt x temp_cap)
+        instead of O(T x LTI_cap)).  External ids travel as int32 when they
+        fit; with ``jax_enable_x64`` set they widen to int64 pairs instead,
+        and only when neither holds does the system warn once and fall back
+        to the sequential per-tier path (bundle None, verdict cached).
 
         Two cache levels: the full bundle (missed by any tier mutation),
-        and a frozen sub-cache of the RO + LTI lanes' padded graphs, table
-        rows, and id-range verdict — those only change on rollover/merge,
-        so the RW flushes that dominate a steady-state insert+search
-        stream re-pad and re-scan ONLY the RW lane (the final [T, ...]
-        device stack is still rebuilt: that copy is what buys the single
-        dispatch).
+        and a frozen sub-cache of the RO lanes' padded graphs, the RO + LTI
+        table rows, and the id-range verdict — those only change on
+        rollover/merge, so the RW flushes that dominate a steady-state
+        insert+search stream re-pad and re-scan ONLY the RW lane (the
+        final [Tt, ...] device stack is still rebuilt: that copy is what
+        buys the single dispatch).
         """
         fp = ([rw_t] if rw_t is not None else []) + ro_temps
         key = tuple(t.state for t in fp) + (
@@ -395,74 +402,83 @@ class FreshDiskANN:
         if cached is not None and self._key_hits(cached[0], key):
             return cached[1]
 
-        states = [t.state for t in fp]
-        ext_tabs = [t.ext_ids for t in fp]
-        pq_lane = codes = codebook = None
-        if lti_entry is not None:
-            lti, lti_table = lti_entry
-            states.append(lti.graph)
-            ext_tabs.append(lti_table)
-            pq_lane = len(states) - 1
-            codes, codebook = lti.codes, lti.codebook.centroids
-        cap = max(s.capacity for s in states)
+        tcap = max((t.state.capacity for t in fp), default=0)
 
-        n_froz = len(ro_temps) + (1 if lti_entry is not None else 0)
         fkey = (tuple(t.state for t in ro_temps)
                 + ((lti_entry[0],) if lti_entry is not None else ()))
         fcached = self._frozen_cache
-        if (fcached is not None and fcached[1] == cap
+        if (fcached is not None and fcached[1] == tcap
                 and self._key_hits(fcached[0], fkey)):
-            froz_states, froz_tabs, froz_ok = fcached[2:]
+            ro_states, ro_tabs, froz_ok = fcached[2:]
         else:
-            froz_states = [pad_graph(s, cap) for s in states[-n_froz:]
-                           ] if n_froz else []
-            froz_tabs = np.full((n_froz, cap), -1, np.int64)
-            for fi, tab in enumerate(ext_tabs[len(ext_tabs) - n_froz:]):
-                froz_tabs[fi, :len(tab)] = tab
-            froz_ok = self._fits_int32(froz_tabs)
-            self._frozen_cache = (fkey, cap, froz_states, froz_tabs,
-                                  froz_ok)
+            ro_states = [pad_graph(t.state, tcap) for t in ro_temps]
+            ro_tabs = np.full((len(ro_temps), tcap), -1, np.int64)
+            for fi, t in enumerate(ro_temps):
+                ro_tabs[fi, :len(t.ext_ids)] = t.ext_ids
+            froz_ok = self._fits_int32(ro_tabs) and (
+                lti_entry is None or self._fits_int32(lti_entry[1]))
+            self._frozen_cache = (fkey, tcap, ro_states, ro_tabs, froz_ok)
 
         n_rw = 1 if rw_t is not None else 0
-        rw_tabs = np.full((n_rw, cap), -1, np.int64)
+        rw_tabs = np.full((n_rw, tcap), -1, np.int64)
         if n_rw:
             rw_tabs[0, :len(rw_t.ext_ids)] = rw_t.ext_ids
-        tables_np = np.concatenate([rw_tabs, froz_tabs])
-        if not (froz_ok and self._fits_int32(rw_tabs)):
+        temp_tabs_np = np.concatenate([rw_tabs, ro_tabs])
+        lti_tab_np = lti_entry[1] if lti_entry is not None else None
+        if froz_ok and self._fits_int32(rw_tabs):
+            id_dtype = np.int32
+        elif jax.config.jax_enable_x64:
+            id_dtype = np.int64     # billion-scale id spaces ride as i64
+        else:
             if not self._int32_warned:
                 self._int32_warned = True
                 import warnings
                 warnings.warn(
                     "external ids exceed int32: the on-device unified "
                     "fan-out is disabled, searches use the sequential "
-                    "per-tier path")
+                    "per-tier path (enable jax_enable_x64 to carry ids "
+                    "as int64 instead)")
             self._fanout_cache = (key, None)
             return None
-        lanes = ([pad_graph(rw_t.state, cap)] if n_rw else []) + froz_states
-        stack = stack_lanes(lanes, codes=codes, codebook=codebook,
-                            pq_lane=pq_lane)
-        bundle = (key, stack, jnp.asarray(tables_np.astype(np.int32)),
-                  tables_np)
+        lanes = ([pad_graph(rw_t.state, tcap)] if n_rw else []) + ro_states
+        lti_graph = codes = codebook = None
+        if lti_entry is not None:
+            lti_graph = lti_entry[0].graph
+            codes = lti_entry[0].codes
+            codebook = lti_entry[0].codebook.centroids
+        stack = stack_lanes(lanes, lti=lti_graph, codes=codes,
+                            codebook=codebook)
+        t_tabs = (jnp.asarray(temp_tabs_np.astype(id_dtype))
+                  if lanes else None)
+        l_tab = (jnp.asarray(lti_tab_np.astype(id_dtype))
+                 if lti_entry is not None else None)
+        bundle = (key, stack, t_tabs, l_tab, (temp_tabs_np, lti_tab_np))
         self._fanout_cache = (key, bundle)
         return bundle
 
-    def _drop_mask(self, key: tuple, tables_np: np.ndarray) -> jax.Array:
-        """[T, cap] bool DeleteList membership per slot, for the on-device
-        filter.  Cached by (lane key, delete epoch): tier mutations change
-        the key; DeleteList mutations the states don't witness (delete of
-        an LTI/RO resident, re-insert revival) bump ``_delete_epoch``."""
+    def _drop_mask(self, key: tuple, tables_np: tuple):
+        """Per-group [.., cap] bool DeleteList membership masks for the
+        on-device filter — (temp [Tt, temp_cap], lti [lti_cap] or None).
+        Cached by (lane key, delete epoch): tier mutations change the key;
+        DeleteList mutations the states don't witness (delete of an LTI/RO
+        resident, re-insert revival) bump ``_delete_epoch``."""
         epoch = self._delete_epoch
         cached = self._drop_cache
         if (cached is not None and cached[1] == epoch
                 and self._key_hits(cached[0], key)):
             return cached[2]
+        temp_np, lti_np = tables_np
         deleted = self.deleted_ext.copy()        # GIL-atomic vs bg merge
         if deleted:
             dl = np.fromiter(deleted, np.int64, len(deleted))
-            mask = np.isin(tables_np, dl)
+            t_mask = np.isin(temp_np, dl)
+            l_mask = np.isin(lti_np, dl) if lti_np is not None else None
         else:
-            mask = np.zeros(tables_np.shape, bool)
-        drop = jnp.asarray(mask)
+            t_mask = np.zeros(temp_np.shape, bool)
+            l_mask = (np.zeros(lti_np.shape, bool)
+                      if lti_np is not None else None)
+        drop = (jnp.asarray(t_mask) if temp_np.shape[0] else None,
+                jnp.asarray(l_mask) if l_mask is not None else None)
         self._drop_cache = (key, epoch, drop)
         return drop
 

@@ -14,6 +14,19 @@ wrapper in ``ops.py`` (which falls back to interpret mode on CPU):
   block_topk   — streaming block top-k merge (candidate-list maintenance of
                  Algorithm 1 / final result aggregation across shards).
 
+The *mutation* hot path (insert / delete-repair / StreamingMerge) adds two
+fused kernels with the same ref/ops/parity structure:
+
+  robust_prune — Algorithm 3's R sequential selection rounds (masked argmin
+                 + winner coverage row + alpha-mask update) in ONE launch
+                 per node, full-precision and SDC-code flavors; vmapped
+                 over node blocks by ``core.prune.robust_prune_batch``.
+  delete_repair— Algorithm 4's per-node repair step (neighbor-of-deleted-
+                 neighbor candidate assembly + prune rounds + changed-row
+                 select) in one launch; drives
+                 ``core.delete.consolidate_deletes`` and the StreamingMerge
+                 delete phase.
+
 These wrappers ARE the search hot path: the beam-width engine in
 ``repro.core.search`` routes every iteration through them when
 ``use_kernel`` resolves true (``IndexConfig.use_kernel``; None -> auto-on
@@ -25,4 +38,6 @@ round.  With ``use_kernel=False`` the engine runs the bit-identical jnp
 reference path — the parity tests in ``tests/test_beam_search.py`` toggle
 the flag both ways.
 """
-from .ops import adc_distances, l2_distances, block_topk  # noqa: F401
+from .ops import (adc_distances, l2_distances, block_topk,  # noqa: F401
+                  robust_prune_fp, robust_prune_sdc,
+                  delete_repair_fp, delete_repair_sdc)

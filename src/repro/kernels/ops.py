@@ -17,9 +17,11 @@ import jax.numpy as jnp
 
 from . import ref
 from .block_topk import block_topk_kernel
+from .delete_repair import delete_repair_fp_kernel, delete_repair_sdc_kernel
 from .frontier_select import frontier_select_kernel
 from .l2_distance import l2_distances_kernel
 from .pq_adc import adc_distances_kernel
+from .robust_prune import robust_prune_fp_kernel, robust_prune_sdc_kernel
 
 
 def _interpret() -> bool:
@@ -116,6 +118,153 @@ def frontier_select(cand_ids: jax.Array, cand_d: jax.Array,
     n_take = jnp.sum((f_i[0] >= 0).astype(jnp.int32))
     return (m_i[0], m_d[0], f_i[0], f_d[0],
             ov_i[0, :V], ov_d[0, :V], vis_cnt + n_take)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "use_kernel"))
+def robust_prune_fp(d_p: jax.Array, vecs: jax.Array, ids: jax.Array,
+                    ok: jax.Array, *, alpha: float, R: int,
+                    use_kernel: bool = True):
+    """Fused RobustPrune rounds over a [B, C] block of nodes, full precision.
+
+    d_p [B, C] raw anchor distances, vecs [B, C, d] candidate vectors,
+    ids [B, C] int32, ok [B, C] bool -> (out_ids [B, R] INVALID-padded,
+    counts [B]).  ONE kernel launch per block
+    (``core.prune.robust_prune_batch``).  The candidate axis is padded to a
+    128 multiple with (+inf, id -1) inert lanes; the feature axis stays
+    unpadded so the per-round coverage reduction is bit-identical to the
+    oracle's.
+    """
+    if not use_kernel:
+        out, cnt = jax.vmap(lambda dp, v, i, o: ref.robust_prune_fp_ref(
+            dp, v, i, o, alpha=alpha, R=R))(d_p, vecs, ids, ok)
+        return out, cnt
+    interp = _interpret()
+    dm = jnp.where(ok, d_p.astype(jnp.float32), jnp.inf)
+    vp = vecs.astype(jnp.float32)
+    idsp = ids.astype(jnp.int32)
+    if not interp:
+        # Mosaic wants 128-multiple lanes; the interpreter does not, and
+        # the pad copies are pure overhead there.  Padding lanes carry
+        # (+inf, id -1, zero vectors) and are provably inert.
+        dm = _pad_to(dm, 1, 128, jnp.inf)
+        idsp = _pad_to(idsp, 1, 128, -1)
+        vp = _pad_to(vp, 1, 128, 0.0)
+    out, cnt = robust_prune_fp_kernel(dm, vp, idsp, alpha=alpha, R=R,
+                                      interpret=interp)
+    return out, cnt[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "use_kernel"))
+def robust_prune_sdc(d_p: jax.Array, codes: jax.Array, tables: jax.Array,
+                     ids: jax.Array, ok: jax.Array, *, alpha: float, R: int,
+                     use_kernel: bool = True):
+    """Fused RobustPrune rounds over a [B, C] block, SDC coverage.
+
+    d_p [B, C] raw anchor distances (any source: SDC for code anchors, ADC
+    for vector anchors), codes [B, C, m] candidate PQ codes,
+    tables [m, ksub, ksub] from ``pq.sdc_tables`` ->
+    (out_ids [B, R], counts [B]).
+    """
+    if not use_kernel:
+        out, cnt = jax.vmap(lambda dp, c, i, o: ref.robust_prune_sdc_ref(
+            dp, c, tables, i, o, alpha=alpha, R=R))(d_p, codes, ids, ok)
+        return out, cnt
+    interp = _interpret()
+    dm = jnp.where(ok, d_p.astype(jnp.float32), jnp.inf)
+    cp = codes.astype(jnp.int32)
+    idsp = ids.astype(jnp.int32)
+    if not interp:
+        dm = _pad_to(dm, 1, 128, jnp.inf)
+        idsp = _pad_to(idsp, 1, 128, -1)
+        cp = _pad_to(cp, 1, 128, 0)
+    out, cnt = robust_prune_sdc_kernel(dm, cp, tables.astype(jnp.float32),
+                                       idsp, alpha=alpha, R=R,
+                                       interpret=interp)
+    return out, cnt[:, 0]
+
+
+def _repair_operands(row, nbr_del, exp, exp_ok, usable_c, d_p, p, live,
+                     pad_lanes: bool):
+    """Engine-shaped repair inputs -> kernel lane layout (i32 flags).
+
+    The per-parent ``exp_ok`` is flattened to per-lane so the candidate
+    axis can pad to a 128 multiple for Mosaic (``pad_lanes``, compiled
+    path only): padding lanes carry (exp -1, exp_ok 0, usable 0, +inf) and
+    are inert through assembly and every prune round.
+    """
+    B, R = row.shape[:2]
+    e = exp.reshape(B, -1).astype(jnp.int32)
+    eok = jnp.repeat(exp_ok.astype(jnp.int32), R, axis=1)
+    us = usable_c.astype(jnp.int32)
+    dp = d_p.astype(jnp.float32)
+    if pad_lanes:
+        # C = R + E: pad the expansion lanes so C lands on a 128 multiple.
+        pad = (-(R + e.shape[1])) % 128
+        widths = ((0, 0), (0, pad))
+        e = jnp.pad(e, widths, constant_values=-1)
+        eok = jnp.pad(eok, widths, constant_values=0)
+        us = jnp.pad(us, widths, constant_values=0)
+        dp = jnp.pad(dp, widths, constant_values=jnp.inf)
+    return (row.astype(jnp.int32), nbr_del.astype(jnp.int32), e, eok, us,
+            dp, p.reshape(B, 1).astype(jnp.int32),
+            live.reshape(B, 1).astype(jnp.int32))
+
+
+def _pad_payload(x, pad_lanes: bool):
+    """Pad a [B, C, f] candidate payload to match `_repair_operands`."""
+    if not pad_lanes:
+        return x
+    return _pad_to(x, 1, 128, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "use_kernel"))
+def delete_repair_fp(row, nbr_del, exp, exp_ok, usable_c, d_p, vecs, p,
+                     live, *, alpha: float, R: int, use_kernel: bool = True):
+    """A block's fused Algorithm-4 repair step, full precision.
+
+    row [B, R] int32, nbr_del [B, R] bool, exp [B, E_par, R] int32
+    pre-gathered expansion rows, exp_ok [B, E_par] bool, usable_c [B, C]
+    bool, d_p [B, C] raw anchor distances, vecs [B, C, d] (raw
+    concat(row, exp) candidate order), p [B] node ids, live [B] bool ->
+    new rows [B, R].  Candidate assembly, prune rounds, and the final
+    changed-row select are ONE launch per block
+    (``core.delete.consolidate_deletes``).
+    """
+    if not use_kernel:
+        return jax.vmap(lambda *a: ref.delete_repair_fp_ref(
+            *a, alpha=alpha, R=R))(row, nbr_del, exp, exp_ok, usable_c,
+                                   d_p, vecs, p, live)
+    interp = _interpret()
+    r, nd, e, eok, us, dp, pp, lv = _repair_operands(
+        row, nbr_del, exp, exp_ok, usable_c, d_p, p, live,
+        pad_lanes=not interp)
+    return delete_repair_fp_kernel(r, nd, e, eok, us, dp,
+                                   _pad_payload(vecs.astype(jnp.float32),
+                                                not interp), pp, lv,
+                                   alpha=alpha, R=R, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "use_kernel"))
+def delete_repair_sdc(row, nbr_del, exp, exp_ok, usable_c, d_p, codes,
+                      tables, p, live, *, alpha: float, R: int,
+                      use_kernel: bool = True):
+    """``delete_repair_fp`` with SDC coverage (codes [B, C, m], sdc
+    tables)."""
+    if not use_kernel:
+        return jax.vmap(lambda r_, nd, e, eok, us, dp, c, pp, lv:
+                        ref.delete_repair_sdc_ref(
+                            r_, nd, e, eok, us, dp, c, tables, pp, lv,
+                            alpha=alpha, R=R))(
+            row, nbr_del, exp, exp_ok, usable_c, d_p, codes, p, live)
+    interp = _interpret()
+    r, nd, e, eok, us, dp, pp, lv = _repair_operands(
+        row, nbr_del, exp, exp_ok, usable_c, d_p, p, live,
+        pad_lanes=not interp)
+    return delete_repair_sdc_kernel(r, nd, e, eok, us, dp,
+                                    _pad_payload(codes.astype(jnp.int32),
+                                                 not interp),
+                                    tables.astype(jnp.float32), pp, lv,
+                                    alpha=alpha, R=R, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",

@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: fused RobustPrune rounds (the mutation-engine hot loop).
+
+Algorithm 3 selects up to R out-neighbors by R sequential rounds of
+(masked argmin over the anchor distances) -> (emit the winner) ->
+(retire every candidate the winner alpha-covers).  The jnp engine pays the
+round loop as R separate XLA steps per node; this kernel fuses all R rounds
+— argmin, the winner's candidate<->candidate distance row, and the
+alpha-coverage mask update — into ONE launch for a whole [B, C] block of
+nodes (``core.prune.robust_prune_batch``), every round vectorized across
+the block's rows.  A block launch (rather than a per-row launch vmapped
+into a grid) matters doubly: the interpreter *scans* grid points
+sequentially, so row-granular launches would serialize the block on CPU,
+and on TPU one launch per block is exactly the HBM->VMEM streaming unit of
+the sequential merge passes.
+
+Two flavors share the round loop (``_prune_rounds``):
+
+  ``robust_prune_fp_kernel``   coverage distances recomputed per round from
+                               full-precision candidate vectors
+                               (sum((v_star - v)^2), elementwise — exactly
+                               the ``l2_sq`` the jnp oracle uses).
+  ``robust_prune_sdc_kernel``  coverage distances from PQ codes via the
+                               symmetric-distance tables: the winner's code
+                               row is extracted with an exact one-hot sum,
+                               its per-subspace LUT slice and the
+                               candidates' lookups are `take_along_axis`
+                               gathers of exactly one f32 each, and the
+                               final sum runs over the same [.., m] axis as
+                               ``pq.adc`` — bit-identical to the reference.
+
+The winner row is selected with the (min, first-column) scheme shared with
+``block_topk``/``frontier_select`` — identical tie-breaking to
+``jnp.argmin``.  Anchor distances arrive pre-masked (+inf on unusable
+lanes), so the alive set needs no separate mask operand; candidate-lane
+padding carries (+inf, id -1) and is inert.  The candidate axis is the only
+padded axis: per-round coverage reductions run over the unpadded feature
+axes, keeping them bit-identical to the oracle's reductions.  TPU
+hardening (row-tiled grid so a block's [B, C, d] payload streams through
+VMEM, one-hot contractions replacing the SDC gathers) is tracked in
+ROADMAP.md; interpret mode is the validated path on CPU.
+
+Contracts: ``ref.robust_prune_fp_ref`` / ``ref.robust_prune_sdc_ref``
+(see docs/KERNELS.md); parity enforced by
+``tests/test_kernels.py::test_robust_prune_fp_matches_ref`` /
+``test_robust_prune_sdc_matches_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prune_rounds(d_p, ids, cover_fn, *, alpha: float, R: int):
+    """R fused RobustPrune rounds over a block of candidate rows.
+
+    d_p [B, C] f32 anchor distances, pre-masked (+inf on dead lanes);
+    ids [B, C] int32; ``cover_fn(col)`` maps the winners' column indices
+    [B, 1] to their distances to every candidate [B, C].  Returns
+    (out_ids [B, R], counts [B, 1]).
+    """
+    B, C = d_p.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, C), 1)
+
+    def body(i, s):
+        alive, out_i, cnt = s
+        masked = jnp.where(alive, d_p, jnp.inf)
+        m = jnp.min(masked, axis=1, keepdims=True)               # [B, 1]
+        is_min = masked == m
+        col = jnp.min(jnp.where(is_min, cols, C - 1), axis=1,
+                      keepdims=True)                             # [B, 1]
+        okr = jnp.isfinite(m)                                    # [B, 1]
+        picked = jnp.take_along_axis(ids, col, axis=1)           # [B, 1]
+        out_i = jax.lax.dynamic_update_slice(
+            out_i, jnp.where(okr, picked, -1).astype(jnp.int32), (0, i))
+        cnt = cnt + okr.astype(jnp.int32)
+        d_star = cover_fn(col)                                   # [B, C]
+        covered = alpha * d_star <= d_p
+        alive = alive & ~covered & (cols != col)
+        alive = alive & okr                                      # no winner ->
+        return alive, out_i, cnt                                 # row retired
+
+    alive0 = jnp.isfinite(d_p)
+    out0 = jnp.full((B, R), -1, jnp.int32)
+    _, out_i, cnt = jax.lax.fori_loop(
+        0, R, body, (alive0, out0, jnp.zeros((B, 1), jnp.int32)))
+    return out_i, cnt
+
+
+def _fp_cover(vecs):
+    """Full-precision coverage: d_star[b, c] = sum_d (v_star_b - v_bc)^2.
+
+    The winner's vector is a single-row gather by its column index, and
+    the squared-difference reduction runs over the same last axis as the
+    oracle's ``l2_sq`` — bit-identical.
+    """
+
+    def cover(col):
+        v_star = jnp.take_along_axis(vecs, col[:, :, None], axis=1)
+        diff = v_star - vecs                                     # [B, C, d]
+        return jnp.sum(diff * diff, axis=-1)
+
+    return cover
+
+
+def _sdc_cover(codes, tables):
+    """SDC coverage from PQ codes: d_star[b, c] = sum_m T[m, cs_m, cc_m].
+
+    codes [B, C, m] int32, tables [m, ksub, ksub] f32.  The winner's code
+    row and both LUT lookups are single-element gathers (exact); the final
+    reduction runs over the same [.., m] axis as ``pq.adc``.
+    """
+
+    m, ksub = tables.shape[0], tables.shape[1]
+    flat = tables.reshape(m * ksub, ksub)
+    base = jnp.arange(m, dtype=jnp.int32)[None, :] * ksub        # [1, m]
+    codes_t = jnp.swapaxes(codes, 1, 2)                          # [B, m, C]
+
+    def cover(col):
+        c_star = jnp.take_along_axis(codes, col[:, :, None],
+                                     axis=1)[:, 0]               # [B, m]
+        lut_star = flat[base + c_star]                           # [B, m, k]
+        g = jnp.take_along_axis(lut_star, codes_t, axis=2)       # [B, m, C]
+        gathered = jnp.swapaxes(g, 1, 2)                         # [B, C, m]
+        return jnp.sum(gathered, axis=-1)
+
+    return cover
+
+
+def _fp_kernel(d_ref, v_ref, i_ref, out_ref, cnt_ref, *, alpha, R):
+    out, cnt = _prune_rounds(d_ref[...], i_ref[...],
+                             _fp_cover(v_ref[...].astype(jnp.float32)),
+                             alpha=alpha, R=R)
+    out_ref[...] = out
+    cnt_ref[...] = cnt
+
+
+def _sdc_kernel(d_ref, c_ref, t_ref, i_ref, out_ref, cnt_ref, *, alpha, R):
+    out, cnt = _prune_rounds(d_ref[...], i_ref[...],
+                             _sdc_cover(c_ref[...],
+                                        t_ref[...].astype(jnp.float32)),
+                             alpha=alpha, R=R)
+    out_ref[...] = out
+    cnt_ref[...] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "interpret"))
+def robust_prune_fp_kernel(d_p: jax.Array, vecs: jax.Array, ids: jax.Array,
+                           *, alpha: float, R: int,
+                           interpret: bool = False):
+    """d_p [B, C] pre-masked f32, vecs [B, C, d] f32, ids [B, C] int32 ->
+    (out_ids [B, R] int32, counts [B, 1] int32)."""
+    B, C = d_p.shape
+    assert ids.shape == (B, C) and vecs.shape[:2] == (B, C)
+    return pl.pallas_call(
+        functools.partial(_fp_kernel, alpha=alpha, R=R),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d_p, vecs, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "R", "interpret"))
+def robust_prune_sdc_kernel(d_p: jax.Array, codes: jax.Array,
+                            tables: jax.Array, ids: jax.Array,
+                            *, alpha: float, R: int,
+                            interpret: bool = False):
+    """d_p [B, C] pre-masked f32, codes [B, C, m] int32,
+    tables [m, ksub, ksub] f32, ids [B, C] int32 ->
+    (out_ids [B, R] int32, counts [B, 1] int32)."""
+    B, C = d_p.shape
+    assert ids.shape == (B, C) and codes.shape[:2] == (B, C)
+    return pl.pallas_call(
+        functools.partial(_sdc_kernel, alpha=alpha, R=R),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d_p, codes, tables, ids)

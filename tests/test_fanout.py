@@ -150,8 +150,8 @@ def test_search_lanes_matches_dedicated_engines(points, queries):
                        L_search=40, alpha=1.2)
     g1 = mem.build(points[500:700], tcfg, batch=32)
     g2 = mem.build(points[700:950], tcfg, batch=32)
-    stack = stack_lanes([g1, g2, lti.graph], codes=lti.codes,
-                        codebook=lti.codebook.centroids, pq_lane=2)
+    stack = stack_lanes([g1, g2], lti=lti.graph, codes=lti.codes,
+                        codebook=lti.codebook.centroids)
     q = jnp.asarray(queries[:8])
     ids, d, hops, cmps = mem.search_lanes(stack, q, icfg, k=6, L=40)
     for ti, g in enumerate([g1, g2]):
@@ -167,6 +167,63 @@ def test_search_lanes_matches_dedicated_engines(points, queries):
     np.testing.assert_array_equal(np.asarray(d[2]), np.asarray(wd))
     np.testing.assert_array_equal(np.asarray(hops[2]), np.asarray(whops))
     np.testing.assert_array_equal(np.asarray(cmps[2]), np.asarray(wcmps))
+
+
+def test_lane_stack_keeps_lti_at_own_capacity(points, queries):
+    """The memory contract: temp lanes are padded to the largest TEMP
+    capacity, NOT the LTI's — the stack is O(Tt x temp_cap), and the LTI
+    lane rides at its own capacity with its codes un-padded."""
+    icfg = IndexConfig(capacity=1024, dim=DIM, R=20, L_build=28,
+                       L_search=40, alpha=1.2)
+    pqc = PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4)
+    lti = build_lti(points[:500], icfg, pqc, batch=64)
+    tcfg = IndexConfig(capacity=256, dim=DIM, R=20, L_build=28,
+                       L_search=40, alpha=1.2)
+    g1 = mem.build(points[500:700], tcfg, batch=32)
+    g2 = mem.build(points[700:950], tcfg, batch=32)
+    stack = stack_lanes([g1, g2], lti=lti.graph, codes=lti.codes,
+                        codebook=lti.codebook.centroids)
+    assert stack.temps.vectors.shape == (2, 256, DIM)   # temp cap, not 1024
+    assert stack.lti.vectors.shape == (1024, DIM)
+    assert stack.codes.shape[0] == 1024
+    assert stack.n_lanes == 3 and stack.n_temp_lanes == 2
+    # And the live system builds the same layout.
+    sys_ = _three_tier_system(points)
+    sys_._flush_inserts()              # buffered tail -> RW lane is live
+    bundle = sys_._lane_bundle(*sys_._capture_lanes())
+    _, bstack, t_tabs, l_tab, _ = bundle
+    assert bstack.temps.vectors.shape[1] == sys_.cfg.temp_capacity
+    assert bstack.lti.vectors.shape[0] == sys_.cfg.index.capacity
+    assert t_tabs.shape == (3, sys_.cfg.temp_capacity)
+    assert l_tab.shape == (sys_.cfg.index.capacity,)
+
+
+def test_unified_int64_ids_under_x64(points, queries):
+    """With jax_enable_x64 set, ids beyond int32 range ride the on-device
+    merge as int64 pairs — no sequential fallback, bit-identical to the
+    oracle."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    try:
+        big = 2 ** 35
+        def build(**kw):
+            s = bootstrap_system(points[:300], np.arange(300),
+                                 _sys_cfg(**kw))
+            for i in range(40):
+                s.insert(big + i, points[500 + i])
+            return s
+        sys_u = build()
+        sys_s = build(batch_fanout=False)
+        d0 = sys_u.stats.search_dispatches
+        ids_u, d_u = sys_u.search(queries[:8], k=5)
+        assert sys_u.stats.search_dispatches - d0 == 1   # no fallback
+        ids_s, d_s = sys_s.search(queries[:8], k=5)
+        np.testing.assert_array_equal(ids_u, ids_s)
+        np.testing.assert_array_equal(d_u, d_s)
+        got = sys_u.search(points[500:504], k=1)[0][:, 0]
+        np.testing.assert_array_equal(got, big + np.arange(4))
+    finally:
+        jax.config.update("jax_enable_x64", False)
 
 
 def test_unified_dispatch_count(points, queries):

@@ -1,0 +1,211 @@
+"""The batched mutation engine (insert / delete-repair / merge prune paths).
+
+Three contracts:
+  1. kernel-vs-oracle bit-parity — every mutation caller (build, insert,
+     consolidation, StreamingMerge in both distance flavors) produces the
+     SAME graph with ``use_kernel=True`` (fused Pallas launches, interpret
+     mode on CPU) as with the jnp oracle path;
+  2. the Delta append path never duplicates an edge (degree-budget burn
+     regression);
+  3. alpha-RNG post-conditions: repaired rows satisfy the prune invariant
+     (``prune.check_alpha_rng``) after ``consolidate_deletes`` and the
+     StreamingMerge delete phase.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import index as mem
+from repro.core.config import IndexConfig, PQConfig
+from repro.core.delete import consolidate_deletes, delete
+from repro.core.distance import INVALID
+from repro.core.insert import apply_back_edges
+from repro.core.lti import build_lti
+from repro.core.merge import streaming_merge
+from repro.core.prune import check_alpha_rng
+
+from conftest import DIM
+
+
+def _cfg(use_kernel, **kw):
+    base = dict(capacity=1024, dim=DIM, R=16, L_build=24, L_search=32,
+                alpha=1.2, use_kernel=use_kernel)
+    base.update(kw)
+    return IndexConfig(**base)
+
+
+def _pq():
+    return PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4)
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel-path bit-parity through every mutation caller
+# ---------------------------------------------------------------------------
+
+def test_build_and_insert_parity(points):
+    """index.build (LTI build path) + batched insert: fused prune kernels
+    vs the jnp oracle, identical adjacency."""
+    g_j = mem.build(points[:300], _cfg(False), batch=64)
+    g_k = mem.build(points[:300], _cfg(True), batch=64)
+    np.testing.assert_array_equal(np.asarray(g_j.adjacency),
+                                  np.asarray(g_k.adjacency))
+    slots = jnp.arange(300, 332, dtype=jnp.int32)
+    vecs = jnp.asarray(points[300:332])
+    i_j = mem.insert(g_j, slots, vecs, _cfg(False))
+    i_k = mem.insert(g_k, slots, vecs, _cfg(True))
+    np.testing.assert_array_equal(np.asarray(i_j.adjacency),
+                                  np.asarray(i_k.adjacency))
+
+
+def test_consolidate_parity(points):
+    g = mem.build(points[:300], _cfg(False), batch=64)
+    victims = jnp.arange(0, 300, 9)
+    c_j = consolidate_deletes(delete(g, victims), _cfg(False))
+    c_k = consolidate_deletes(delete(g, victims), _cfg(True))
+    np.testing.assert_array_equal(np.asarray(c_j.adjacency),
+                                  np.asarray(c_k.adjacency))
+    np.testing.assert_array_equal(np.asarray(c_j.active),
+                                  np.asarray(c_k.active))
+
+
+@pytest.mark.parametrize("use_sdc", [False, True])
+def test_streaming_merge_parity(points, use_sdc):
+    """All three merge phases (delete repair, insert-phase prune, Delta
+    patch) ride the engine: kernel and jnp paths produce the same LTI."""
+    lti = build_lti(points[:300], _cfg(False), _pq(), batch=64)
+    newv = jnp.asarray(points[300:400])
+    valid = jnp.ones((100,), bool)
+    dmask = jnp.zeros((1024,), bool).at[jnp.arange(0, 300, 11)].set(True)
+    out = {}
+    for uk in (False, True):
+        cfg = _cfg(uk)
+        merged, stats = streaming_merge(lti, newv, valid, dmask, cfg, _pq(),
+                                        insert_chunk=32, block=256,
+                                        use_sdc=use_sdc)
+        out[uk] = (merged, stats)
+    np.testing.assert_array_equal(np.asarray(out[False][0].graph.adjacency),
+                                  np.asarray(out[True][0].graph.adjacency))
+    np.testing.assert_array_equal(np.asarray(out[False][1].slots),
+                                  np.asarray(out[True][1].slots))
+
+
+# ---------------------------------------------------------------------------
+# 2. Delta append-path dedupe (degree-budget burn regression)
+# ---------------------------------------------------------------------------
+
+def _tiny_graph(n=12, R=4, seed=0):
+    rng = np.random.default_rng(seed)
+    vecs = jnp.asarray(rng.standard_normal((n, DIM)).astype(np.float32))
+    adj = jnp.full((n, R), INVALID, jnp.int32)
+    usable = jnp.ones((n,), bool)
+    return vecs, adj, usable, R
+
+
+def test_back_edge_already_present_not_duplicated():
+    """A source p already in N_out(j) must leave the row unchanged — the
+    old append path burned a degree slot on the duplicate."""
+    vecs, adj, usable, R = _tiny_graph()
+    adj = adj.at[1, 0].set(2)                     # j=1 already links p=2
+    pairs_j = jnp.asarray([1], jnp.int32)
+    pairs_p = jnp.asarray([2], jnp.int32)
+    for uk in (False, True):
+        out = apply_back_edges(adj, vecs, usable, pairs_j, pairs_p,
+                               alpha=1.2, R=R, use_kernel=uk)
+        np.testing.assert_array_equal(np.asarray(out[1]), [2, -1, -1, -1])
+
+
+def test_duplicate_pairs_append_once():
+    """The same (j, p) pair listed twice appends p exactly once."""
+    vecs, adj, usable, R = _tiny_graph()
+    adj = adj.at[1, 0].set(3)
+    pairs_j = jnp.asarray([1, 1], jnp.int32)
+    pairs_p = jnp.asarray([5, 5], jnp.int32)
+    for uk in (False, True):
+        out = apply_back_edges(adj, vecs, usable, pairs_j, pairs_p,
+                               alpha=1.2, R=R, use_kernel=uk)
+        row = np.asarray(out[1])
+        np.testing.assert_array_equal(np.sort(row[:2]), [3, 5])
+        np.testing.assert_array_equal(row[2:], [-1, -1])
+
+
+def test_dedupe_avoids_spurious_reprune():
+    """Duplicates must not inflate the degree-budget test: a row with
+    R-1 edges + one duplicate source stays on the append path (the true
+    union fits), rather than burning the last slot or re-pruning."""
+    vecs, adj, usable, R = _tiny_graph()
+    adj = adj.at[1].set(jnp.asarray([2, 4, 6, INVALID], jnp.int32))
+    pairs_j = jnp.asarray([1, 1], jnp.int32)
+    pairs_p = jnp.asarray([2, 8], jnp.int32)      # 2 is a dup, 8 is new
+    out = apply_back_edges(adj, vecs, usable, pairs_j, pairs_p,
+                           alpha=1.2, R=R, use_kernel=False)
+    np.testing.assert_array_equal(np.sort(np.asarray(out[1])), [2, 4, 6, 8])
+
+
+# ---------------------------------------------------------------------------
+# 3. alpha-RNG post-conditions over the repair passes
+# ---------------------------------------------------------------------------
+
+def _alpha_ok_fraction(state, rows_of, table, alpha):
+    oks = [bool(check_alpha_rng(state.adjacency[p], table[p], table, alpha))
+           for p in rows_of]
+    return np.mean(oks) if oks else 1.0
+
+
+def test_consolidate_rows_satisfy_alpha_rng(points):
+    """Every row repaired by Algorithm 4 is a fresh RobustPrune output and
+    must satisfy the alpha-RNG invariant against the prune table."""
+    cfg = _cfg(False)
+    g = mem.build(points[:300], cfg, batch=64)
+    victims = jnp.arange(0, 300, 7)
+    gd = delete(g, victims)
+    safe = jnp.maximum(gd.adjacency, 0)
+    had_del = ((gd.adjacency >= 0) & gd.deleted[safe]).any(axis=1)
+    repaired = np.nonzero(
+        np.asarray(had_del & gd.active & ~gd.deleted))[0][:40]
+    out = consolidate_deletes(gd, cfg)
+    frac = _alpha_ok_fraction(out, repaired, out.vectors, cfg.alpha)
+    assert frac == 1.0
+
+
+def test_merge_delete_phase_satisfies_alpha_rng(points):
+    """A pure-delete StreamingMerge changes rows only through the delete
+    phase's RobustPrune — every changed row must satisfy the invariant
+    against the PQ-decoded table the prune actually ran on."""
+    from repro.core import pq as pqm
+    cfg, pq_cfg = _cfg(False), _pq()
+    lti = build_lti(points[:300], cfg, pq_cfg, batch=64)
+    dmask = jnp.zeros((1024,), bool).at[jnp.arange(0, 300, 6)].set(True)
+    none = jnp.zeros((1, DIM), jnp.float32)
+    merged, _ = streaming_merge(lti, none, jnp.zeros((1,), bool), dmask,
+                                cfg, pq_cfg, insert_chunk=32, block=256)
+    decoded = pqm.decode(merged.codebook, merged.codes, pq_cfg)
+    changed = np.nonzero(np.asarray(
+        (merged.graph.adjacency != lti.graph.adjacency).any(axis=1)
+        & merged.graph.active))[0][:40]
+    frac = _alpha_ok_fraction(merged.graph, changed, decoded, cfg.alpha)
+    assert frac == 1.0
+
+
+def test_full_merge_improves_alpha_rng_on_decoded_table(points):
+    """With staged inserts the Patch phase may legally append (no prune),
+    so not every live row satisfies the invariant — but every row the merge
+    *does* prune is pruned on decoded-code distances, so the decoded-table
+    invariant fraction must not regress vs the pre-merge graph (whose rows
+    were built on exact vectors and mostly violate it)."""
+    from repro.core import pq as pqm
+    cfg, pq_cfg = _cfg(False), _pq()
+    lti = build_lti(points[:300], cfg, pq_cfg, batch=64)
+    newv = jnp.asarray(points[300:380])
+    dmask = jnp.zeros((1024,), bool).at[jnp.arange(0, 300, 9)].set(True)
+    pre_decoded = pqm.decode(lti.codebook, lti.codes, pq_cfg)
+    pre_live = np.nonzero(np.asarray(lti.graph.active))[0]
+    pre = _alpha_ok_fraction(lti.graph, pre_live, pre_decoded, cfg.alpha)
+    merged, _ = streaming_merge(lti, newv, jnp.ones((80,), bool), dmask,
+                                cfg, pq_cfg, insert_chunk=32, block=256)
+    decoded = pqm.decode(merged.codebook, merged.codes, pq_cfg)
+    live = np.nonzero(np.asarray(merged.graph.active))[0]
+    post = _alpha_ok_fraction(merged.graph, live, decoded, cfg.alpha)
+    assert post >= pre, (pre, post)
