@@ -45,7 +45,7 @@ def main(quick: bool = False):
         live.pop(victim)
         if (i + 1) % (updates // 4) == 0:
             t = time.perf_counter()
-            ids, _ = sys_.search(q, k=5)
+            ids, _ = sys_.search_batch(q, k=5)
             search_lat.append(time.perf_counter() - t)
             keys = np.asarray(sorted(live))
             mat = np.stack([live[k] for k in keys])
@@ -58,9 +58,11 @@ def main(quick: bool = False):
          f"p90={np.percentile(ins_lat, 90) * 1e6:.0f}us")
     emit("fig6_delete_latency", float(np.median(del_lat)),
          f"p90={np.percentile(del_lat, 90) * 1e6:.0f}us")
+    disp_per_q = sys_.stats.search_dispatches / max(sys_.stats.searches, 1)
     emit("fig5_search_latency", float(np.median(search_lat)),
-         "recall_mean=%.3f merges=%d" % (np.mean(recalls),
-                                         sys_.stats.merges))
+         "recall_mean=%.3f merges=%d batch=%d disp/query=%.3f"
+         % (np.mean(recalls), sys_.stats.merges, len(q), disp_per_q),
+         batch=len(q), dispatches_per_query=disp_per_q)
 
 
 if __name__ == "__main__":

@@ -4,13 +4,17 @@ stream against a FreshDiskANN system with background merges — the paper's
 
     PYTHONPATH=src python examples/serve_ann.py --minutes 0.5
 
-By default every search runs the unified §5.2 fan-out: the RW tier, all
-frozen RO snapshots, AND the PQ-navigated LTI lane as ONE jitted device
-program (watch the ``disp/search`` column sit at 1.0 however many tiers are
-live).  ``--split-fanout`` switches to the sequential per-tier oracle —
-bit-identical results, one device program per tier.  ``--autotune-beam``
-lets the system pick the beam width W by probing the unified program
-(see docs/ARCHITECTURE.md for knobs and architecture).
+By default every search batch rides the unified §5.2 fan-out: the RW tier,
+all frozen RO snapshots, AND the PQ-navigated LTI lane as ONE jitted device
+program per micro-batch (watch the ``disp/batch`` column sit at 1.0 however
+many tiers are live).  ``--split-fanout`` switches to the sequential
+per-tier oracle — bit-identical results, one device program per tier.
+``--batch-queries N`` serves requests in fixed-shape micro-batches of N;
+``--shard-lti N`` row-shards the LTI lane over N devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to try it on CPU —
+the docs/SERVING.md recipe); ``--autotune-beam`` lets the system pick the
+beam width W by probing the unified program (architecture:
+docs/ARCHITECTURE.md; serving guide: docs/SERVING.md).
 """
 import argparse
 import time
@@ -36,6 +40,13 @@ def main():
     ap.add_argument("--autotune-beam", action="store_true",
                     help="calibrate the beam width W against the unified "
                          "fan-out program instead of using the static W")
+    ap.add_argument("--batch-queries", type=int, default=0,
+                    help="fixed serving micro-batch width (0 = natural "
+                         "request shape); search_dispatches counts "
+                         "ceil(B/N) programs per request")
+    ap.add_argument("--shard-lti", type=int, default=0,
+                    help="row-shard the LTI lane over this many devices "
+                         "(capped at the device census; 0 = off)")
     args = ap.parse_args()
     n = args.points
 
@@ -47,7 +58,8 @@ def main():
         ro_snapshot_points=n // 8, merge_threshold=n // 4,
         temp_capacity=n, insert_batch=64,
         batch_fanout=not args.split_fanout,
-        autotune_beam=args.autotune_beam)
+        autotune_beam=args.autotune_beam,
+        batch_queries=args.batch_queries, shard_lti=args.shard_lti)
     system = bootstrap_system(corpus, np.arange(n), cfg)
     live = dict(enumerate(corpus))
     upd = vector_stream(64, DIM, seed=7)
@@ -74,7 +86,7 @@ def main():
         if cycle % 4 == 0:
             q = next(qs)
             t = time.perf_counter()
-            ids, _ = system.search(q, k=5)
+            ids, _ = system.search_batch(q, k=5)
             s_lat = time.perf_counter() - t
             searches += 1
             keys = np.asarray(sorted(live))
@@ -87,10 +99,12 @@ def main():
             print(f"[steady-state] t={time.time() - deadline + args.minutes * 60:5.0f}s "
                   f"size={system.size} recall@5={rec:.3f} "
                   f"search={s_lat * 1e3:.0f}ms "
-                  f"disp/search={system.stats.search_dispatches / searches:.1f} "
+                  f"disp/batch={system.stats.search_dispatches / searches:.1f} "
                   f"ins_p50={np.median(ins_lat) * 1e3:.1f}ms "
                   f"merges={system.stats.merges}")
     mode = "split" if args.split_fanout else "unified"
+    if system.lti_shards:
+        mode += f" x {system.lti_shards}-shard LTI lane"
     print(f"final: mean recall {np.mean(recalls):.3f}, "
           f"{system.stats.inserts} inserts, {system.stats.deletes} deletes, "
           f"{system.stats.merges} merges, {mode} fan-out: "

@@ -6,10 +6,20 @@
 # so kernel-path regressions (shape/padding/semantics) surface on any CPU box
 # without a TPU.  The bench probe builds a small LTI and runs the beam-width
 # sweep with the kernels enabled — ~30s end to end.
+#
+# `smoke.sh --shards` runs the sharded-serving probe instead: 4 fake host
+# devices (XLA_FLAGS) + scripts/shard_probe.py asserting the shard-count
+# invariance / dispatch / micro-batching contracts of docs/SERVING.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export REPRO_PALLAS_INTERPRET=1
+
+if [[ "${1:-}" == "--shards" ]]; then
+  XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python scripts/shard_probe.py
+  exit 0
+fi
 
 # Docs first (cheapest): docs/*.md + README references (file paths, links,
 # file.py::symbol refs, python snippets) must match the tree.

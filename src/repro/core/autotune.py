@@ -23,6 +23,13 @@ per-query IO rounds = max over lanes (the vmapped lanes run concurrently,
 so latency follows the slowest lane — normally the LTI), distance
 computations = sum over lanes (total work).  Without batching it probes the
 largest single tier, as before.
+
+Batched/sharded serving (docs/SERVING.md) changes nothing here: the hop and
+cmp counters are per-query and bit-identical whether a query is served
+alone, inside a ``search_batch`` micro-batch, or against the mesh-sharded
+LTI lane (the sharded lane replays the identical beam loop on replicated
+state), so one probe calibrates every serving configuration of the same
+tier census.
 """
 from __future__ import annotations
 

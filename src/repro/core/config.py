@@ -100,12 +100,31 @@ class SystemConfig:
     # full state.  Without it the log is never truncated (truncating with no
     # covering snapshot would lose the pre-merge records on crash).
     snapshot_dir: Optional[str] = None
-    # Query engine (paper §5.2 fan-out).
+    # Query engine (paper §5.2 fan-out).  Serving guide: docs/SERVING.md.
     batch_fanout: bool = True     # ONE jitted device program per query
     #   batch: RW + RO tiers + the PQ-navigated LTI lane searched as a
     #   heterogeneous LaneStack, with the DeleteList filter and cross-tier
     #   top-k merge on-device (index.unified_search).  False: sequential
     #   per-tier loop + host aggregation — the bit-parity oracle.
+    batch_queries: int = 0        # serving micro-batch width for
+    #   search_batch: 0 = run each request batch at its natural shape (a
+    #   new jit specialization per distinct B); N > 0 = serve queries in
+    #   fixed-shape chunks of N (the tail chunk zero-padded and sliced
+    #   off), so ONE compiled program serves any request size.  Results
+    #   are bit-identical per query either way; search_dispatches counts
+    #   ceil(B / N) programs per request batch.
+    shard_lti: int = 0            # shard the LTI lane's per-point arrays
+    #   (vectors, adjacency, PQ codes, flags) row-wise over min(shard_lti,
+    #   device_count) devices on a 1-axis data mesh (graph.shard_lti +
+    #   serving.steps.make_sharded_unified_step).  The beam state stays
+    #   replicated and every row access is owner-computed + psum'd, so
+    #   results are bit-identical to the unsharded lane for any shard
+    #   count.  Each device SEARCHES only its 1/n row block; note that in
+    #   this repo the sharded placement is a serving-side copy — the
+    #   system keeps its mutable source-of-truth LTI unsharded for
+    #   merges/snapshots, so the net memory win needs a deployment that
+    #   drops the unsharded copy (docs/SERVING.md, "What it costs").
+    #   0 = off.  The sequential oracle (batch_fanout=False) ignores it.
     background_merge: bool = False  # threshold merges run on a worker thread
     #   so inserts never stall on a foreground StreamingMerge
     autotune_beam: bool = False   # pick W from the hop/cmp trade-off, costed

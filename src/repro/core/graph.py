@@ -144,6 +144,36 @@ def stack_lanes(temp_states: list[GraphState], *,
     return LaneStack(stacked, lti, codes, codebook)
 
 
+def shard_lti(graph: GraphState, codes: jax.Array, n_shards: int, *,
+              mesh=None, axis: str = "data") -> tuple[GraphState, jax.Array]:
+    """Row-partition the LTI graph + its PQ codes over ``n_shards`` devices.
+
+    Pads the capacity up to a multiple of ``n_shards`` (``pad_graph`` —
+    padding slots are inert: inactive, INVALID-adjacent, zero codes) so
+    every shard owns an equal contiguous block of rows, shard ``s``
+    covering slots ``[s*cap/n, (s+1)*cap/n)``.  With ``mesh`` given, the
+    arrays are additionally ``device_put`` row-sharded over its ``axis``
+    (``distributed.sharding.place_lti_lane``), so each device holds only
+    its block; the PQ codebook and the medoid entry point stay replicated
+    (they ride in scalar/replicated specs).  The sharded serving lane
+    (``serving.steps.make_sharded_unified_step``) consumes this layout;
+    results are bit-identical to the unsharded lane for any shard count —
+    see docs/SERVING.md.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    cap = -(-graph.capacity // n_shards) * n_shards
+    graph = pad_graph(graph, cap)
+    if codes.shape[0] < cap:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((cap - codes.shape[0], codes.shape[1]),
+                              codes.dtype)])
+    if mesh is not None:
+        from ..distributed.sharding import place_lti_lane
+        graph, codes = place_lti_lane(mesh, graph, codes, axis=axis)
+    return graph, codes
+
+
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:
     """Index of the (sampled) medoid among ``mask``-active rows.
 

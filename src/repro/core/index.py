@@ -1,6 +1,13 @@
 """FreshVamana — the in-memory index (paper §4): build, insert, delete,
 consolidate, search.  Functional core over ``GraphState``; every entry point
 jit-compiles with static shapes.
+
+``unified_search`` is the one-program §5.2 fan-out every stage of which is
+vmapped over the query axis — the device half of the batched serving engine
+(``system.search_batch``; serving guide: docs/SERVING.md).  Under
+``SystemConfig.shard_lti`` the same program shape runs with the LTI lane
+mesh-sharded (``serving.steps.make_sharded_unified_step``), reusing
+``search_lanes`` / ``lanes_to_ext`` / ``fanout_merge`` from here.
 """
 from __future__ import annotations
 

@@ -42,6 +42,14 @@ frontier, and appends it to the visited arrays.  The pre-fusion engine paid
 three separate steps per round (``block_topk`` merge, membership recompute,
 ``argsort`` frontier pick); the fused step is bit-identical to that sequence
 (the jnp reference in ``kernels.ref.frontier_select_ref`` is the contract).
+
+Graph rows are fetched through a ``GraphSource`` — a second tiny protocol
+mirroring ``DistanceBackend``, but for the *topology* side of a round:
+``rows(ids)`` returns the adjacency rows of a frontier and ``node_ok(ids)``
+the navigability of freshly discovered neighbors.  ``DenseSource`` (the
+default) indexes local dense arrays; the mesh-sharded LTI lane
+(``serving.steps``) substitutes an owner-computes source whose gathers are
+combined across shards with one ``psum`` — see docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -105,6 +113,39 @@ class PQBackend(NamedTuple):
         return pqm.adc_gather(self.codes, ctx, ids)
 
 
+class GraphSource(Protocol):
+    """Adjacency/navigability row access for the search engine.
+
+    The engine never indexes graph arrays directly — every topology read of
+    an IO round goes through this protocol, so the same beam loop serves
+    dense local arrays (``DenseSource``) and row-sharded storage (the
+    owner-computes source of the mesh-sharded LTI lane in
+    ``serving.steps``).
+    """
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        """ids [W] int32 -> adjacency rows [W, R]; INVALID rows for ids<0."""
+        ...
+
+    def node_ok(self, ids: jax.Array) -> jax.Array:
+        """ids [K] int32 -> bool [K]: valid (>=0) and navigable."""
+        ...
+
+
+class DenseSource(NamedTuple):
+    """Dense local-array graph access — the single-device default."""
+
+    adjacency: jax.Array          # [capacity, R] int32
+    navigable: jax.Array          # [capacity] bool
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        return jnp.where((ids >= 0)[:, None],
+                         self.adjacency[jnp.maximum(ids, 0)], INVALID)
+
+    def node_ok(self, ids: jax.Array) -> jax.Array:
+        return (ids >= 0) & self.navigable[jnp.maximum(ids, 0)]
+
+
 def batch_distances(backend: DistanceBackend, queries: jax.Array,
                     ids: jax.Array, *, use_kernel: bool = False) -> jax.Array:
     """[B, ...] queries x [B, K] ids -> [B, K] distances (exact-rerank path)."""
@@ -126,18 +167,17 @@ class SearchResult(NamedTuple):
 
 
 def _search_one(
-    adjacency: jax.Array,
-    navigable: jax.Array,
+    source: GraphSource,
     start: jax.Array,
     backend: DistanceBackend,
     ctx: Any,
     *,
+    R: int,
     L: int,
     max_visits: int,
     beam_width: int,
     use_kernel: bool,
 ) -> SearchResult:
-    R = adjacency.shape[1]
     W = beam_width
     K = W * R
 
@@ -177,12 +217,10 @@ def _search_one(
     def body(s):
         (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
          n_cmps, n_hops) = s
-        fvalid = f_ids >= 0
 
         # --- one-shot W x R adjacency gather (one IO round) -----------------
-        nbrs = jnp.where(fvalid[:, None],
-                         adjacency[jnp.maximum(f_ids, 0)], INVALID).reshape(K)
-        ok = (nbrs >= 0) & navigable[jnp.maximum(nbrs, 0)]
+        nbrs = source.rows(f_ids).reshape(K)
+        ok = source.node_ok(nbrs)
         in_list = (nbrs[:, None] == cand_ids[None, :]).any(axis=1)
         in_vis = (nbrs[:, None] == vis_ids[None, :]).any(axis=1)
         new = ok & ~in_list & ~in_vis
@@ -223,15 +261,22 @@ def beam_search(
     max_visits: int,
     beam_width: int = 1,
     use_kernel: bool = False,
+    source: GraphSource | None = None,
 ) -> SearchResult:
-    """Batched beam-width Algorithm 1 over ``queries`` [B, ...]."""
+    """Batched beam-width Algorithm 1 over ``queries`` [B, ...].
+
+    ``source`` overrides the graph-row access (default: dense local
+    indexing of ``adjacency``/``navigable``); ``adjacency`` always supplies
+    the static out-degree R, so a sharded caller passes its *local* rows.
+    """
     if beam_width < 1:
         raise ValueError(f"beam_width must be >= 1, got {beam_width}")
     W = min(beam_width, L)   # at most L candidates can be open at once
+    src = DenseSource(adjacency, navigable) if source is None else source
 
     def one(q):
-        return _search_one(adjacency, navigable, start, backend,
-                           backend.prepare(q), L=L, max_visits=max_visits,
+        return _search_one(src, start, backend, backend.prepare(q),
+                           R=adjacency.shape[1], L=L, max_visits=max_visits,
                            beam_width=W, use_kernel=use_kernel)
 
     return jax.vmap(one)(queries)
@@ -261,8 +306,22 @@ def topk_results(
 
     reportable: bool[capacity] — active & not deleted.
     """
-    ids, dists = res.ids, res.dists
-    ok = (ids >= 0) & reportable[jnp.maximum(ids, 0)]
+    ok = (res.ids >= 0) & reportable[jnp.maximum(res.ids, 0)]
+    return topk_masked(res.ids, res.dists, ok, k)
+
+
+def topk_masked(
+    ids: jax.Array,
+    dists: jax.Array,
+    ok: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """``topk_results`` with the reportability mask precomputed.
+
+    The mesh-sharded LTI lane uses this directly: its reportability flags
+    live row-sharded across devices, so the [B, L] ``ok`` mask is gathered
+    owner-computes + psum *before* the (replicated) top-k ranking.
+    """
     d = jnp.where(ok, dists, jnp.inf)
     order = jnp.argsort(d, axis=-1)[:, :k]
     out_ids = jnp.take_along_axis(ids, order, axis=-1)

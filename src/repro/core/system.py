@@ -12,15 +12,19 @@ search during a merge sees every point in exactly one consistent place (or
 transiently in two, which the cross-tier dedupe in ``_aggregate`` resolves).
 
 Query fan-out (§5.2): a query must consult the LTI *and* every TempIndex.
-All live tiers — the RW tier, every frozen RO snapshot, AND the PQ-navigated
-LTI — are folded into one heterogeneous ``LaneStack`` (``graph.stack_lanes``)
-and searched as ONE jitted device program (``index.unified_search``): the
-temp tiers as a vmapped exact-L2 group padded to the largest TEMP capacity,
-the LTI lane at its own capacity on PQ ADC, then the LTI's exact rerank, the
-per-group slot->external-id mapping, the DeleteList filter, and the
-cross-tier top-k merge all on-device.  The stack and the DeleteList
-drop-mask are cached between mutations, so a pure query workload pays one
-dispatch per batch however many snapshots accumulate.
+``search_batch`` serves a whole query batch: all live tiers — the RW tier,
+every frozen RO snapshot, AND the PQ-navigated LTI — are folded into one
+heterogeneous ``LaneStack`` (``graph.stack_lanes``) and the B queries ride
+ONE jitted device program (``index.unified_search``): the temp tiers as a
+vmapped exact-L2 group padded to the largest TEMP capacity, the LTI lane at
+its own capacity on PQ ADC, then the LTI's exact rerank, the per-group
+slot->external-id mapping, the DeleteList filter, and the cross-tier top-k
+merge all on-device, every stage vmapped over the query axis.  The stack
+and the DeleteList drop-mask are cached between mutations, so a pure query
+workload pays one dispatch per micro-batch however many snapshots
+accumulate (``SystemConfig.batch_queries`` fixes the micro-batch width;
+``SystemConfig.shard_lti`` row-shards the LTI lane over the mesh data axis
+with bit-identical results — serving guide: docs/SERVING.md).
 ``SystemConfig.batch_fanout=False`` restores the fully sequential per-tier
 loop + host-side aggregation (the bit-parity oracle for tests): both paths
 return bit-identical (ids, dists).  See docs/ARCHITECTURE.md for the full
@@ -72,10 +76,15 @@ class SystemStats:
     merges: int = 0
     snapshots: int = 0
     merge_seconds: float = 0.0
-    # Jitted device programs launched by `search` calls (the §5.2 fan-out's
-    # serving-cost metric): the unified path pays 1 per batch; the
-    # sequential oracle pays 1 per live tier.  Flush/autotune dispatches are
-    # not counted — this tracks the steady-state query path only.
+    # Jitted device programs launched by the query path (the §5.2 fan-out's
+    # serving-cost metric).  Contract under batching: B queries served in
+    # one launch count ONE dispatch — the unified path pays 1 per
+    # micro-batch (ceil(B / batch_queries) per request batch when
+    # micro-batching is on, else 1), the sequential oracle pays 1 per live
+    # tier per micro-batch.  `searches` counts queries; dispatches count
+    # programs — divide for dispatches-per-query (benchmarks report both).
+    # Flush/autotune dispatches are not counted — this tracks the
+    # steady-state query path only.
     search_dispatches: int = 0
     # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
     # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
@@ -148,6 +157,11 @@ class FreshDiskANN:
         self._drop_cache: Optional[tuple] = None
         self._delete_epoch = 0
         self._int32_warned = False
+        # Sharded-LTI-lane caches (cfg.shard_lti — see _sharded_program).
+        self._shard_mesh = None
+        self._shard_mesh_n = 0
+        self._shard_place: Optional[tuple] = None
+        self._shard_steps: dict = {}
         self.wal: Optional[WriteAheadLog] = None
         if cfg.wal_dir:
             os.makedirs(cfg.wal_dir, exist_ok=True)
@@ -214,20 +228,37 @@ class FreshDiskANN:
     def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
                beam_width: Optional[int] = None
                ) -> tuple[np.ndarray, np.ndarray]:
-        """Query LTI + every TempIndex, aggregate, filter DeleteList (§5.2).
+        """Compatibility alias for ``search_batch`` (the canonical serving
+        entry point since the batched engine landed — see docs/SERVING.md)."""
+        return self.search_batch(queries, k, L=L, beam_width=beam_width)
+
+    def search_batch(self, queries: np.ndarray, k: int,
+                     L: Optional[int] = None,
+                     beam_width: Optional[int] = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Serve a whole query batch: LTI + every TempIndex, aggregate,
+        filter DeleteList (§5.2).  Returns (ext_ids [B, k], dists [B, k]).
+
+        The B queries ride the unified fan-out as ONE jitted device
+        program (per micro-batch — see below): every lane's beam search is
+        vmapped over the query axis, so B queries in one launch cost one
+        dispatch, not B.  Per-query results are bit-identical to serving
+        each query alone (vmap semantics; the per-query / sequential-tier
+        oracle suite is ``tests/test_serving.py``).
+
+        ``cfg.batch_queries`` micro-batches the request: N > 0 serves the
+        batch in fixed-shape chunks of N queries (tail chunk zero-padded,
+        pad rows sliced off), so one compiled program serves any request
+        size; ``SystemStats.search_dispatches`` then counts ceil(B/N)
+        programs.  ``cfg.shard_lti`` additionally row-shards the LTI
+        lane's arrays over the mesh data axis — same results, each device
+        searching only its row block (docs/SERVING.md has the recipe and
+        the capacity caveats).
 
         ``beam_width`` overrides the configured W for every lane in the
-        fan-out (LTI and all TempIndices alike); with ``cfg.autotune_beam``
-        and no override, W comes from the cached hop/cmp calibration
-        (see ``core.autotune``).
+        fan-out; with ``cfg.autotune_beam`` and no override, W comes from
+        the cached hop/cmp calibration (see ``core.autotune``).
 
-        With ``cfg.batch_fanout`` (the default) the whole fan-out — RW tier,
-        every frozen RO snapshot, and the PQ-navigated LTI lane — runs as
-        ONE jitted device program (``index.unified_search``): the vmapped
-        temp group + the LTI lane at its own capacity, LTI exact rerank,
-        DeleteList filter, and cross-tier top-k merge all on-device.  The
-        LaneStack is cached by tier-state identity, so only mutations
-        (flush / rollover / merge) pay a restack.
         ``cfg.batch_fanout=False`` runs the sequential per-tier loop with
         host-side aggregation — the bit-parity oracle: both paths return
         bit-identical (ids, dists).
@@ -240,12 +271,37 @@ class FreshDiskANN:
                 f"holds only L entries, so more than L results cannot be "
                 f"returned; raise L or lower k")
         W = beam_width or self._beam_width(queries)
-        q = jnp.asarray(queries, jnp.float32)
         # Over-fetch so DeleteList filtering + cross-tier dedupe still leave k.
         kk = min(max(k * 2, k + 8), L)
-        rw_t, ro_temps, lti_entry = self._capture_lanes()
-        self.stats.searches += len(queries)
+        q = np.asarray(queries, np.float32)
+        B = q.shape[0]
+        self.stats.searches += B        # queries served, not programs
+        if B == 0:                      # a no-op request is not a program
+            return (np.zeros((0, k), np.int64),
+                    np.zeros((0, k), np.float32))
+        bq = self.cfg.batch_queries
+        if not bq or B == bq:
+            return self._search_dispatch(q, k, kk, L, W)
+        outs = []
+        for lo in range(0, B, bq):      # fixed-shape chunks, tail padded
+            chunk = q[lo:lo + bq]
+            n = len(chunk)
+            if n < bq:                  # pad up to the compiled width
+                qp = np.zeros((bq, q.shape[1]), np.float32)
+                qp[:n] = chunk
+                chunk = qp
+            ids, d = self._search_dispatch(chunk, k, kk, L, W)
+            outs.append((ids[:n], d[:n]))
+        return (np.concatenate([o[0] for o in outs]),
+                np.concatenate([o[1] for o in outs]))
+
+    def _search_dispatch(self, queries: np.ndarray, k: int, kk: int,
+                         L: int, W: int) -> tuple[np.ndarray, np.ndarray]:
+        """Serve ONE fixed-shape micro-batch (all query-count accounting
+        already done by ``search_batch``)."""
+        q = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
+        rw_t, ro_temps, lti_entry = self._capture_lanes()
         if rw_t is None and not ro_temps and lti_entry is None:
             return self._aggregate([], k, nq)
         if self.cfg.batch_fanout:
@@ -255,10 +311,17 @@ class FreshDiskANN:
                 t_drop, l_drop = self._drop_mask(key, tables_np)
                 # rerank only matters to the PQ lane; with no LTI lane it
                 # would be dead compute.
-                ids, d, _, _ = mem.unified_search(
-                    stack, t_tabs, l_tab, t_drop, l_drop, q,
-                    self.cfg.index, k=k, k_lane=kk, L=L, beam_width=W,
-                    rerank=self.cfg.rerank and lti_entry is not None)
+                do_rerank = self.cfg.rerank and lti_entry is not None
+                if lti_entry is not None and self._shard_count():
+                    step, sstack = self._sharded_program(
+                        stack, k=k, kk=kk, L=L, W=W, rerank=do_rerank)
+                    ids, d, _, _ = step(sstack, t_tabs, l_tab, t_drop,
+                                        l_drop, q)
+                else:
+                    ids, d, _, _ = mem.unified_search(
+                        stack, t_tabs, l_tab, t_drop, l_drop, q,
+                        self.cfg.index, k=k, k_lane=kk, L=L, beam_width=W,
+                        rerank=do_rerank)
                 self.stats.search_dispatches += 1
                 return (np.asarray(ids).astype(np.int64),
                         np.asarray(d).astype(np.float32))
@@ -278,6 +341,54 @@ class FreshDiskANN:
             cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
                           np.asarray(d)))
         return self._aggregate(cands, k, nq)
+
+    # ------------------------------------------------- sharded LTI lane
+    @property
+    def lti_shards(self) -> int:
+        """Effective LTI-lane shard count: ``cfg.shard_lti`` capped at the
+        device census (0 = unsharded).  Public mirror of the serving
+        engine's routing decision — see docs/SERVING.md."""
+        return self._shard_count()
+
+    def _shard_count(self) -> int:
+        n = self.cfg.shard_lti
+        if n <= 0:
+            return 0
+        return min(n, len(jax.devices()))
+
+    def _sharded_program(self, stack, *, k, kk, L, W, rerank):
+        """(step, stack-with-sharded-LTI) for the mesh-sharded fan-out.
+
+        Three caches: the 1-axis data mesh (per shard count), the
+        ``graph.shard_lti`` placement (keyed by LTI graph/codes identity —
+        a merge swaps them and misses), and the jitted step per static
+        (k, kk, L, W, rerank) tuple.
+        """
+        from ..distributed.sharding import data_mesh
+        from ..serving.steps import make_sharded_unified_step
+        from .graph import LaneStack, shard_lti
+        n = self._shard_count()
+        if self._shard_mesh is None or self._shard_mesh_n != n:
+            self._shard_mesh = data_mesh(n)
+            self._shard_mesh_n = n
+            self._shard_place = None
+            self._shard_steps = {}
+        place = self._shard_place
+        if (place is None or place[0] is not stack.lti
+                or place[1] is not stack.codes):
+            sg, sc = shard_lti(stack.lti, stack.codes, n,
+                               mesh=self._shard_mesh)
+            place = (stack.lti, stack.codes, sg, sc)
+            self._shard_place = place
+        key = (k, kk, L, W, rerank)
+        step = self._shard_steps.get(key)
+        if step is None:
+            step = make_sharded_unified_step(
+                self._shard_mesh, self.cfg.index, k=k, k_lane=kk, L=L,
+                beam_width=W, rerank=rerank)
+            self._shard_steps[key] = step
+        return step, LaneStack(stack.temps, place[2], place[3],
+                               stack.codebook)
 
     def _beam_width(self, queries: np.ndarray) -> int:
         """Resolve W: autotuned (and cached until the next merge) or static."""
@@ -699,6 +810,7 @@ class FreshDiskANN:
         self._fanout_cache = None  # retired RO stacks must not stay resident
         self._frozen_cache = None
         self._drop_cache = None
+        self._shard_place = None   # the old LTI's sharded copy likewise
         # A delete may leave the DeleteList only when NO copy of the id
         # survives the merge anywhere — LTI residents left via the dmask
         # pass and merged-RO residents were skipped at staging, but a

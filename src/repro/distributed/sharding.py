@@ -158,6 +158,60 @@ def shard_tree(mesh: Mesh, tree, spec_fn) -> Any:
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+# ---------------------------------------------------------------------------
+# ANN serving: the mesh-sharded LTI lane (docs/SERVING.md).
+#
+# The LTI's big per-point arrays (full-precision vectors, adjacency, PQ
+# codes, flags) are row-partitioned over a 1-axis data mesh; the beam-search
+# state stays replicated and every row access is owner-computed + psum'd
+# (serving.steps).  These helpers own the specs + placement so the system
+# layer and the serving step agree on the layout by construction.
+# ---------------------------------------------------------------------------
+
+def data_mesh(n_shards: int, axis: str = "data") -> Mesh:
+    """A 1-axis mesh over the first ``n_shards`` local devices.
+
+    Built directly from ``jax.devices()`` (not ``jax.make_mesh``) so a
+    subset mesh — e.g. 2 shards on a 4-fake-device CPU — works on every
+    supported jax version.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if n_shards > len(devs):
+        raise ValueError(
+            f"data_mesh: {n_shards} shards requested but only "
+            f"{len(devs)} devices present")
+    return Mesh(np.asarray(devs[:n_shards]), (axis,))
+
+
+def lti_lane_specs(axis: str = "data"):
+    """(GraphState spec pytree, codes spec) for the row-sharded LTI lane.
+
+    Per-point arrays shard their leading (slot) axis; the entry point and
+    the allocation watermark are replicated scalars.
+    """
+    from ..core.graph import GraphState
+    graph = GraphState(
+        vectors=P(axis, None), adjacency=P(axis, None),
+        active=P(axis), deleted=P(axis), start=P(), n_total=P())
+    return graph, P(axis, None)
+
+
+def place_lti_lane(mesh: Mesh, graph, codes, axis: str = "data"):
+    """``device_put`` an LTI graph + PQ codes row-sharded over ``axis``.
+
+    The graph capacity must divide the axis size (``graph.shard_lti`` pads
+    it).  Placement is an optimization, not a requirement — the serving
+    step's ``shard_map`` would reshard unplaced inputs on every call; this
+    pins each row block to its owner once, when the lane bundle is built.
+    """
+    gspecs, cspec = lti_lane_specs(axis)
+    placed = type(graph)(*[
+        jax.device_put(x, NamedSharding(mesh, s))
+        for x, s in zip(graph, gspecs)])
+    return placed, jax.device_put(codes, NamedSharding(mesh, cspec))
+
+
 def cache_shardings(mesh: Mesh, abstract_caches, batch: int) -> Any:
     """KV caches: [Gn, B, W, KV, dh] — B over batch axes, W over 'model'."""
     ba = batch_axes(mesh)

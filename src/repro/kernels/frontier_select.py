@@ -22,7 +22,11 @@ occupancy == vis_cnt by construction, and the kernel needs no scalar operand
 (which keeps it trivially vmappable over query lanes).
 
 All rows are [1, N] lane vectors padded to 128 multiples by the ops wrapper;
-padding lanes carry (INVALID, +inf) and are inert in every step above.
+padding lanes carry (INVALID, +inf) and are inert in every step above.  The
+launch carries a leading QUERY-BATCH grid axis — one grid point per query
+row — so a B-query serving batch is one launch whether it arrives as an
+explicit [B, ...] call (``ops.frontier_select_batch``) or as a ``jax.vmap``
+over the engine's per-query step (both lower to the same grid).
 
 Contract: ``ref.frontier_select_ref`` (see docs/KERNELS.md); parity
 enforced by ``tests/test_kernels.py::test_frontier_select_matches_ref``.
@@ -109,23 +113,33 @@ def frontier_select_kernel(all_d: jax.Array, all_i: jax.Array,
                            vis_i: jax.Array, vis_d: jax.Array, *,
                            L: int, W: int, max_visits: int,
                            interpret: bool = False):
-    """all_d/all_i [1, M] merged-input lanes, vis_i/vis_d [1, Vp] visited.
+    """all_d/all_i [B, M] merged-input lanes, vis_i/vis_d [B, Vp] visited.
 
-    Returns (merged_d [1, L], merged_i [1, L], frontier_d [1, W],
-    frontier_i [1, W], new_vis_i [1, Vp], new_vis_d [1, Vp]).
+    The leading axis is the QUERY-BATCH axis: one grid point per query row,
+    each running the fused round step above on its own [1, ...] block —
+    exactly the layout a ``jax.vmap`` over the single-row call lowers to,
+    made explicit so a B-query serving batch is one launch by construction
+    (``ops.frontier_select_batch``).  B=1 is the classic single-lane call.
+
+    Returns (merged_d [B, L], merged_i [B, L], frontier_d [B, W],
+    frontier_i [B, W], new_vis_i [B, Vp], new_vis_d [B, Vp]).
     """
-    _, M = all_d.shape
+    B, M = all_d.shape
     _, Vp = vis_i.shape
-    assert all_i.shape == (1, M) and vis_d.shape == (1, Vp)
+    assert all_i.shape == (B, M) and vis_d.shape == (B, Vp)
+    row = lambda n: pl.BlockSpec((1, n), lambda b: (b, 0))
     return pl.pallas_call(
         functools.partial(_frontier_kernel, L=L, W=W, max_visits=max_visits),
+        grid=(B,),
+        in_specs=[row(M), row(M), row(Vp), row(Vp)],
+        out_specs=[row(L), row(L), row(W), row(W), row(Vp), row(Vp)],
         out_shape=[
-            jax.ShapeDtypeStruct((1, L), jnp.float32),
-            jax.ShapeDtypeStruct((1, L), jnp.int32),
-            jax.ShapeDtypeStruct((1, W), jnp.float32),
-            jax.ShapeDtypeStruct((1, W), jnp.int32),
-            jax.ShapeDtypeStruct((1, Vp), jnp.int32),
-            jax.ShapeDtypeStruct((1, Vp), jnp.float32),
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+            jax.ShapeDtypeStruct((B, L), jnp.int32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.int32),
+            jax.ShapeDtypeStruct((B, Vp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Vp), jnp.float32),
         ],
         interpret=interpret,
     )(all_d, all_i, vis_i, vis_d)

@@ -120,6 +120,42 @@ def frontier_select(cand_ids: jax.Array, cand_d: jax.Array,
             ov_i[0, :V], ov_d[0, :V], vis_cnt + n_take)
 
 
+@functools.partial(jax.jit, static_argnames=("W", "max_visits", "use_kernel"))
+def frontier_select_batch(cand_ids: jax.Array, cand_d: jax.Array,
+                          new_ids: jax.Array, new_d: jax.Array,
+                          vis_ids: jax.Array, vis_d: jax.Array,
+                          vis_cnt: jax.Array, *, W: int,
+                          max_visits: int | None = None,
+                          use_kernel: bool = True):
+    """``frontier_select`` with an explicit query-batch leading axis.
+
+    All operands carry a leading [B] axis (``cand_ids`` [B, L], ``new_ids``
+    [B, K], ``vis_ids`` [B, V], ``vis_cnt`` [B]); the whole serving batch's
+    round step is ONE kernel launch, gridded one query row per grid point —
+    the same grid a ``jax.vmap`` over the single-row call lowers to, made
+    explicit.  Contract: ``ref.frontier_select_batch_ref`` (the vmapped
+    single-row reference); per-row results are bit-identical to B separate
+    ``frontier_select`` calls.
+    """
+    if max_visits is None:
+        max_visits = vis_ids.shape[1]
+    if not use_kernel:
+        return ref.frontier_select_batch_ref(
+            cand_ids, cand_d, new_ids, new_d, vis_ids, vis_d, vis_cnt,
+            W=W, max_visits=max_visits)
+    L, V = cand_ids.shape[1], vis_ids.shape[1]
+    all_d = _pad_to(jnp.concatenate(
+        [cand_d, new_d], axis=1).astype(jnp.float32), 1, 128, jnp.inf)
+    all_i = _pad_to(jnp.concatenate([cand_ids, new_ids], axis=1), 1, 128, -1)
+    vis_ip = _pad_to(vis_ids, 1, 128, -1)
+    vis_dp = _pad_to(vis_d.astype(jnp.float32), 1, 128, jnp.inf)
+    m_d, m_i, f_d, f_i, ov_i, ov_d = frontier_select_kernel(
+        all_d, all_i, vis_ip, vis_dp, L=L, W=W, max_visits=max_visits,
+        interpret=_interpret())
+    n_take = jnp.sum((f_i >= 0).astype(jnp.int32), axis=1)
+    return (m_i, m_d, f_i, f_d, ov_i[:, :V], ov_d[:, :V], vis_cnt + n_take)
+
+
 @functools.partial(jax.jit, static_argnames=("alpha", "R", "use_kernel"))
 def robust_prune_fp(d_p: jax.Array, vecs: jax.Array, ids: jax.Array,
                     ok: jax.Array, *, alpha: float, R: int,

@@ -80,6 +80,21 @@ def frontier_select_ref(cand_ids: jax.Array, cand_d: jax.Array,
     return m_ids, m_d, f_ids, f_d, vis_ids, vis_d, vis_cnt + n_take
 
 
+def frontier_select_batch_ref(cand_ids: jax.Array, cand_d: jax.Array,
+                              new_ids: jax.Array, new_d: jax.Array,
+                              vis_ids: jax.Array, vis_d: jax.Array,
+                              vis_cnt: jax.Array, *, W: int,
+                              max_visits: int | None = None):
+    """The query-batched contract: ``frontier_select_ref`` vmapped over a
+    leading [B] axis — each query row's round step is independent, so the
+    batched kernel (one grid point per row) must match this bit-for-bit.
+    """
+    import functools
+    return jax.vmap(functools.partial(
+        frontier_select_ref, W=W, max_visits=max_visits))(
+        cand_ids, cand_d, new_ids, new_d, vis_ids, vis_d, vis_cnt)
+
+
 def _sdc_cover_row(tables: jax.Array, codes: jax.Array, star: jax.Array
                    ) -> jax.Array:
     """SDC distances from candidate ``star`` to every candidate.

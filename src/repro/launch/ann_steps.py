@@ -21,17 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-# jax >= 0.5 exposes shard_map at the top level and calls the replication
-# check ``check_vma``; 0.4.x has it under experimental with ``check_rep``.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:                                           # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map_04
-
-    def _shard_map(f, *, check_vma=True, **kw):
-        return _shard_map_04(f, check_rep=check_vma, **kw)
-
 from ..core import pq as pqm
+from ..distributed.ctx import shard_map_compat as _shard_map
 from ..core.config import IndexConfig, PQConfig
 from ..core.graph import GraphState
 from ..core.index import insert as mem_insert

@@ -1,15 +1,39 @@
-"""Serve-step factories (prefill / decode / recsys scoring / retrieval).
+"""Serve-step factories: LM prefill/decode, recsys scoring, retrieval — and
+the ANN serving engine's mesh-sharded LTI lane (docs/SERVING.md).
 
 Decode steps take and return KV caches so the launch layer can donate the
 cache buffers (in-place update on device, no copy per token).
+
+The ANN half implements ``SystemConfig.shard_lti``: the LTI's per-point
+arrays (vectors, adjacency, PQ codes, flags) are row-partitioned over a
+1-axis ``data`` mesh (``graph.shard_lti`` + ``distributed.sharding``), and
+``make_sharded_unified_step`` builds the ONE jitted program that serves a
+query batch against it — temp lanes replicated, the LTI lane under
+``shard_map``.  Inside the lane the beam-search *state* (candidate list,
+frontier, visited set) is replicated on every shard while each row access
+is **owner-computed**: the shard owning a slot contributes the gathered
+adjacency row / navigability flag / distance, all others contribute the
+additive identity, and one ``psum`` recombines — so every shard steps the
+identical beam loop and the lane is bit-identical to the single-device
+lane for ANY shard count (the invariance contract
+``tests/test_serving.py`` enforces on 1/2/4 fake CPU devices).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from ..core import index as mem
+from ..core import pq as pqm
+from ..core.config import IndexConfig
+from ..core.distance import INVALID, l2_sq
+from ..core.graph import LaneStack
+from ..core.search import batch_distances, beam_search, topk_masked
+from ..distributed.ctx import shard_map_compat
+from ..distributed.sharding import lti_lane_specs
 from ..models import recsys as rec
 from ..models import transformer as tf
 
@@ -37,6 +61,190 @@ def make_recsys_serve_step(cfg: rec.RecsysConfig) -> Callable:
         return jax.nn.sigmoid(rec.recsys_forward(params, ids, cfg))
 
     return serve
+
+
+# ---------------------------------------------------------------------------
+# ANN: the mesh-sharded LTI lane (owner-computes row access, psum combine).
+# ---------------------------------------------------------------------------
+
+def _owned(ids: jax.Array, offset, n_local: int):
+    """(owned mask, clipped local index) for global slot ids on this shard."""
+    loc = ids - offset
+    own = (ids >= 0) & (loc >= 0) & (loc < n_local)
+    return own, jnp.clip(loc, 0, n_local - 1)
+
+
+def shard_gather_mask(local_mask: jax.Array, ids: jax.Array, offset,
+                      axis: str) -> jax.Array:
+    """Gather a row-sharded bool array at global ids: owner contributes its
+    flag, everyone else 0, one psum recombines.  ids < 0 -> False (exactly
+    the dense ``(ids >= 0) & mask[max(ids, 0)]``)."""
+    own, loc = _owned(ids, offset, local_mask.shape[0])
+    hit = jnp.where(own, local_mask[loc].astype(jnp.int32), 0)
+    return jax.lax.psum(hit, axis) > 0
+
+
+class ShardedRows:
+    """Owner-computes ``search.GraphSource`` over row-sharded graph arrays.
+
+    Bit-parity with ``search.DenseSource``: the owner contributes exactly
+    the dense gather's value and every other shard the additive identity,
+    so the psum reproduces the unsharded result bit-for-bit (integer adds
+    are exact; ids with no owner — INVALID frontier slots — sum to the
+    INVALID row, matching the dense path's explicit mask).
+    """
+
+    def __init__(self, adjacency: jax.Array, active: jax.Array, offset,
+                 axis: str):
+        self.adjacency = adjacency          # [n_local, R]
+        self.active = active                # [n_local]
+        self.offset = offset
+        self.axis = axis
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        own, loc = _owned(ids, self.offset, self.active.shape[0])
+        contrib = jnp.where(own[:, None], self.adjacency[loc] - INVALID, 0)
+        return jax.lax.psum(contrib, self.axis) + INVALID
+
+    def node_ok(self, ids: jax.Array) -> jax.Array:
+        return shard_gather_mask(self.active, ids, self.offset, self.axis)
+
+
+class ShardedADC:
+    """Owner-computes PQ asymmetric distances (the sharded ``PQBackend``).
+
+    The owner evaluates ``pq.adc`` on its local code rows — the same
+    arithmetic, hence the same f32 bits, as the dense ``adc_gather`` — and
+    the psum adds exact zeros from every other shard (x + 0.0 == x for the
+    non-negative finite distances ADC produces).
+    """
+
+    def __init__(self, codes: jax.Array, codebook: jax.Array, offset,
+                 axis: str):
+        self.codes = codes                  # [n_local, m] uint8
+        self.codebook = codebook            # [m, ksub, dsub] f32 (replicated)
+        self.offset = offset
+        self.axis = axis
+
+    def prepare(self, query: jax.Array) -> jax.Array:
+        return pqm.lut(pqm.PQCodebook(self.codebook), query)
+
+    def distances(self, ctx: jax.Array, ids: jax.Array, *,
+                  use_kernel: bool = False) -> jax.Array:
+        own, loc = _owned(ids, self.offset, self.codes.shape[0])
+        d = pqm.adc(self.codes[loc], ctx)
+        d = jax.lax.psum(jnp.where(own, d, 0.0), self.axis)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+
+class ShardedExact:
+    """Owner-computes exact squared-L2 (the sharded ``FullPrecisionBackend``)
+    — used for the LTI lane's in-program full-precision rerank, whose
+    vector rows live sharded."""
+
+    def __init__(self, vectors: jax.Array, offset, axis: str):
+        self.vectors = vectors              # [n_local, d]
+        self.offset = offset
+        self.axis = axis
+
+    def prepare(self, query: jax.Array) -> jax.Array:
+        return query.astype(jnp.float32)
+
+    def distances(self, ctx: jax.Array, ids: jax.Array, *,
+                  use_kernel: bool = False) -> jax.Array:
+        own, loc = _owned(ids, self.offset, self.vectors.shape[0])
+        d = l2_sq(ctx[None, :], self.vectors[loc])
+        d = jax.lax.psum(jnp.where(own, d, 0.0), self.axis)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def make_sharded_lti_lane(mesh, cfg: IndexConfig, *, k_lane: int, L: int,
+                          beam_width: Optional[int] = None,
+                          rerank: bool = True, axis: str = "data"):
+    """The LTI lane as a ``shard_map``: PQ-navigated beam search + exact
+    rerank + per-lane top-k over row-sharded LTI arrays.
+
+    Returns a callable ``(graph, codes, codebook, queries) -> (slot_ids
+    [B, k_lane], dists, hops [B], cmps [B])`` whose outputs are replicated
+    and bit-identical to the unsharded lane of ``index.search_lanes`` —
+    counters included — for any shard count.  The lane runs the jnp engine
+    path (``use_kernel=False``); the Pallas kernels are bit-identical to it
+    by the docs/KERNELS.md contract, so parity with a kernel-routed
+    unsharded lane still holds.
+    """
+    W = beam_width or cfg.beam_width
+    gspecs, cspec = lti_lane_specs(axis)
+
+    def local(g, codes, codebook, queries):
+        n_local = g.active.shape[0]
+        offset = jax.lax.axis_index(axis).astype(jnp.int32) * n_local
+        src = ShardedRows(g.adjacency, g.active, offset, axis)
+        res = beam_search(g.adjacency, g.active, g.start, queries,
+                          ShardedADC(codes, codebook, offset, axis),
+                          L=L, max_visits=cfg.visits_bound(L),
+                          beam_width=W, use_kernel=False, source=src)
+        ok = shard_gather_mask(g.active & ~g.deleted, res.ids, offset, axis)
+        dists = res.dists
+        if rerank:
+            # DeleteList members masked BEFORE the gather (the
+            # ``rerank_candidates`` contract), on the precomputed ok mask.
+            dists = batch_distances(
+                ShardedExact(g.vectors, offset, axis), queries,
+                jnp.where(ok, res.ids, INVALID))
+        ids, d = topk_masked(res.ids, dists, ok, k_lane)
+        return ids, d, res.n_hops, res.n_cmps
+
+    return shard_map_compat(local, mesh=mesh,
+                            in_specs=(gspecs, cspec, P(), P()),
+                            out_specs=(P(), P(), P(), P()),
+                            check_vma=False)
+
+
+def make_sharded_unified_step(mesh, cfg: IndexConfig, *, k: int, k_lane: int,
+                              L: int, beam_width: Optional[int] = None,
+                              rerank: bool = True,
+                              axis: str = "data") -> Callable:
+    """The unified §5.2 fan-out with the LTI lane mesh-sharded — still ONE
+    jitted device program per query batch.
+
+    Mirrors ``index.unified_search`` exactly (temp lanes vmapped at temp
+    capacity, per-group slot->ext mapping, DeleteList filter, cross-tier
+    dedupe/top-k), with the LTI lane dispatched through
+    ``make_sharded_lti_lane``.  The returned step takes
+    ``(stack, t_tabs, l_tab, t_drop, l_drop, queries)`` where
+    ``stack.lti``/``stack.codes`` hold the ``graph.shard_lti`` layout; its
+    (ids, dists) are bit-identical to the unsharded program's.
+    """
+    lane = make_sharded_lti_lane(mesh, cfg, k_lane=k_lane, L=L,
+                                 beam_width=beam_width, rerank=rerank,
+                                 axis=axis)
+
+    @jax.jit
+    def step(stack: LaneStack, t_tabs, l_tab, t_drop, l_drop, queries):
+        B = queries.shape[0]
+        parts_i, parts_d, hops, cmps = [], [], [], []
+        if stack.temps is not None:
+            tids, td, th, tc = mem.search_lanes(
+                LaneStack(stack.temps, None, None, None), queries, cfg,
+                k=k_lane, L=L, beam_width=beam_width)
+            ext, dd = mem.lanes_to_ext(t_tabs, t_drop, tids, td)
+            parts_i.append(jnp.transpose(ext, (1, 0, 2)).reshape(B, -1))
+            parts_d.append(jnp.transpose(dd, (1, 0, 2)).reshape(B, -1))
+            hops.append(th)
+            cmps.append(tc)
+        lids, ld, lh, lc = lane(stack.lti, stack.codes, stack.codebook,
+                                queries)
+        ext, dd = mem.lanes_to_ext(l_tab[None], l_drop[None],
+                                   lids[None], ld[None])
+        parts_i.append(ext[0])
+        parts_d.append(dd[0])
+        hops.append(lh[None])
+        cmps.append(lc[None])
+        mi, md = mem.fanout_merge(jnp.concatenate(parts_i, axis=1),
+                                  jnp.concatenate(parts_d, axis=1), k=k)
+        return mi, md, jnp.concatenate(hops), jnp.concatenate(cmps)
+
+    return step
 
 
 def make_retrieval_step(cfg: rec.RecsysConfig, k: int = 100) -> Callable:
