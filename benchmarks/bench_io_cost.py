@@ -7,16 +7,82 @@ The sweep's measured (hops, cmps) points feed the beam-width autotuner
 (``repro.core.autotune``): the emitted ``autotune_pick_L*`` records show
 which W the cost model selects at each candidate-list size — the same
 choice ``FreshDiskANN`` makes at serve time under ``autotune_beam``.
+
+The disk section re-runs the sweep against the decoupled storage layout
+(``repro.storage``, guide: docs/STORAGE.md) and measures what the
+in-memory engine can't: actual bytes off ``topology.bin``, block
+read-amplification, and the wall-time effect of the async prefetch
+pipeline.  Page-cached mmap reads cost ~0 here, so the device is
+simulated at ``DISK_LATENCY_US`` per queue submission
+(``SystemConfig.io_latency_us``) — the ``d0`` rows are the demand-only
+baseline and the ``d1``/``d2`` rows show the prefetch overlap win
+(``speedup_vs_d0`` > 1).  A ``lat0`` row records the raw no-latency
+callback overhead for honesty.
 """
 from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
 
 import jax.numpy as jnp
 
 from repro.core.autotune import BeamPoint, pick_beam_width
-from repro.core.lti import build_lti, search_lti
+from repro.core.lti import build_lti, search_lti, write_lti_layout
+from repro.storage import DiskLTISearcher
 
 from .common import dataset, default_cfg, default_pq, emit, queryset, timed, \
     write_bench_json
+
+# Simulated per-queue-submission device latency for the disk rows (us).
+# ~500us is a pessimistic SATA-class read; at 0 the page-cached mmap makes
+# prefetch overlap unmeasurable (its thread overhead still shows).
+DISK_LATENCY_US = 500.0
+
+
+def _disk_sweep(lti, cfg, q, quick: bool):
+    """Disk rows: per (L, W, prefetch_depth) wall time + IO accounting."""
+    with tempfile.TemporaryDirectory() as td:
+        layout = write_lti_layout(os.path.join(td, "layout"), lti)
+        row_bytes = layout.row_bytes
+        grid = [(48, 2)] if quick else [(48, 1), (48, 2), (96, 2)]
+        for L, W in grid:
+            base = None
+            for depth in (0, 1, 2):
+                s = DiskLTISearcher(layout, cfg, cache_mb=0,
+                                    prefetch_depth=depth,
+                                    latency_us=DISK_LATENCY_US)
+                s.search(q, k=5, L=L, beam_width=W)     # compile + warm
+                before = s.stats.snapshot()
+                out, secs = timed(s.search, q, k=5, L=L, beam_width=W,
+                                  repeats=2)
+                after = s.stats.snapshot()
+                d = {k: after[k] - before[k] for k in before}
+                reads = int(np.asarray(out[4]).sum())
+                served = d["demand_reads"] + d["prefetch_hits"]
+                hit = d["prefetch_hits"] / served if served else 0.0
+                amp = (d["bytes_read"] / (served * row_bytes)
+                       if served else 0.0)
+                if depth == 0:
+                    base = secs
+                emit(f"disk_L{L}_W{W}_d{depth}", secs / len(q),
+                     "reads=%d bytes=%d amp=%.2f hit=%.2f speedup=%.2fx" % (
+                         reads, d["bytes_read"] // 2, amp, hit, base / secs),
+                     L=L, W=W, prefetch_depth=depth,
+                     latency_us=DISK_LATENCY_US, n_reads=reads,
+                     bytes_read=d["bytes_read"] // 2,   # per repeat
+                     read_amplification=amp, prefetch_hit_rate=hit,
+                     speedup_vs_d0=base / secs)
+                s.close()
+        # No-latency demand-only row: the raw callback/mmap overhead floor.
+        s = DiskLTISearcher(layout, cfg, cache_mb=0, prefetch_depth=0)
+        s.search(q, k=5, L=48, beam_width=2)
+        out, secs = timed(s.search, q, k=5, L=48, beam_width=2, repeats=2)
+        emit("disk_L48_W2_d0_lat0", secs / len(q), "no simulated latency",
+             L=48, W=2, prefetch_depth=0, latency_us=0.0)
+        s.close()
+        layout.close()
 
 
 def main(quick: bool = False):
@@ -41,7 +107,9 @@ def main(quick: bool = False):
         best = pick_beam_width(sweep)
         emit(f"autotune_pick_L{L}", 0.0, f"W={best}", L=L, W=best)
 
-    write_bench_json("io_cost", quick=quick, n=n)
+    _disk_sweep(lti, cfg, q, quick)
+    write_bench_json("io_cost", quick=quick, n=n,
+                     disk_latency_us=DISK_LATENCY_US)
 
 
 if __name__ == "__main__":

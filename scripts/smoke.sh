@@ -10,6 +10,11 @@
 # `smoke.sh --shards` runs the sharded-serving probe instead: 4 fake host
 # devices (XLA_FLAGS) + scripts/shard_probe.py asserting the shard-count
 # invariance / dispatch / micro-batching contracts of docs/SERVING.md.
+#
+# `smoke.sh --disk` runs the storage-tier probe instead: a tiny system with
+# storage_dir set + scripts/disk_probe.py asserting bit-parity at prefetch
+# depths 0/1/2, the read/cache-hit conservation law, delta patching, and
+# staging-buffer reuse (contracts of docs/STORAGE.md).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -18,6 +23,11 @@ export REPRO_PALLAS_INTERPRET=1
 if [[ "${1:-}" == "--shards" ]]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python scripts/shard_probe.py
+  exit 0
+fi
+
+if [[ "${1:-}" == "--disk" ]]; then
+  python scripts/disk_probe.py
   exit 0
 fi
 

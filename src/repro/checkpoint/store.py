@@ -33,6 +33,29 @@ def _leaf_paths(tree) -> list[str]:
     return paths
 
 
+def fsync_dir(path: str) -> None:
+    """fsync a directory so renames/creations inside it are durable."""
+    dfd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def commit_dir(tmp: str, final: str) -> str:
+    """Atomically publish ``tmp`` as ``final``: fsync the staged directory,
+    replace any previous ``final``, rename, fsync the parent.  A crash at
+    any point leaves either the old complete directory or the new one —
+    never a torn mix.  Shared by the checkpoint writer and the decoupled
+    storage layout (``repro.storage.layout``)."""
+    fsync_dir(tmp)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    fsync_dir(os.path.dirname(os.path.abspath(final)))
+    return final
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     """Blocking atomic save; returns the final directory."""
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -48,13 +71,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     with open(os.path.join(tmp, "manifest.pkl"), "wb") as f:
         pickle.dump({"treedef": treedef, "n_leaves": len(leaves),
                      "step": step}, f)
-    dfd = os.open(tmp, os.O_RDONLY)
-    os.fsync(dfd)
-    os.close(dfd)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    return final
+    return commit_dir(tmp, final)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

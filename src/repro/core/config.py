@@ -130,6 +130,33 @@ class SystemConfig:
     autotune_beam: bool = False   # pick W from the hop/cmp trade-off, costed
     #   against the unified fan-out program (see core.autotune)
     beam_width_candidates: tuple = (1, 2, 4, 8)
+    # Decoupled on-disk storage (repro.storage — guide: docs/STORAGE.md).
+    storage_dir: Optional[str] = None  # when set, the LTI is mirrored to a
+    #   decoupled layout at <storage_dir>/lti (topology.bin + data.bin +
+    #   header/meta): written at construction and load, delta-patched in
+    #   place after every StreamingMerge (only changed adjacency rows are
+    #   rewritten — vector bytes stay put for surviving points), and
+    #   snapshots save the LTI as a layout instead of lti.npz.
+    #   search_disk() serves the LTI lane from this layout through
+    #   DiskSource with the knobs below.
+    prefetch_depth: int = 1       # lookahead depth of the async prefetch
+    #   pipeline, in frontier widths: each IO round the engine hands the
+    #   next depth*W still-open candidates to a background reader that
+    #   stages their adjacency rows while the device scores the current
+    #   round.  0 disables the prefetch thread (demand reads only).
+    #   Results are bit-identical at any depth; only timing changes.
+    adjacency_cache_mb: int = 8   # LRU cache over 4KB adjacency blocks of
+    #   topology.bin.  Hits are NOT IO reads: they land in
+    #   SystemStats.io_cache_hits and n_reads drops accordingly (the
+    #   conservation law in core/search.py's counter contract).  0 = off
+    #   (every row request touches the file; n_reads matches the
+    #   in-memory engine bit-for-bit).
+    io_latency_us: float = 0.0    # simulated device latency per IO round
+    #   that touches topology.bin (a round's block reads ride the queue
+    #   concurrently — §6.2).  Benchmarks only: page-cached mmap reads
+    #   cost ~0 on this container, so prefetch overlap is unmeasurable
+    #   without it.  Demand rounds sleep on the critical path, prefetch
+    #   generations on the worker thread.
 
 
 # The paper's operating point for the billion-scale deployment (§6.2).

@@ -174,6 +174,28 @@ def shard_lti(graph: GraphState, codes: jax.Array, n_shards: int, *,
     return graph, codes
 
 
+def write_graph_layout(path: str, state: GraphState, *, codes=None,
+                       codebook=None, ext_ids=None, generation: int = 0):
+    """Serialize a graph into the decoupled on-disk layout (topology split
+    from vectors — ``repro.storage.layout``, guide: docs/STORAGE.md) and
+    return it opened.  Lazy import: ``storage`` is an optional consumer of
+    the core, not a dependency of it."""
+    from ..storage.layout import write_layout
+    return write_layout(path, state, codes=codes, codebook=codebook,
+                        ext_ids=ext_ids, generation=generation)
+
+
+def graph_from_layout(path: str) -> GraphState:
+    """Materialize a ``GraphState`` back from a decoupled layout (the
+    recovery path; serving reads rows in place via ``storage.DiskSource``)."""
+    from ..storage.layout import open_layout
+    lay = open_layout(path)
+    try:
+        return lay.graph_state()
+    finally:
+        lay.close()
+
+
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:
     """Index of the (sampled) medoid among ``mask``-active rows.
 

@@ -52,6 +52,30 @@ def build_lti(vectors, cfg: IndexConfig, pq_cfg: PQConfig,
     return LTIState(graph, codes, codebook)
 
 
+def write_lti_layout(path: str, lti: LTIState, *, ext_ids=None,
+                     generation: int = 0):
+    """Serialize an LTI into the decoupled on-disk layout: adjacency rows to
+    ``topology.bin``, full-precision vectors + PQ codes to ``data.bin``,
+    flags/ext-ids/codebook to the in-memory side tables (``storage.layout``).
+    Returns the layout opened; ``DiskLTISearcher`` over it is bit-identical
+    to ``search_lti`` on this state."""
+    from ..storage.layout import write_layout
+    return write_layout(path, lti.graph, codes=lti.codes,
+                        codebook=lti.codebook, ext_ids=ext_ids,
+                        generation=generation)
+
+
+def lti_from_layout(path: str) -> LTIState:
+    """Materialize an ``LTIState`` back from a decoupled layout (recovery /
+    tests; the serving path streams rows via ``storage.DiskSource``)."""
+    from ..storage.layout import open_layout
+    lay = open_layout(path)
+    try:
+        return lay.lti_state()
+    finally:
+        lay.close()
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "L", "rerank",
                                              "beam_width"))
 def search_lti(lti: LTIState, queries: jax.Array, cfg: IndexConfig,

@@ -179,3 +179,17 @@ def streaming_merge(
     stats = MergeStats(n_del, (slots >= 0).sum(),
                        (pairs_j >= 0).sum(), slots)
     return LTIState(g, codes, codebook), stats
+
+
+@jax.jit
+def adjacency_delta_mask(old_adj: jax.Array, new_adj: jax.Array) -> jax.Array:
+    """[capacity] bool — rows the merge actually rewrote.
+
+    A StreamingMerge touches only the delete-repaired, inserted, and
+    back-edge-patched rows; everything else is bit-identical to the old
+    adjacency.  The mask computes on device (one elementwise compare +
+    row-reduce over the arrays the merge already holds) and drives the
+    DGAI-style delta topology patch (``storage.layout.patch_layout``): only
+    masked rows are rewritten in ``topology.bin``, and the vector file is
+    untouched for surviving points."""
+    return jnp.any(old_adj != new_adj, axis=1)

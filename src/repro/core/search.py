@@ -14,8 +14,21 @@ Counter semantics (paper §6.2 IO accounting):
 
   ``n_hops``   IO *rounds* — while-loop iterations.  Each round issues up to W
                concurrent adjacency fetches; latency is proportional to rounds.
-  ``n_reads``  adjacency rows actually fetched (== expanded nodes == the
-               paper's "~120 random 4KB reads" metric).  At W=1 reads == hops.
+  ``n_reads``  adjacency rows actually FETCHED from the graph source.  For
+               in-memory sources (``DenseSource``, the owner-computes sharded
+               source) every frontier row is a fetch, so reads == expanded
+               nodes (the paper's "~120 random 4KB reads" metric; at W=1
+               reads == hops).  A disk-backed source
+               (``repro.storage.DiskSource``) reports a per-row fetched mask
+               instead: rows its block cache served without touching the
+               file are NOT reads — they are counted separately as
+               ``SystemStats.io_cache_hits`` — while rows the prefetch
+               pipeline read ahead still are (the IO happened; it was just
+               overlapped off the critical path).  The conservation law
+               ``n_reads + cache_hits == rows requested`` ties the two
+               paths together; with the cache off, disk ``n_reads`` is
+               bit-identical to the dense engine's at any prefetch depth
+               (regression: tests/test_storage.py).
   ``n_cmps``   distance computations against fresh neighbors.
 
 Distance computation is injected via a ``DistanceBackend`` — a tiny protocol
@@ -118,9 +131,21 @@ class GraphSource(Protocol):
 
     The engine never indexes graph arrays directly — every topology read of
     an IO round goes through this protocol, so the same beam loop serves
-    dense local arrays (``DenseSource``) and row-sharded storage (the
+    dense local arrays (``DenseSource``), row-sharded storage (the
     owner-computes source of the mesh-sharded LTI lane in
-    ``serving.steps``).
+    ``serving.steps``), and the on-disk layout
+    (``repro.storage.DiskSource``).
+
+    A source may additionally implement the *hinted* extension —
+    ``rows_hinted(ids, hints) -> (rows, fetched)`` plus an integer
+    ``hint_width`` attribute.  Its presence routes the engine onto the
+    frontier->prefetch handshake: the loop threads a ``hint_width``-wide
+    lookahead (the next still-open candidates after each frontier pick)
+    through the round, hands it to the source alongside the frontier so an
+    async prefetcher can stage the *next* round's rows while this round's
+    distances compute, and accumulates the returned per-row ``fetched``
+    mask as ``n_reads`` (rows the source served from cache are hits, not
+    reads — see the counter contract above).
     """
 
     def rows(self, ids: jax.Array) -> jax.Array:
@@ -163,7 +188,29 @@ class SearchResult(NamedTuple):
     visited_dists: jax.Array  # [B, V]
     n_hops: jax.Array     # [B]     IO rounds (beam iterations; latency proxy)
     n_cmps: jax.Array     # [B]     distance computations
-    n_reads: jax.Array    # [B]     adjacency fetches ("IO reads" per §6.2)
+    n_reads: jax.Array    # [B]     adjacency rows fetched from the source
+    #   ("IO reads" per §6.2) — cache-served rows excluded; see module doc
+
+
+def _lookahead(cand_ids: jax.Array, cand_d: jax.Array, vis_ids: jax.Array,
+               hint_w: int) -> jax.Array:
+    """The engine half of the frontier->prefetch handshake: after a
+    ``frontier_select`` the candidate list is sorted ascending and the
+    selected frontier is already in the visited set, so the first
+    ``hint_w`` entries that are valid, unvisited, and finite are exactly
+    the nodes the NEXT frontier will be drawn from — unless a fresh
+    discovery outranks them (those become demand reads).  Deterministic:
+    a pure function of loop state, so prefetch hit/miss classification
+    never depends on thread timing."""
+    if hint_w <= 0:
+        return jnp.full((0,), INVALID, jnp.int32)
+    L = cand_ids.shape[0]
+    in_vis = (cand_ids[:, None] == vis_ids[None, :]).any(axis=1)
+    open_ = (cand_ids >= 0) & ~in_vis & jnp.isfinite(cand_d)
+    # Stable "open entries first, in list (= distance) order" permutation.
+    key = jnp.where(open_, jnp.arange(L, dtype=jnp.int32), jnp.int32(L))
+    order = jnp.argsort(key)[:hint_w]
+    return jnp.where(open_[order], cand_ids[order], INVALID)
 
 
 def _search_one(
@@ -205,8 +252,18 @@ def _search_one(
     cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt = step(
         cand_ids, cand_d, empty_i, empty_d, vis_ids, vis_d, jnp.int32(0))
 
+    # Sources with the hinted extension (repro.storage.DiskSource) count
+    # their own reads per round and receive the lookahead hint; the dense
+    # path is untouched — its loop state and result are bit-identical to
+    # the pre-storage engine.
+    hinted = hasattr(source, "rows_hinted")
+    hint_w = int(getattr(source, "hint_width", 0)) if hinted else 0
+
     state = (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
              jnp.int32(0), jnp.int32(0))
+    if hinted:
+        state = state + (jnp.int32(0),
+                         _lookahead(cand_ids, cand_d, vis_ids, hint_w))
 
     def cond(s):
         f_ids = s[2]
@@ -216,10 +273,16 @@ def _search_one(
 
     def body(s):
         (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
-         n_cmps, n_hops) = s
+         n_cmps, n_hops) = s[:9]
 
         # --- one-shot W x R adjacency gather (one IO round) -----------------
-        nbrs = source.rows(f_ids).reshape(K)
+        if hinted:
+            n_reads, hint = s[9:]
+            frows, fetched = source.rows_hinted(f_ids, hint)
+            nbrs = frows.reshape(K)
+            n_reads = n_reads + fetched.sum(dtype=jnp.int32)
+        else:
+            nbrs = source.rows(f_ids).reshape(K)
         ok = source.node_ok(nbrs)
         in_list = (nbrs[:, None] == cand_ids[None, :]).any(axis=1)
         in_vis = (nbrs[:, None] == vis_ids[None, :]).any(axis=1)
@@ -241,13 +304,24 @@ def _search_one(
         cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt = step(
             cand_ids, cand_d, jnp.where(new, nbrs, INVALID), nd,
             vis_ids, vis_d, vis_cnt)
-        return (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
-                n_cmps, n_hops + 1)
+        out = (cand_ids, cand_d, f_ids, f_d, vis_ids, vis_d, vis_cnt,
+               n_cmps, n_hops + 1)
+        if hinted:
+            # Handshake: publish the lookahead for the round after next —
+            # it rides into the next ``rows_hinted`` call, whose source
+            # prefetches it while that round's distances compute.
+            out = out + (n_reads,
+                         _lookahead(cand_ids, cand_d, vis_ids, hint_w))
+        return out
 
+    fin = jax.lax.while_loop(cond, body, state)
     (cand_ids, cand_d, _, _, vis_ids, vis_d, vis_cnt, n_cmps, n_hops) = (
-        jax.lax.while_loop(cond, body, state))
+        fin[:9])
+    # Dense sources fetch every visited row, so reads == the visit count;
+    # hinted sources counted actual fetches round by round.
+    n_reads = fin[9] if hinted else vis_cnt
     return SearchResult(cand_ids, cand_d, vis_ids, vis_d,
-                        n_hops, n_cmps, vis_cnt)
+                        n_hops, n_cmps, n_reads)
 
 
 def beam_search(
@@ -262,21 +336,26 @@ def beam_search(
     beam_width: int = 1,
     use_kernel: bool = False,
     source: GraphSource | None = None,
+    R: int | None = None,
 ) -> SearchResult:
     """Batched beam-width Algorithm 1 over ``queries`` [B, ...].
 
     ``source`` overrides the graph-row access (default: dense local
-    indexing of ``adjacency``/``navigable``); ``adjacency`` always supplies
-    the static out-degree R, so a sharded caller passes its *local* rows.
+    indexing of ``adjacency``/``navigable``).  The static out-degree comes
+    from ``adjacency`` when present; a source without device-resident
+    topology (``repro.storage.DiskSource``) passes ``adjacency=None`` and
+    an explicit ``R`` instead.
     """
     if beam_width < 1:
         raise ValueError(f"beam_width must be >= 1, got {beam_width}")
+    if R is None:
+        R = adjacency.shape[1]
     W = min(beam_width, L)   # at most L candidates can be open at once
     src = DenseSource(adjacency, navigable) if source is None else source
 
     def one(q):
         return _search_one(src, start, backend, backend.prepare(q),
-                           R=adjacency.shape[1], L=L, max_visits=max_visits,
+                           R=R, L=L, max_visits=max_visits,
                            beam_width=W, use_kernel=use_kernel)
 
     return jax.vmap(one)(queries)

@@ -86,6 +86,19 @@ class SystemStats:
     # Flush/autotune dispatches are not counted — this tracks the
     # steady-state query path only.
     search_dispatches: int = 0
+    # Storage-tier IO accounting (``cfg.storage_dir`` — docs/STORAGE.md).
+    # Rows obey the conservation law of core/search.py's counter contract:
+    # io_rows_read + io_cache_hits == rows the engine requested.
+    io_rows_read: int = 0       # adjacency rows fetched off topology.bin
+    #   (demand reads + prefetch-staged reads — the engine's n_reads)
+    io_cache_hits: int = 0      # rows served by the block cache, no file IO
+    io_prefetch_hits: int = 0   # ... of io_rows_read, staged ahead by the
+    #   prefetch pipeline (IO overlapped off the critical path)
+    io_bytes_read: int = 0      # topology.bin bytes read (whole blocks)
+    storage_rows_patched: int = 0    # adjacency rows rewritten by the
+    #   DGAI-style delta patches StreamingMerge issues
+    storage_bytes_written: int = 0   # bytes those patches (and full layout
+    #   writes) put on disk
     # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
     # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
     insert_latencies: list = field(default_factory=list)
@@ -167,6 +180,12 @@ class FreshDiskANN:
             os.makedirs(cfg.wal_dir, exist_ok=True)
             self.wal = WriteAheadLog(
                 os.path.join(cfg.wal_dir, "wal.bin"), icfg.dim)
+        # Decoupled storage tier (cfg.storage_dir — docs/STORAGE.md): the
+        # live layout mirrors the LTI, the searcher over it is cached per
+        # layout generation (a sync closes it; reopened lazily).
+        self._disk_searcher = None
+        if cfg.storage_dir:
+            self._sync_storage()
 
     # The pair is the source of truth; the individual attributes remain for
     # the non-concurrent paths (init, load, recover) and for inspection.
@@ -753,6 +772,10 @@ class FreshDiskANN:
     def _merge_body(self, ro: list, t0: float) -> None:
         staged = sum(t.n for t in ro)
         icfg = self.cfg.index
+        # The pre-merge adjacency anchors the delta patch: the live layout
+        # is in sync with it, so rows that survive the merge unchanged need
+        # no disk write (storage.layout.patch_layout).
+        old_adj = self.lti.graph.adjacency if self.cfg.storage_dir else None
         # Stage vectors + ids from the RO snapshots (skip re-deleted ones).
         del_snapshot = set(self.deleted_ext)
         vecs = np.zeros((max(staged, 1), icfg.dim), np.float32)
@@ -811,6 +834,15 @@ class FreshDiskANN:
         self._frozen_cache = None
         self._drop_cache = None
         self._shard_place = None   # the old LTI's sharded copy likewise
+        if self.cfg.storage_dir:
+            # Delta-patch the live layout: only the adjacency rows this
+            # merge rewrote touch topology.bin; surviving points' vector
+            # bytes stay put (the DGAI decoupling win, measured in
+            # storage_bytes_written).
+            from .merge import adjacency_delta_mask
+            self._sync_storage(
+                adj_changed=np.asarray(adjacency_delta_mask(
+                    old_adj, new_lti.graph.adjacency)))
         # A delete may leave the DeleteList only when NO copy of the id
         # survives the merge anywhere — LTI residents left via the dmask
         # pass and merged-RO residents were skipped at staging, but a
@@ -841,6 +873,113 @@ class FreshDiskANN:
         self.stats.merges += 1
         self.stats.merge_seconds += time.perf_counter() - t0
 
+    # ------------------------------------------------------- storage tier
+    def _storage_path(self) -> str:
+        return os.path.join(self.cfg.storage_dir, "lti")
+
+    def _sync_storage(self, adj_changed: Optional[np.ndarray] = None) -> None:
+        """Mirror the live (LTI, ext-table) pair to the decoupled layout at
+        ``cfg.storage_dir`` — a full write the first time, a DGAI-style
+        delta patch afterwards (``adj_changed`` from the merge's device-side
+        row compare when available).  Any open disk searcher is closed
+        first: its in-memory header tables would go stale."""
+        from ..storage import layout as slay
+        self.close_storage()
+        path = self._storage_path()
+        os.makedirs(self.cfg.storage_dir, exist_ok=True)
+        lti, table = self._lti_pair
+        if slay.is_layout(path):
+            ps = slay.patch_layout(path, lti.graph, codes=lti.codes,
+                                   ext_ids=table, adj_changed=adj_changed)
+            self.stats.storage_rows_patched += ps.adj_rows
+            self.stats.storage_bytes_written += ps.bytes_written
+        else:
+            lay = slay.write_layout(path, lti.graph, codes=lti.codes,
+                                    codebook=lti.codebook, ext_ids=table)
+            self.stats.storage_bytes_written += (
+                lay.capacity * (lay.row_bytes + lay.dim * 4 + lay.m))
+            lay.close()
+
+    def _disk_searcher_get(self):
+        """The cached ``DiskLTISearcher`` over the live layout (reopened
+        after every sync, so it always serves the current generation)."""
+        if self._disk_searcher is None:
+            from ..storage import DiskLTISearcher, open_layout
+            self._disk_searcher = DiskLTISearcher(
+                open_layout(self._storage_path()), self.cfg.index,
+                cache_mb=self.cfg.adjacency_cache_mb,
+                prefetch_depth=self.cfg.prefetch_depth,
+                latency_us=self.cfg.io_latency_us)
+        return self._disk_searcher
+
+    def close_storage(self) -> None:
+        """Stop the prefetch thread and drop the layout mmaps (no-op when
+        no disk searcher is open)."""
+        if self._disk_searcher is not None:
+            s, self._disk_searcher = self._disk_searcher, None
+            s.close()
+            s.layout.close()
+
+    def search_disk(self, queries: np.ndarray, k: int,
+                    L: Optional[int] = None,
+                    beam_width: Optional[int] = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """The §5.2 fan-out with the LTI lane served OFF THE LAYOUT: PQ
+        navigation on in-memory codes, adjacency rows streamed from
+        ``topology.bin`` through the block cache + prefetch pipeline
+        (``cfg.prefetch_depth`` / ``cfg.adjacency_cache_mb``), exact rerank
+        from ``data.bin``.  Temp tiers are memory-resident by design (the
+        paper's RW/RO TempIndices) and ride the sequential per-tier loop.
+
+        With the cache off this returns bit-identical (ids, dists) to
+        ``search_batch`` with ``batch_fanout=False``; reader IO deltas are
+        folded into ``SystemStats`` (io_rows_read / io_cache_hits /
+        io_prefetch_hits / io_bytes_read) after every call.
+        """
+        if not self.cfg.storage_dir:
+            raise ValueError("search_disk needs SystemConfig.storage_dir")
+        self._flush_inserts()
+        L = L or self.cfg.index.L_search
+        if k > L:
+            raise ValueError(f"search(k={k}, L={L}): k must be <= L")
+        W = beam_width or self.cfg.index.beam_width
+        kk = min(max(k * 2, k + 8), L)
+        q = np.asarray(queries, np.float32)
+        B = q.shape[0]
+        self.stats.searches += B
+        if B == 0:
+            return (np.zeros((0, k), np.int64),
+                    np.zeros((0, k), np.float32))
+        rw_t, ro_temps, lti_entry = self._capture_lanes()
+        cands: list[tuple[np.ndarray, np.ndarray]] = []
+        if lti_entry is not None:
+            s = self._disk_searcher_get()
+            before = s.stats.snapshot()
+            ids, d, _, _, _ = s.search(q, k=kk, L=L, beam_width=W,
+                                       rerank=self.cfg.rerank)
+            # Dispatch is async — materialize before snapshotting, or the
+            # IO counters are read mid-flight and the fold undercounts.
+            ids, d = np.asarray(ids), np.asarray(d)
+            self.stats.search_dispatches += 1
+            after = s.stats.snapshot()
+
+            def delta(key):
+                return after[key] - before[key]
+
+            self.stats.io_rows_read += (delta("demand_reads")
+                                        + delta("prefetch_hits"))
+            self.stats.io_cache_hits += delta("cache_hits")
+            self.stats.io_prefetch_hits += delta("prefetch_hits")
+            self.stats.io_bytes_read += delta("bytes_read")
+            cands.append((self._map_ext(ids, s.layout.ext_ids), d))
+        for t in ([rw_t] if rw_t is not None else []) + ro_temps:
+            ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
+                                      L=L, beam_width=W)
+            self.stats.search_dispatches += 1
+            cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
+                          np.asarray(d)))
+        return self._aggregate(cands, k, B)
+
     # ------------------------------------------------------------ snapshots
     def save(self, path: str) -> None:
         with self._insert_lock:   # freeze buffer + RW tier while we snapshot
@@ -849,13 +988,26 @@ class FreshDiskANN:
     def _save_locked(self, path: str) -> None:
         self._flush_inserts_locked()  # buffered inserts must land in temps
         os.makedirs(path, exist_ok=True)
-        np.savez_compressed(
-            os.path.join(path, "lti.npz"),
-            **{f"g_{k}": np.asarray(v) for k, v in
-               self.lti.graph._asdict().items()},
-            codes=np.asarray(self.lti.codes),
-            centroids=np.asarray(self.lti.codebook.centroids),
-            ext_ids=self.lti_ext_ids)
+        if self.cfg.storage_dir:
+            # Decoupled snapshot: the LTI lands as a storage layout
+            # (topology.bin + data.bin + side tables) instead of a
+            # monolithic npz — the same files the live tier serves from,
+            # so recovery reopens it with zero format conversion.
+            from ..storage.layout import write_layout
+            lay = write_layout(os.path.join(path, "layout"),
+                               self.lti.graph, codes=self.lti.codes,
+                               codebook=self.lti.codebook,
+                               ext_ids=self.lti_ext_ids,
+                               generation=self.stats.merges)
+            lay.close()
+        else:
+            np.savez_compressed(
+                os.path.join(path, "lti.npz"),
+                **{f"g_{k}": np.asarray(v) for k, v in
+                   self.lti.graph._asdict().items()},
+                codes=np.asarray(self.lti.codes),
+                centroids=np.asarray(self.lti.codebook.centroids),
+                ext_ids=self.lti_ext_ids)
         ro_blob = [(t.state, t.ext_ids, t.n) for t in self.ro + [self.rw]]
         with open(os.path.join(path, "temps.pkl"), "wb") as f:
             pickle.dump([(jax.tree.map(np.asarray, s), e, n)
@@ -874,12 +1026,24 @@ class FreshDiskANN:
 
     @classmethod
     def load(cls, path: str, cfg: SystemConfig) -> "FreshDiskANN":
-        z = np.load(os.path.join(path, "lti.npz"))
-        g = GraphState(*[jnp.asarray(z[f"g_{k}"])
-                         for k in GraphState._fields])
-        lti = LTIState(g, jnp.asarray(z["codes"]),
-                       pqm.PQCodebook(jnp.asarray(z["centroids"])))
-        sys = cls(cfg, lti=lti, lti_ext_ids=z["ext_ids"].copy())
+        from ..storage.layout import is_layout, open_layout
+        lay_path = os.path.join(path, "layout")
+        if is_layout(lay_path):
+            # Decoupled snapshot (saved with cfg.storage_dir set): the LTI
+            # comes back from the layout files; construction re-syncs the
+            # live layout under the new storage_dir.
+            lay = open_layout(lay_path)
+            lti = lay.lti_state()
+            ext_ids = lay.ext_ids.copy()
+            lay.close()
+        else:
+            z = np.load(os.path.join(path, "lti.npz"))
+            g = GraphState(*[jnp.asarray(z[f"g_{k}"])
+                             for k in GraphState._fields])
+            lti = LTIState(g, jnp.asarray(z["codes"]),
+                           pqm.PQCodebook(jnp.asarray(z["centroids"])))
+            ext_ids = z["ext_ids"].copy()
+        sys = cls(cfg, lti=lti, lti_ext_ids=ext_ids)
         with open(os.path.join(path, "temps.pkl"), "rb") as f:
             temps = pickle.load(f)
         for i, (s, e, n) in enumerate(temps):
@@ -930,6 +1094,11 @@ class FreshDiskANN:
             self.deleted_ext = restored.deleted_ext
             self._ext_loc = restored._ext_loc
             self._insert_buf_v, self._insert_buf_id = [], []
+            # The restored instance's construction already re-synced the
+            # live layout under cfg.storage_dir; drop any searcher still
+            # open over the pre-crash generation so the next search_disk
+            # reopens against the restored one.
+            self.close_storage()
             start = restored._wal_offset
             epoch = restored._wal_epoch
         n = 0

@@ -17,6 +17,10 @@ additive identity, and one ``psum`` recombines — so every shard steps the
 identical beam loop and the lane is bit-identical to the single-device
 lane for ANY shard count (the invariance contract
 ``tests/test_serving.py`` enforces on 1/2/4 fake CPU devices).
+
+``make_disk_lti_lane`` is the storage-tier sibling: the same LTI lane with
+its adjacency rows streamed from a decoupled on-disk layout through the
+block cache + async prefetch pipeline (``repro.storage``, docs/STORAGE.md).
 """
 from __future__ import annotations
 
@@ -245,6 +249,37 @@ def make_sharded_unified_step(mesh, cfg: IndexConfig, *, k: int, k_lane: int,
         return mi, md, jnp.concatenate(hops), jnp.concatenate(cmps)
 
     return step
+
+
+def make_disk_lti_lane(layout, cfg: IndexConfig, *, k_lane: int, L: int,
+                       beam_width: Optional[int] = None, rerank: bool = True,
+                       cache_mb: int = 0, prefetch_depth: int = 1,
+                       latency_us: float = 0.0) -> Callable:
+    """The LTI lane served off a decoupled on-disk layout (docs/STORAGE.md):
+    PQ navigation on in-memory codes, adjacency rows streamed from
+    ``topology.bin`` through the block cache + async prefetch pipeline, and
+    the exact rerank gathered from ``data.bin``.
+
+    Returns a callable ``(queries) -> (slot_ids [B, k_lane], dists, hops,
+    cmps, reads)`` — the sharded lane's tuple plus per-query disk reads.
+    With the cache off its outputs are bit-identical to the in-memory lane
+    at any prefetch depth.  The lane owns a ``DiskLTISearcher`` exposed as
+    ``lane.searcher`` (IO stats via ``lane.searcher.stats``; call
+    ``lane.close()`` to stop the prefetch thread).
+    """
+    from ..storage.source import DiskLTISearcher
+    searcher = DiskLTISearcher(layout, cfg, cache_mb=cache_mb,
+                               prefetch_depth=prefetch_depth,
+                               latency_us=latency_us)
+    W = beam_width or cfg.beam_width
+
+    def lane(queries):
+        return searcher.search(queries, k=k_lane, L=L, beam_width=W,
+                               rerank=rerank)
+
+    lane.searcher = searcher
+    lane.close = searcher.close
+    return lane
 
 
 def make_retrieval_step(cfg: rec.RecsysConfig, k: int = 100) -> Callable:

@@ -1,0 +1,65 @@
+"""Block-granular LRU cache over the adjacency file.
+
+The cache unit is one ``layout.BLOCK_BYTES`` block of ``topology.bin``
+(``block_rows`` adjacency rows — the paper's 4KB sector), NOT a single
+row: a real SSD read returns the whole sector, so caching at row
+granularity would mis-model both hit rates and read amplification.
+
+Deterministic by construction: eviction is strict LRU over a single
+ordered dict, and the reader serializes all mutations (demand fetches and
+the prefetch worker never touch the cache concurrently — the worker runs
+only between the reader's round-``t`` serve and its round-``t+1`` wait).
+The lock below still guards every operation so that invariant is safety,
+not correctness.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+
+class AdjacencyCache:
+    """Thread-safe LRU of adjacency blocks, bounded by bytes."""
+
+    def __init__(self, capacity_bytes: int, block_bytes: int):
+        self.capacity_blocks = max(0, int(capacity_bytes) // int(block_bytes))
+        self.block_bytes = int(block_bytes)
+        self._blocks: OrderedDict[int, np.ndarray] = OrderedDict()
+        self._lock = threading.Lock()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity_blocks > 0
+
+    def get(self, block_id: int):
+        """The cached block (rows [block_rows, R] int32) or None; a hit
+        refreshes recency."""
+        with self._lock:
+            blk = self._blocks.get(block_id)
+            if blk is not None:
+                self._blocks.move_to_end(block_id)
+            return blk
+
+    def put(self, block_id: int, block: np.ndarray) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self._blocks[block_id] = block
+            self._blocks.move_to_end(block_id)
+            while len(self._blocks) > self.capacity_blocks:
+                self._blocks.popitem(last=False)
+                self.evictions += 1
+
+    def contains(self, block_id: int) -> bool:
+        with self._lock:
+            return block_id in self._blocks
+
+    def clear(self) -> None:
+        with self._lock:
+            self._blocks.clear()

@@ -1,0 +1,303 @@
+"""Decoupled on-disk index layout: topology split from vectors (DGAI-style).
+
+The paper's LTI lives on an SSD; the engine's unit of IO is an adjacency
+row (a "sector read").  This module gives those reads a real on-disk shape:
+
+  ``header.json``    tiny JSON header: capacity / R / dim / m / dtype /
+                     start / n_total / generation.  Rewritten last (via a
+                     tmp + atomic rename), so the generation counter only
+                     advances once a patch is fully on disk.
+  ``topology.bin``   int32 [capacity, R], fixed stride of R*4 bytes per
+                     row — the adjacency-block file.  Row ``i`` of the
+                     graph is exactly bytes [i*R*4, (i+1)*R*4); a search
+                     round's W frontier rows are W disjoint strided reads.
+  ``data.bin``       the vector/code file: float32 [capacity, dim]
+                     full-precision vectors followed by uint8 [capacity, m]
+                     PQ codes.  Never touched by topology-only updates —
+                     the decoupling that makes delta patches cheap.
+  ``meta.npz``       the small in-memory side tables: ``active`` /
+                     ``deleted`` flags, the slot->external-id table, and
+                     the PQ codebook centroids.  Loaded fully into memory
+                     at open (they are O(capacity) bits / O(m*ksub*dsub)
+                     floats, not O(capacity*R)); only adjacency rows and
+                     full-precision vectors stay disk-resident.
+
+``write_layout`` stages into ``<path>.tmp`` and publishes with the same
+fsync + atomic-rename discipline as the checkpoint store
+(``checkpoint.store.commit_dir``).  ``patch_layout`` is the DGAI delta
+path: it rewrites ONLY the adjacency rows (and newly staged vector/code
+rows) that changed, in place, then bumps the header generation — a merge
+that repaired 2% of the graph writes 2% of ``topology.bin`` and zero
+vector bytes for the surviving points.
+
+File formats, the prefetch dataflow, and knob recipes: docs/STORAGE.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Optional
+
+import numpy as np
+
+from ..checkpoint.store import commit_dir, fsync_dir
+
+LAYOUT_VERSION = 1
+HEADER = "header.json"
+TOPOLOGY = "topology.bin"
+DATA = "data.bin"
+META = "meta.npz"
+
+# Granularity of the adjacency-block cache and of read accounting: a block
+# is BLOCK_BYTES of topology.bin (multiple rows when R*4 < BLOCK_BYTES),
+# mirroring the paper's 4KB SSD sector.
+BLOCK_BYTES = 4096
+
+
+@dataclasses.dataclass
+class PatchStats:
+    """What a delta patch actually wrote (lands in ``SystemStats``)."""
+    adj_rows: int = 0
+    vec_rows: int = 0
+    code_rows: int = 0
+    bytes_written: int = 0
+    generation: int = 0
+
+
+@dataclasses.dataclass
+class StorageLayout:
+    """An open decoupled layout: mmap views + in-memory side tables."""
+    path: str
+    capacity: int
+    R: int
+    dim: int
+    m: int
+    vec_dtype: str
+    start: int
+    n_total: int
+    generation: int
+    adjacency: np.memmap        # [capacity, R] int32 (read-only view)
+    vectors: np.memmap          # [capacity, dim] vec_dtype (read-only view)
+    codes: Optional[np.memmap]  # [capacity, m] uint8, None when m == 0
+    active: np.ndarray          # [capacity] bool (in-memory header table)
+    deleted: np.ndarray         # [capacity] bool
+    ext_ids: np.ndarray         # [capacity] int64, -1 free
+    centroids: Optional[np.ndarray]  # [m, ksub, dsub] f32 PQ codebook
+
+    @property
+    def row_bytes(self) -> int:
+        return self.R * 4
+
+    @property
+    def block_rows(self) -> int:
+        """Adjacency rows per cache/IO block (>= 1)."""
+        return max(1, BLOCK_BYTES // self.row_bytes)
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.capacity // self.block_rows)
+
+    def graph_state(self):
+        """Materialize the full ``GraphState`` in memory (tests/recovery —
+        NOT the serving path, which reads rows through ``DiskSource``)."""
+        import jax.numpy as jnp
+        from ..core.graph import GraphState
+        return GraphState(
+            vectors=jnp.asarray(np.asarray(self.vectors)),
+            adjacency=jnp.asarray(np.asarray(self.adjacency)),
+            active=jnp.asarray(self.active),
+            deleted=jnp.asarray(self.deleted),
+            start=jnp.int32(self.start),
+            n_total=jnp.int32(self.n_total))
+
+    def lti_state(self):
+        """Materialize the full ``LTIState`` (codes + codebook required)."""
+        import jax.numpy as jnp
+        from ..core import pq as pqm
+        from ..core.lti import LTIState
+        if self.codes is None or self.centroids is None:
+            raise ValueError(f"layout at {self.path} has no PQ codes")
+        return LTIState(self.graph_state(),
+                        jnp.asarray(np.asarray(self.codes)),
+                        pqm.PQCodebook(jnp.asarray(self.centroids)))
+
+    def close(self) -> None:
+        # memmaps release on GC; drop the references deterministically.
+        self.adjacency = self.vectors = self.codes = None
+
+
+def _header_dict(capacity, R, dim, m, vec_dtype, start, n_total, generation):
+    return {"version": LAYOUT_VERSION, "capacity": int(capacity),
+            "R": int(R), "dim": int(dim), "m": int(m),
+            "vec_dtype": str(vec_dtype), "start": int(start),
+            "n_total": int(n_total), "generation": int(generation)}
+
+
+def _write_header(path: str, hdr: dict) -> None:
+    """Publish the header last, atomically: tmp + fsync + rename."""
+    tmp = os.path.join(path, HEADER + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(hdr, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, HEADER))
+    fsync_dir(path)
+
+
+def _write_meta(path: str, active, deleted, ext_ids, centroids) -> None:
+    tmp = os.path.join(path, META + ".tmp")
+    blobs = {"active": np.asarray(active, bool),
+             "deleted": np.asarray(deleted, bool),
+             "ext_ids": np.asarray(ext_ids, np.int64)}
+    if centroids is not None:
+        blobs["centroids"] = np.asarray(centroids, np.float32)
+    with open(tmp, "wb") as f:
+        np.savez(f, **blobs)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, META))
+
+
+def write_layout(path: str, graph, *, codes=None, codebook=None,
+                 ext_ids: Optional[np.ndarray] = None,
+                 generation: int = 0) -> StorageLayout:
+    """Serialize a ``GraphState`` (plus optional PQ codes/codebook) into a
+    fresh decoupled layout at ``path`` and return it opened.
+
+    Stages into ``<path>.tmp`` and atomically publishes, so a crash
+    mid-write never leaves a half-layout at ``path``.
+    """
+    adj = np.ascontiguousarray(np.asarray(graph.adjacency, np.int32))
+    vecs = np.ascontiguousarray(np.asarray(graph.vectors))
+    capacity, R = adj.shape
+    cd = None if codes is None else np.ascontiguousarray(
+        np.asarray(codes, np.uint8))
+    m = 0 if cd is None else cd.shape[1]
+    cents = None
+    if codebook is not None:
+        cents = np.asarray(getattr(codebook, "centroids", codebook),
+                           np.float32)
+    if ext_ids is None:
+        ext_ids = np.full(capacity, -1, np.int64)
+
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, TOPOLOGY), "wb") as f:
+        f.write(adj.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(tmp, DATA), "wb") as f:
+        f.write(vecs.tobytes())
+        if cd is not None:
+            f.write(cd.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+    _write_meta(tmp, np.asarray(graph.active), np.asarray(graph.deleted),
+                ext_ids, cents)
+    hdr = _header_dict(capacity, R, vecs.shape[1], m, vecs.dtype.name,
+                       int(graph.start), int(graph.n_total), generation)
+    with open(os.path.join(tmp, HEADER), "w") as f:
+        json.dump(hdr, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    commit_dir(tmp, path)
+    return open_layout(path)
+
+
+def is_layout(path: str) -> bool:
+    return os.path.isfile(os.path.join(path, HEADER))
+
+
+def open_layout(path: str, mode: str = "r") -> StorageLayout:
+    """mmap an existing layout (``mode="r+"`` for in-place patching)."""
+    with open(os.path.join(path, HEADER)) as f:
+        hdr = json.load(f)
+    if hdr["version"] != LAYOUT_VERSION:
+        raise ValueError(f"layout version {hdr['version']} != "
+                         f"{LAYOUT_VERSION} at {path}")
+    cap, R, dim, m = hdr["capacity"], hdr["R"], hdr["dim"], hdr["m"]
+    vdt = np.dtype(hdr["vec_dtype"])
+    adjacency = np.memmap(os.path.join(path, TOPOLOGY), np.int32, mode,
+                          shape=(cap, R))
+    vectors = np.memmap(os.path.join(path, DATA), vdt, mode,
+                        shape=(cap, dim))
+    codes = None
+    if m:
+        codes = np.memmap(os.path.join(path, DATA), np.uint8, mode,
+                          offset=cap * dim * vdt.itemsize, shape=(cap, m))
+    with np.load(os.path.join(path, META)) as meta:
+        active = meta["active"].copy()
+        deleted = meta["deleted"].copy()
+        ext_ids = meta["ext_ids"].copy()
+        centroids = (meta["centroids"].copy()
+                     if "centroids" in meta.files else None)
+    return StorageLayout(
+        path=path, capacity=cap, R=R, dim=dim, m=m,
+        vec_dtype=hdr["vec_dtype"], start=hdr["start"],
+        n_total=hdr["n_total"], generation=hdr["generation"],
+        adjacency=adjacency, vectors=vectors, codes=codes,
+        active=active, deleted=deleted, ext_ids=ext_ids,
+        centroids=centroids)
+
+
+def patch_layout(path: str, graph, *, codes=None, ext_ids=None,
+                 adj_changed: Optional[np.ndarray] = None) -> PatchStats:
+    """DGAI-style delta topology patch: rewrite only the adjacency rows that
+    differ from what is on disk (plus vector/code rows of newly staged
+    slots), update the side tables, and bump the header generation LAST —
+    a reader that opens mid-patch at worst sees the old generation number
+    over fully written rows, never a torn row (row writes are aligned
+    whole-row pwrites).
+
+    ``adj_changed`` (bool [capacity]) lets the caller supply the changed-row
+    mask (e.g. ``merge.adjacency_delta_mask`` computed on device); without
+    it the mask is derived by comparing against the mapped file.  Vector
+    rows are compared unconditionally — the DGAI claim, which
+    ``tests/test_storage.py`` pins, is that topology-only updates write
+    zero vector bytes, and that must be *measured*, not assumed.
+    """
+    lay = open_layout(path, mode="r+")
+    try:
+        adj = np.asarray(graph.adjacency, np.int32)
+        vecs = np.asarray(graph.vectors)
+        if adj.shape != lay.adjacency.shape:
+            raise ValueError(
+                f"patch shape {adj.shape} != layout {lay.adjacency.shape}")
+        if adj_changed is None:
+            adj_changed = np.any(lay.adjacency != adj, axis=1)
+        else:
+            adj_changed = np.asarray(adj_changed, bool)
+        vec_changed = np.any(np.asarray(lay.vectors) != vecs, axis=1)
+        stats = PatchStats(generation=lay.generation + 1)
+        for i in np.nonzero(adj_changed)[0]:
+            lay.adjacency[i] = adj[i]
+        stats.adj_rows = int(adj_changed.sum())
+        stats.bytes_written += stats.adj_rows * lay.row_bytes
+        for i in np.nonzero(vec_changed)[0]:
+            lay.vectors[i] = vecs[i]
+        stats.vec_rows = int(vec_changed.sum())
+        stats.bytes_written += stats.vec_rows * vecs.shape[1] * vecs.itemsize
+        if codes is not None and lay.codes is not None:
+            cd = np.asarray(codes, np.uint8)
+            code_changed = np.any(np.asarray(lay.codes) != cd, axis=1)
+            for i in np.nonzero(code_changed)[0]:
+                lay.codes[i] = cd[i]
+            stats.code_rows = int(code_changed.sum())
+            stats.bytes_written += stats.code_rows * cd.shape[1]
+            lay.codes.flush()
+        lay.adjacency.flush()
+        lay.vectors.flush()
+        _write_meta(path, np.asarray(graph.active),
+                    np.asarray(graph.deleted),
+                    ext_ids if ext_ids is not None else lay.ext_ids,
+                    lay.centroids)
+        _write_header(path, _header_dict(
+            lay.capacity, lay.R, lay.dim, lay.m, lay.vec_dtype,
+            int(graph.start), int(graph.n_total), stats.generation))
+        return stats
+    finally:
+        lay.close()

@@ -1,0 +1,227 @@
+"""The async prefetch pipeline: double-buffered lookahead adjacency reads.
+
+GreedySearch has a strict round-to-round dependency — round ``t+1``'s
+frontier is only known after round ``t``'s distances land — so a prefetcher
+cannot *know* the next frontier.  What it can know, deterministically, is
+the engine's lookahead hint: after round ``t``'s ``frontier_select``, the
+next ``depth * W`` still-open candidates in the list are exactly the nodes
+the next frontier will be drawn from unless a fresh discovery beats them.
+The engine ships that hint with every row fetch (the frontier->prefetch
+handshake in ``core/search.py``), and this worker reads those rows from
+``topology.bin`` WHILE the device scores round ``t``'s neighbors — the IO
+for round ``t+1`` overlaps the compute for round ``t``:
+
+    device:  | score round t | select | score round t+1 | select |
+    worker:       | read hint rows t+1 |     | read hint rows t+2 |
+
+Staging is double-buffered and allocation-free in steady state: two host
+buffers are allocated once (grown only if a larger hint batch ever
+arrives, counted in ``allocations``) and generations alternate between
+them — the buffer-identity contract ``tests/test_storage.py`` asserts.
+On CPU/GPU these play the role of pinned host staging memory; on TPU the
+analogous structure is ``hbm_gather_rows`` below, where ``pallas_call``'s
+implicit pipeline double-buffers the row DMAs HBM->VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import queue
+import threading
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.distance import INVALID
+
+
+class Prefetcher:
+    """Background lookahead reader with two reusable staging buffers.
+
+    ``fetch_batch(ids [n] int, out [>=n, R] int32) -> was_file_read [n]``
+    is supplied by the ``DiskReader`` — one vectorized gather per staged
+    generation, routed through the shared block cache, so a hinted row
+    whose block is already cached is staged without touching the file (and
+    the consumer counts it as a cache hit, not a read).  Batch (not
+    per-row) staging matters: the whole generation must fit inside the
+    device's distance/select window or the next round's ``wait()`` eats
+    the overlap.
+
+    Protocol (driven by ``DiskReader.fetch`` once per IO round):
+      1. ``wait()``     — block until the in-flight generation is staged
+                          (no-op when idle);
+      2. ``lookup(id)`` — serve staged rows for the current round;
+      3. ``submit(ids)``— start staging the next round's hint batch on the
+                          worker thread and return immediately.
+    Generations strictly alternate buffers, and a generation is consumed
+    (step 2) only after its fill completed (step 1) and before the next
+    submit (step 3) — so fills never race consumption and the pair of
+    buffers is sufficient.
+    """
+
+    def __init__(self, fetch_batch: Callable, R: int):
+        self.R = int(R)
+        self._fetch_batch = fetch_batch
+        self._buffers = [np.empty((0, self.R), np.int32),
+                         np.empty((0, self.R), np.int32)]
+        self.allocations = 0            # staging (re)allocations — grows
+        #   only during warmup, then goes quiet (buffer-reuse contract)
+        self._gen = 0
+        self._map: dict[int, tuple[int, bool]] = {}   # id -> (slot, read?)
+        self._cur: Optional[np.ndarray] = None
+        self._done = threading.Event()
+        self._done.set()
+        self._queue: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def staging_buffers(self) -> tuple[np.ndarray, np.ndarray]:
+        """The two staging buffers (identity-stable across rounds)."""
+        return tuple(self._buffers)
+
+    def submit(self, ids: np.ndarray) -> None:
+        """Stage ``ids`` (unique, valid) on the worker; returns at once."""
+        self._done.wait()               # never overwrite an in-flight fill
+        prev = (self._map, self._cur)   # carry-over source (see _worker)
+        self._gen += 1
+        bi = self._gen & 1
+        n = len(ids)
+        if self._buffers[bi].shape[0] < n:
+            # Geometric growth, and growth only — after warmup every round
+            # reuses the same two arrays (the no-allocator-churn contract:
+            # ``allocations`` goes quiet and the buffer identities pinned
+            # by ``staging_buffers()`` stop changing).
+            cap = max(n, 64, 2 * self._buffers[bi].shape[0])
+            self._buffers[bi] = np.empty((cap, self.R), np.int32)
+            self.allocations += 1
+        self._map = {}
+        self._cur = self._buffers[bi]
+        self._done.clear()
+        self._queue.put((bi, np.asarray(ids, np.int64), prev))
+
+    def wait(self) -> None:
+        self._done.wait()
+
+    def lookup(self, node_id: int):
+        """(row, was_file_read) if staged in the current generation, else
+        None.  Call only after ``wait()``."""
+        e = self._map.get(node_id)
+        if e is None:
+            return None
+        return self._cur[e[0]], e[1]
+
+    def close(self) -> None:
+        self._queue.put(None)
+        self._thread.join(timeout=5)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            bi, ids, (prev_map, prev_buf) = item
+            buf = self._buffers[bi]
+            # The identity assertion behind the buffer-reuse contract: the
+            # fill target IS one of the two construction-time (or grown-
+            # once) staging arrays, never a per-round allocation.
+            assert buf is self._buffers[bi]
+            m = {}
+            if len(ids):
+                # Carry-over: a hint that missed last round stays open and
+                # is usually re-hinted — its row is still sitting in the
+                # OTHER staging buffer (generations alternate, and the next
+                # submit can't start until this fill signals done), so copy
+                # it across instead of re-reading the file.  Its
+                # ``was_file_read`` flag rides along, so consumption-time
+                # accounting is unchanged: the read already happened, it is
+                # just not re-issued.
+                carried, new_ids = [], []
+                for nid in ids:
+                    e = prev_map.get(int(nid))
+                    if e is None:
+                        new_ids.append(nid)
+                    else:
+                        carried.append((int(nid), e))
+                nn = len(new_ids)
+                if nn:
+                    # One vectorized gather for the genuinely new rows,
+                    # contiguous at the buffer front; the simulated device
+                    # latency is charged on THIS thread
+                    # (DiskReader._serve_batch) — overlapped with demand IO
+                    # and the device's compute, not the query's critical
+                    # path.
+                    na = np.asarray(new_ids, np.int64)
+                    was = self._fetch_batch(na, buf)
+                    m = {int(nid): (j, bool(was[j]))
+                         for j, nid in enumerate(na)}
+                for j, (nid, e) in enumerate(carried):
+                    buf[nn + j] = prev_buf[e[0]]
+                    m[nid] = (nn + j, e[1])
+            self._map = m
+            self._done.set()
+
+
+# ---------------------------------------------------------------------------
+# TPU path: scalar-prefetch row gather.  pallas_call's implicit pipeline
+# double-buffers the per-row DMAs (emit_pipeline-style), so while row i is
+# being consumed in VMEM row i+1 is already streaming out of HBM — the
+# device-side analogue of the host thread above.
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(ids_ref, block_ref, out_ref):
+    del ids_ref                         # consumed by the index_map only
+    out_ref[...] = block_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbm_gather_rows(table: jax.Array, ids: jax.Array,
+                    *, interpret: Optional[bool] = None) -> jax.Array:
+    """Gather ``table[ids]`` ([N, R] int32, ids [W]) via a Pallas
+    scalar-prefetch pipeline: ids ride as the scalar-prefetch operand, the
+    BlockSpec index_map turns each grid step into one row DMA, and the
+    pipeline keeps the next row's DMA in flight while the current one
+    writes out — an HBM double buffer with no host involvement.
+
+    Semantics match the dense gather exactly: ``ids < 0`` -> INVALID rows
+    (same as ``DenseSource.rows``).  CPU validation runs interpret mode;
+    the parity test is in ``tests/test_storage.py``.
+    """
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    from ..kernels.ops import _interpret
+    if interpret is None:
+        interpret = _interpret()
+    W = ids.shape[0]
+    R = table.shape[1]
+    safe = jnp.maximum(ids, 0).astype(jnp.int32)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(W,),
+            in_specs=[pl.BlockSpec((1, R), lambda i, ids_ref: (ids_ref[i], 0))],
+            out_specs=pl.BlockSpec((1, R), lambda i, ids_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((W, R), table.dtype),
+        interpret=interpret,
+    )(safe, table)
+    return jnp.where((ids >= 0)[:, None], out, INVALID)
+
+
+class HBMSource:
+    """``GraphSource`` whose row gathers stream through the Pallas
+    scalar-prefetch pipeline — the TPU face of the storage tier, where
+    "disk" is HBM and the double buffer is the pallas_call pipeline.
+    Bit-identical to ``DenseSource`` (the parity test pins it)."""
+
+    def __init__(self, adjacency: jax.Array, navigable: jax.Array):
+        self.adjacency = adjacency
+        self.navigable = navigable
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        return hbm_gather_rows(self.adjacency, ids)
+
+    def node_ok(self, ids: jax.Array) -> jax.Array:
+        return (ids >= 0) & self.navigable[jnp.maximum(ids, 0)]

@@ -1,0 +1,407 @@
+"""``DiskSource`` — the on-disk sibling of ``core.search.DenseSource``.
+
+The beam engine's topology reads go through the ``GraphSource`` protocol;
+this module implements it over a decoupled layout (``storage.layout``):
+every IO round's [B, W] frontier crosses into host land ONCE via
+``jax.pure_callback`` (vmap_method="expand_dims", so the whole query
+batch's round arrives as one callback — one batched IO, exactly the
+paper's W-concurrent-sector-reads round), is served from the block cache /
+prefetch staging / ``topology.bin``, and returns the rows plus a per-row
+``fetched`` mask the engine folds into ``SearchResult.n_reads``.
+
+Read accounting (the ``n_reads`` contract, ``core/search.py`` module doc):
+
+  fetched=True   the row came off the file on this query's behalf — a
+                 synchronous demand read, or a prefetch-staged row whose
+                 block the worker actually read (the read happened, it was
+                 just overlapped with compute).
+  fetched=False  the row cost no file IO for this request: its block was
+                 LRU-cached (read earlier for a *different* request), or
+                 the prefetcher found it cached while staging.  Counted in
+                 ``IOStats.cache_hits`` -> ``SystemStats.io_cache_hits``.
+
+So with the cache off, ``n_reads`` is bit-identical to the dense engine's
+at ANY prefetch depth (prefetch moves reads off the critical path, it does
+not erase them), and with the cache on the conservation law
+``n_reads + cache_hits == dense n_reads`` holds — both are pinned by
+``tests/test_storage.py``.
+
+Node validity (``node_ok``) and the slot->ext table never touch the disk:
+they resolve from the layout's small in-memory header tables, mirroring
+the paper's in-memory bitmaps over the SSD-resident graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import pq as pqm
+from ..core.config import IndexConfig
+from ..core.distance import INVALID, l2_sq
+from ..core.search import (PQBackend, batch_distances, beam_search,
+                           rerank_candidates, topk_results)
+from .cache import AdjacencyCache
+from .layout import StorageLayout
+from .prefetch import Prefetcher
+
+# Simulated device concurrency: block reads issued together ride the queue
+# QUEUE_DEPTH at a time, so a batch of B blocks costs ceil(B / QUEUE_DEPTH)
+# round trips of ``latency_us`` — the §6.2 model where a round's W sector
+# reads are concurrent, extended to finite queue capacity.
+QUEUE_DEPTH = 8
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Host-side IO accounting for one ``DiskReader`` (monotonic; the
+    system layer folds deltas into ``SystemStats``)."""
+    rows_requested: int = 0     # valid adjacency rows the engine asked for
+    demand_reads: int = 0       # rows served by a synchronous file read
+    prefetch_hits: int = 0      # rows served from prefetch staging whose
+    #   block the worker read from the file (overlapped IO — still a read)
+    cache_hits: int = 0         # rows served with NO file IO for this
+    #   request (block cache, or staged-from-cache)
+    blocks_read: int = 0        # topology.bin block reads, all causes
+    prefetch_blocks: int = 0    # ... of which issued by the worker thread
+    bytes_read: int = 0         # topology.bin bytes off the file
+    vector_rows: int = 0        # full-precision rows gathered for rerank
+    vector_bytes: int = 0
+    fetch_calls: int = 0        # host callbacks (== IO rounds, batched)
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def read_amplification(self, row_bytes: int) -> float:
+        """Bytes actually read / bytes of adjacency rows delivered — >1
+        because a block read returns whole sectors for row-sized asks."""
+        used = self.demand_reads + self.prefetch_hits
+        if used == 0:
+            return 0.0
+        return self.bytes_read / float(used * row_bytes)
+
+
+class DiskReader:
+    """Host-side row server over an open layout: block cache + prefetch
+    staging + mmap'd ``topology.bin``, with deterministic accounting.
+
+    ``latency_us`` simulates device latency at QUEUE-SUBMISSION
+    granularity: a batch of B distinct blocks issued together costs
+    ceil(B / QUEUE_DEPTH) round trips — the §6.2 model, where a round's W
+    sector reads ride the SSD queue concurrently, extended to finite
+    queue capacity.  Demand batches sleep synchronously inside the
+    callback (on the query's critical path); prefetch batches sleep on
+    the worker thread, overlapped with the device's distance/select work
+    — which is exactly the wall-time difference
+    ``benchmarks/bench_io_cost.py`` measures.  On this container the data
+    fits in page cache, so without the knob an mmap read costs ~0 and the
+    overlap would be unmeasurable.  0 (the default, used by every parity
+    test) adds nothing.
+    """
+
+    def __init__(self, layout: StorageLayout, *, cache_mb: int = 0,
+                 prefetch: bool = False, latency_us: float = 0.0):
+        self.layout = layout
+        self.row_bytes = layout.row_bytes
+        self.block_rows = layout.block_rows
+        self.block_bytes = self.block_rows * self.row_bytes
+        self.latency_s = latency_us * 1e-6
+        self.cache = AdjacencyCache(cache_mb * (1 << 20), self.block_bytes)
+        self.stats = IOStats()
+        self._io_lock = threading.Lock()
+        self.prefetcher = (Prefetcher(self._serve_prefetch, layout.R)
+                           if prefetch else None)
+
+    # ---------------------------------------------------------------- blocks
+    def _read_block(self, block_id: int, *, prefetch: bool) -> np.ndarray:
+        """One block off topology.bin (a sector read; the simulated device
+        latency is charged per ROUND by the caller, not per block — the
+        round's blocks ride the queue concurrently)."""
+        lo = block_id * self.block_rows
+        hi = min(lo + self.block_rows, self.layout.capacity)
+        blk = np.asarray(self.layout.adjacency[lo:hi])
+        self.stats.blocks_read += 1
+        self.stats.bytes_read += self.block_bytes
+        if prefetch:
+            self.stats.prefetch_blocks += 1
+        return blk
+
+    def _serve_batch(self, ids: np.ndarray, *, prefetch: bool,
+                     out: Optional[np.ndarray] = None):
+        """(rows [n, R], was_file_read [n]) for ``ids`` (valid, int), one
+        lock hold for the whole batch — the round's blocks are one queue
+        submission, and the vectorized gather keeps the worker thread fast
+        enough to hide inside the device's compute window.
+
+        The simulated latency is charged HERE, after the lock drops, on
+        whichever thread ran the batch: ceil(blocks / QUEUE_DEPTH) round
+        trips.  Demand batches run on the callback thread (the query's
+        critical path); prefetch batches run on the worker thread, where
+        the sleep overlaps the device's compute — the wall-time difference
+        the IO benchmark measures.
+        """
+        n = ids.shape[0]
+        rows = out if out is not None else np.empty(
+            (n, self.layout.R), np.int32)
+        dst = rows[:n]          # view — ``out`` may be an oversized buffer
+        was = np.zeros(n, bool)
+        bs = ids // self.block_rows
+        nb = 0
+        with self._io_lock:
+            if not self.cache.enabled:
+                dst[:] = self.layout.adjacency[ids]
+                nb = len(np.unique(bs))
+                self.stats.blocks_read += nb
+                self.stats.bytes_read += nb * self.block_bytes
+                if prefetch:
+                    self.stats.prefetch_blocks += nb
+                was[:] = True
+            else:
+                for b in np.unique(bs):
+                    sel = bs == b
+                    blk = self.cache.get(int(b))
+                    if blk is None:
+                        blk = self._read_block(int(b), prefetch=prefetch)
+                        self.cache.put(int(b), blk)
+                        was[sel] = True
+                        nb += 1
+                    dst[sel] = blk[ids[sel] - int(b) * self.block_rows]
+        if nb and self.latency_s:
+            time.sleep(self.latency_s * -(-nb // QUEUE_DEPTH))
+        return rows, was
+
+    def _serve_prefetch(self, ids: np.ndarray, out: np.ndarray) -> np.ndarray:
+        """The prefetch worker's staging gather: rows land directly in the
+        reusable staging buffer; returns the per-row file-read mask."""
+        return self._serve_batch(ids, prefetch=True, out=out)[1]
+
+    # ----------------------------------------------------------------- rows
+    def fetch(self, ids, hints):
+        """The per-round callback target: ids [..., W] int32 frontier,
+        hints [..., H] int32 lookahead -> (rows [..., W, R] int32,
+        fetched [..., W] bool).
+
+        Order per round: (1) wait out the in-flight prefetch generation;
+        (2) classify the frontier against the staged rows (copying staged
+        data out); (3) submit the next hint batch — BEFORE the demand
+        read, so the worker's IO for round t+1 rides the queue
+        concurrently with this round's demand IO and then keeps
+        overlapping the device's distance/select work; (4) serve the
+        demand remainder synchronously.  With the cache on, (3)||(4)
+        means the read-vs-hit *split* can depend on which thread touches
+        a shared block first, but every row is classified exactly once —
+        the conservation law holds regardless of interleaving, and with
+        the cache off every row is a read, so ``n_reads`` parity is
+        schedule-independent.
+        """
+        ids = np.asarray(ids)
+        hints = np.asarray(hints)
+        R = self.layout.R
+        fids = ids.reshape(-1)
+        rows = np.full((fids.shape[0], R), INVALID, np.int32)
+        fetched = np.zeros(fids.shape[0], bool)
+        pf = self.prefetcher
+        if pf is not None:
+            pf.wait()
+        self.stats.fetch_calls += 1
+        valid = np.nonzero(fids >= 0)[0]
+        self.stats.rows_requested += len(valid)
+        if pf is not None:
+            demand = []
+            for i in valid:
+                staged = pf.lookup(int(fids[i]))
+                if staged is None:
+                    demand.append(i)
+                    continue
+                row, was_read = staged
+                if was_read:
+                    self.stats.prefetch_hits += 1
+                else:
+                    self.stats.cache_hits += 1
+                rows[i] = row
+                fetched[i] = was_read
+            demand = np.asarray(demand, np.int64)
+        else:
+            demand = valid
+        if pf is not None and hints.size:
+            h = np.unique(hints.reshape(-1))
+            pf.submit(h[h >= 0])
+        if demand.size:
+            r, was = self._serve_batch(fids[demand].astype(np.int64),
+                                       prefetch=False)
+            rows[demand] = r
+            fetched[demand] = was
+            self.stats.demand_reads += int(was.sum())
+            self.stats.cache_hits += int((~was).sum())
+        return (rows.reshape(ids.shape + (R,)),
+                fetched.reshape(ids.shape))
+
+    def fetch_vectors(self, ids):
+        """Rerank-path gather from the vector region of ``data.bin``:
+        ids [..., K] -> rows [..., K, dim] float32 (zeros for ids < 0 —
+        masked to +inf by the backend, exactly the dense path's handling)."""
+        ids = np.asarray(ids)
+        dim = self.layout.dim
+        flat = ids.reshape(-1)
+        out = np.zeros((flat.shape[0], dim), np.float32)
+        ok = flat >= 0
+        if ok.any():
+            out[ok] = np.asarray(
+                self.layout.vectors[flat[ok]], np.float32)
+            self.stats.vector_rows += int(ok.sum())
+            self.stats.vector_bytes += int(ok.sum()) * dim * 4
+        return out.reshape(ids.shape + (dim,))
+
+    def close(self) -> None:
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+
+
+class DiskSource:
+    """``GraphSource`` over a ``DiskReader`` (see module doc).
+
+    ``hint_width`` > 0 switches the engine into the frontier->prefetch
+    handshake: it threads a ``depth * W``-wide lookahead hint through the
+    beam loop and calls ``rows_hinted`` instead of ``rows``.  The presence
+    of ``rows_hinted`` (not the width) is what routes the engine onto the
+    counted-reads path, so depth 0 still gets exact disk accounting.
+    """
+
+    def __init__(self, reader: DiskReader, navigable: jax.Array,
+                 hint_width: int = 0):
+        self.reader = reader
+        self.navigable = navigable
+        self.hint_width = int(hint_width)
+        self.R = reader.layout.R
+
+    def rows_hinted(self, ids: jax.Array, hints: jax.Array):
+        """ids [W], hints [H] -> (rows [W, R] int32, fetched [W] bool).
+        Under vmap the callback sees the whole [B, W] round at once."""
+        rows, fetched = jax.pure_callback(
+            self.reader.fetch,
+            (jax.ShapeDtypeStruct(ids.shape + (self.R,), jnp.int32),
+             jax.ShapeDtypeStruct(ids.shape, jnp.bool_)),
+            ids, hints, vmap_method="expand_dims")
+        return rows, fetched
+
+    def rows(self, ids: jax.Array) -> jax.Array:
+        return self.rows_hinted(
+            ids, jnp.full((0,), INVALID, jnp.int32))[0]
+
+    def node_ok(self, ids: jax.Array) -> jax.Array:
+        # Validity resolves from the in-memory header table — never an IO.
+        return (ids >= 0) & self.navigable[jnp.maximum(ids, 0)]
+
+
+class DiskVectorBackend:
+    """``FullPrecisionBackend`` over the on-disk vector file (the exact
+    rerank's "full-precision vectors fetched from the capacity tier").
+    Bit-identical distances to the dense backend: same f32 bytes off
+    ``data.bin``, same ``l2_sq`` contraction, same +inf masking."""
+
+    def __init__(self, reader: DiskReader):
+        self.reader = reader
+        self.dim = reader.layout.dim
+
+    def prepare(self, query: jax.Array) -> jax.Array:
+        return query.astype(jnp.float32)
+
+    def distances(self, ctx: jax.Array, ids: jax.Array, *,
+                  use_kernel: bool = False) -> jax.Array:
+        pts = jax.pure_callback(
+            self.reader.fetch_vectors,
+            jax.ShapeDtypeStruct(ids.shape + (self.dim,), jnp.float32),
+            ids, vmap_method="expand_dims")
+        d = l2_sq(ctx[None, :], pts)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+
+class DiskLTISearcher:
+    """PQ-navigated beam search whose topology reads come off the layout —
+    the disk-backed twin of ``core.lti.search_lti``.
+
+    Navigation distances stay on in-memory PQ codes (the paper's
+    ~32B/point fast-memory budget), adjacency rows stream from
+    ``topology.bin`` through the cache + prefetch pipeline, and the exact
+    rerank gathers full-precision rows from ``data.bin``.  With the cache
+    off, results are bit-identical to ``search_lti`` on the same state —
+    ids, dists, hops, cmps AND n_reads (the parity matrix in
+    ``tests/test_storage.py``).
+
+    The jitted driver closes over this instance's reader, so programs are
+    cached per (searcher, k, L, W, rerank) — open one searcher per layout
+    generation and reuse it across query batches.
+    """
+
+    def __init__(self, layout: StorageLayout, cfg: IndexConfig, *,
+                 cache_mb: int = 0, prefetch_depth: int = 0,
+                 latency_us: float = 0.0):
+        if layout.codes is None or layout.centroids is None:
+            raise ValueError("DiskLTISearcher needs a layout with PQ codes")
+        self.layout = layout
+        self.cfg = cfg
+        self.prefetch_depth = int(prefetch_depth)
+        self.reader = DiskReader(layout, cache_mb=cache_mb,
+                                 prefetch=prefetch_depth > 0,
+                                 latency_us=latency_us)
+        # The in-memory header tables + navigation codes, on device.
+        self.active = jnp.asarray(layout.active)
+        self.reportable = jnp.asarray(layout.active & ~layout.deleted)
+        self.codes = jnp.asarray(np.asarray(layout.codes))
+        self.codebook = pqm.PQCodebook(jnp.asarray(layout.centroids))
+        self.start = jnp.int32(layout.start)
+        self._programs: dict = {}
+
+    @property
+    def stats(self) -> IOStats:
+        return self.reader.stats
+
+    def _program(self, k: int, L: int, W: int, rerank: bool):
+        key = (k, L, W, rerank)
+        fn = self._programs.get(key)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        use_kernel = cfg.kernel_enabled()
+        source = DiskSource(self.reader, self.active,
+                            hint_width=self.prefetch_depth * W)
+        backend = PQBackend(self.codes, self.codebook)
+        vec_backend = DiskVectorBackend(self.reader)
+        reportable = self.reportable
+        start = self.start
+        R = self.layout.R
+
+        @jax.jit
+        def run(queries):
+            res = beam_search(None, None, start, queries, backend,
+                              L=L, max_visits=cfg.visits_bound(L),
+                              beam_width=W, use_kernel=use_kernel,
+                              source=source, R=R)
+            if rerank:
+                exact = batch_distances(
+                    vec_backend, queries,
+                    rerank_candidates(res.ids, reportable),
+                    use_kernel=use_kernel)
+                res = res._replace(dists=exact)
+            ids, d = topk_results(res, k, reportable)
+            return ids, d, res.n_hops, res.n_cmps, res.n_reads
+
+        self._programs[key] = run
+        return run
+
+    def search(self, queries, *, k: int, L: int,
+               beam_width: Optional[int] = None, rerank: bool = True):
+        """(ids [B,k], dists [B,k], hops [B], cmps [B], reads [B]) — the
+        ``search_lti`` tuple plus the per-query disk read counts."""
+        W = min(beam_width or self.cfg.beam_width, L)
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        return self._program(k, L, W, rerank)(q)
+
+    def close(self) -> None:
+        self.reader.close()

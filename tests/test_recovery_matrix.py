@@ -27,7 +27,7 @@ from conftest import DIM
 N0 = 300
 
 
-def _cfg(tmp, wal="wal", snaps=None, merge_threshold=100_000):
+def _cfg(tmp, wal="wal", snaps=None, merge_threshold=100_000, **kw):
     return SystemConfig(
         index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
                           L_search=64, alpha=1.2),
@@ -35,7 +35,7 @@ def _cfg(tmp, wal="wal", snaps=None, merge_threshold=100_000):
         ro_snapshot_points=64, merge_threshold=merge_threshold,
         temp_capacity=512, insert_batch=32,
         wal_dir=str(tmp / wal) if wal else None,
-        snapshot_dir=str(tmp / snaps) if snaps else None)
+        snapshot_dir=str(tmp / snaps) if snaps else None, **kw)
 
 
 def _apply(sys_, ops):
@@ -172,3 +172,44 @@ def test_no_truncate_without_snapshot_dir(tmp_path, points):
                                  merge_threshold=100_000))
     _apply(twin, _traffic(points, N0, 160, 5000))
     assert crashed.size == twin.size == N0 + 160
+
+
+def test_recover_from_decoupled_layout_snapshot(tmp_path, points, queries):
+    """With ``storage_dir`` set, the merge snapshot saves the LTI as the
+    decoupled on-disk layout (``layout/`` directory) instead of a monolithic
+    ``lti.npz`` — and ``recover()`` auto-detects the format, replays the
+    suffix, and serves bit-identically to a never-crashed twin, on both the
+    in-memory and the disk read path."""
+    from repro.storage.layout import is_layout
+
+    cfg = _cfg(tmp_path, snaps="snaps", merge_threshold=128,
+               storage_dir=str(tmp_path / "store"), adjacency_cache_mb=0)
+    live = bootstrap_system(points[:N0], np.arange(N0), cfg)
+    twin = bootstrap_system(points[:N0], np.arange(N0),
+                            _cfg(tmp_path, wal=None, merge_threshold=128))
+    pre = _traffic(points, N0, 160, 5000)   # crosses the merge threshold
+    _apply(live, pre)
+    _apply(twin, pre)
+    assert live.stats.merges >= 1
+    snap = live.latest_snapshot()
+    assert snap and os.path.isdir(snap)
+    # The decoupled format, not the npz blob.
+    assert is_layout(os.path.join(snap, "layout"))
+    assert not os.path.exists(os.path.join(snap, "lti.npz"))
+    post = _traffic(points, N0 + 160, 25, 7000) + [("d", 7001)]
+    _apply(live, post)
+    _apply(twin, post)
+    live.close_storage()
+    live.wal.close()
+
+    crashed = FreshDiskANN(cfg)
+    n = crashed.recover()                  # auto-discovers the merge snapshot
+    assert n == (160 - 128) + len(post)
+    _assert_twinned(crashed, twin, queries)
+    # The recovered system re-synced its live layout under storage_dir:
+    # the disk read path agrees bit-for-bit with the in-memory engine.
+    ids_m, d_m = crashed.search_batch(queries[:8], k=5)
+    ids_d, d_d = crashed.search_disk(queries[:8], k=5)
+    np.testing.assert_array_equal(ids_m, ids_d)
+    np.testing.assert_array_equal(d_m, d_d)
+    crashed.close_storage()

@@ -1,0 +1,309 @@
+"""Storage-tier contracts (docs/STORAGE.md): layout round trips, disk/dense
+bit-parity across prefetch depths, the read/cache-hit conservation law,
+DGAI delta patches, staging-buffer reuse, and the Pallas HBM gather leg.
+
+The invariants here are the tier-1 half of what ``scripts/disk_probe.py``
+asserts end to end in CI (``scripts/smoke.sh --disk``).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import PQConfig, SystemConfig
+from repro.core.lti import build_lti, lti_from_layout, search_lti, \
+    write_lti_layout
+from repro.core.search import DenseSource, FullPrecisionBackend, PQBackend, \
+    beam_search
+from repro.core.system import bootstrap_system
+from repro.storage import DiskLTISearcher, hbm_gather_rows, HBMSource, \
+    open_layout, patch_layout
+
+from conftest import DIM
+
+
+@pytest.fixture(scope="module")
+def pq_cfg():
+    return PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4)
+
+
+@pytest.fixture(scope="module")
+def lti(points, index_cfg, pq_cfg):
+    """A built LTI with a few deletions — the disk tier must mask them
+    from results exactly like the in-memory engine."""
+    state = build_lti(points[:700], index_cfg, pq_cfg)
+    deleted = np.asarray(state.graph.deleted).copy()
+    deleted[[3, 50, 311]] = True
+    return state._replace(
+        graph=state.graph._replace(deleted=jnp.asarray(deleted)))
+
+
+@pytest.fixture(scope="module")
+def layout(lti, tmp_path_factory):
+    lay = write_lti_layout(
+        str(tmp_path_factory.mktemp("storage") / "layout"), lti)
+    yield lay
+    lay.close()
+
+
+@pytest.fixture(scope="module")
+def dense_oracle(lti, index_cfg, queries):
+    """(per-W) dense results incl. n_reads — the parity reference."""
+    out = {}
+    for W in (1, 2):
+        ids, d, hops, cmps = search_lti(
+            lti, jnp.asarray(queries), index_cfg, k=5, L=48, beam_width=W)
+        res = beam_search(
+            lti.graph.adjacency, lti.graph.active, lti.graph.start,
+            jnp.asarray(queries), PQBackend(lti.codes, lti.codebook),
+            L=48, max_visits=index_cfg.visits_bound(48), beam_width=W,
+            use_kernel=index_cfg.kernel_enabled())
+        out[W] = (np.asarray(ids), np.asarray(d), np.asarray(hops),
+                  np.asarray(cmps), np.asarray(res.n_reads))
+    return out
+
+
+# ----------------------------------------------------------- layout on disk
+def test_layout_roundtrip_bit_exact(lti, layout):
+    """Every array written to the layout reads back bit-identical."""
+    np.testing.assert_array_equal(np.asarray(layout.adjacency),
+                                  np.asarray(lti.graph.adjacency))
+    np.testing.assert_array_equal(np.asarray(layout.vectors),
+                                  np.asarray(lti.graph.vectors))
+    np.testing.assert_array_equal(np.asarray(layout.codes),
+                                  np.asarray(lti.codes))
+    np.testing.assert_array_equal(layout.centroids,
+                                  np.asarray(lti.codebook.centroids))
+    np.testing.assert_array_equal(layout.active,
+                                  np.asarray(lti.graph.active))
+    np.testing.assert_array_equal(layout.deleted,
+                                  np.asarray(lti.graph.deleted))
+    assert layout.start == int(lti.graph.start)
+    assert layout.n_total == int(lti.graph.n_total)
+    twin = lti_from_layout(layout.path)
+    np.testing.assert_array_equal(np.asarray(twin.graph.adjacency),
+                                  np.asarray(lti.graph.adjacency))
+
+
+def test_topology_fixed_stride(layout):
+    """Row i of topology.bin is exactly bytes [i*R*4, (i+1)*R*4)."""
+    raw = np.fromfile(os.path.join(layout.path, "topology.bin"), np.int32)
+    i = int(layout.start)
+    row = raw[i * layout.R:(i + 1) * layout.R]
+    np.testing.assert_array_equal(row, np.asarray(layout.adjacency[i]))
+
+
+# ------------------------------------------------- disk == dense bit-parity
+@pytest.mark.parametrize("W", (1, 2))
+@pytest.mark.parametrize("depth", (0, 1, 2))
+def test_disk_dense_parity(layout, index_cfg, queries, dense_oracle,
+                           W, depth):
+    """Cache off: ids, dists, hops, cmps AND n_reads are bit-identical to
+    the in-memory engine at every prefetch depth — prefetch moves IO off
+    the critical path, it never changes results or read counts."""
+    ids_d, d_d, hops_d, cmps_d, reads_d = dense_oracle[W]
+    s = DiskLTISearcher(layout, index_cfg, cache_mb=0, prefetch_depth=depth)
+    try:
+        ids, d, hops, cmps, reads = s.search(queries, k=5, L=48,
+                                             beam_width=W)
+        np.testing.assert_array_equal(np.asarray(ids), ids_d)
+        np.testing.assert_array_equal(np.asarray(d), d_d)
+        np.testing.assert_array_equal(np.asarray(hops), hops_d)
+        np.testing.assert_array_equal(np.asarray(cmps), cmps_d)
+        np.testing.assert_array_equal(np.asarray(reads), reads_d)
+        st = s.stats
+        assert st.cache_hits == 0                 # cache off -> no hits
+        assert st.demand_reads + st.prefetch_hits == st.rows_requested
+        if depth:
+            assert st.prefetch_hits > 0           # the pipeline engaged
+    finally:
+        s.close()
+
+
+@pytest.mark.parametrize("depth", (0, 1))
+def test_cache_conservation_law(layout, index_cfg, queries, dense_oracle,
+                                depth):
+    """Cache on: every requested row is a file read XOR a cache hit, and
+    reads + hits equals the in-memory engine's n_reads exactly."""
+    ids_d, d_d, _, _, reads_d = dense_oracle[2]
+    s = DiskLTISearcher(layout, index_cfg, cache_mb=4, prefetch_depth=depth)
+    try:
+        ids, d, _, _, reads = s.search(queries, k=5, L=48, beam_width=2)
+        np.testing.assert_array_equal(np.asarray(ids), ids_d)
+        np.testing.assert_array_equal(np.asarray(d), d_d)
+        st = s.stats
+        assert st.cache_hits > 0                  # 4MB over a tiny layout
+        assert (st.demand_reads + st.prefetch_hits + st.cache_hits
+                == st.rows_requested == int(reads_d.sum()))
+        assert (int(np.asarray(reads).sum()) + st.cache_hits
+                == int(reads_d.sum()))
+    finally:
+        s.close()
+
+
+def test_n_reads_dense_regression(lti, index_cfg, queries):
+    """The n_reads contract on the dense path (core/search.py module doc):
+    every expanded row is a fetch, so reads == the visit count — and at
+    W=1 exactly one row per IO round, so reads == hops."""
+    res = beam_search(
+        lti.graph.adjacency, lti.graph.active, lti.graph.start,
+        jnp.asarray(queries), FullPrecisionBackend(lti.graph.vectors),
+        L=48, max_visits=index_cfg.visits_bound(48), beam_width=1,
+        use_kernel=False)
+    counts = (np.asarray(res.visited) >= 0).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(res.n_reads), counts)
+    np.testing.assert_array_equal(np.asarray(res.n_reads),
+                                  np.asarray(res.n_hops))
+
+
+# -------------------------------------------------------- prefetch pipeline
+def test_staging_buffer_reuse(layout, index_cfg, queries):
+    """The allocation-free steady state: after a warmup search the two
+    staging buffers keep their identity and ``allocations`` goes quiet
+    (the worker itself asserts every fill lands in an owned buffer)."""
+    s = DiskLTISearcher(layout, index_cfg, cache_mb=0, prefetch_depth=2)
+    try:
+        jax.block_until_ready(s.search(queries, k=5, L=48, beam_width=2))
+        pf = s.reader.prefetcher
+        a0 = pf.allocations
+        ident = [id(b) for b in pf.staging_buffers()]
+        for _ in range(3):
+            jax.block_until_ready(s.search(queries, k=5, L=48,
+                                           beam_width=2))
+        assert pf.allocations == a0
+        assert [id(b) for b in pf.staging_buffers()] == ident
+        assert pf._thread.is_alive()      # an assert in the worker kills it
+    finally:
+        s.close()
+
+
+# ----------------------------------------------------------- delta patches
+def test_patch_topology_only_writes_no_vector_bytes(lti, tmp_path):
+    """The DGAI claim, measured: a topology-only update rewrites exactly
+    the changed adjacency rows and ZERO vector/code bytes."""
+    lay = write_lti_layout(str(tmp_path / "lay"), lti)
+    lay.close()
+    adj = np.asarray(lti.graph.adjacency).copy()
+    adj[7] = adj[7][::-1].copy()                  # permute one row
+    adj[123, 0] = -1
+    patched = lti._replace(
+        graph=lti.graph._replace(adjacency=jnp.asarray(adj)))
+    ps = patch_layout(str(tmp_path / "lay"), patched.graph,
+                      codes=patched.codes)
+    assert ps.adj_rows == 2
+    assert ps.vec_rows == 0 and ps.code_rows == 0
+    assert ps.bytes_written == 2 * lay.row_bytes
+    re = open_layout(str(tmp_path / "lay"))
+    np.testing.assert_array_equal(np.asarray(re.adjacency), adj)
+    assert re.generation == 1                     # bumped LAST
+    re.close()
+
+
+def test_patch_noop_writes_nothing(lti, tmp_path):
+    lay = write_lti_layout(str(tmp_path / "lay"), lti)
+    lay.close()
+    ps = patch_layout(str(tmp_path / "lay"), lti.graph, codes=lti.codes)
+    assert ps.adj_rows == 0 and ps.vec_rows == 0 and ps.code_rows == 0
+    assert ps.bytes_written == 0
+
+
+# ------------------------------------------------------------- TPU HBM leg
+def test_hbm_gather_rows_matches_dense(lti):
+    """The Pallas scalar-prefetch gather is bit-identical to the dense
+    indexed gather, including INVALID lanes (interpret mode on CPU)."""
+    table = lti.graph.adjacency
+    ids = jnp.asarray([0, 5, 17, -1, 2], jnp.int32)
+    got = hbm_gather_rows(table, ids, interpret=True)
+    want = DenseSource(table, lti.graph.active).rows(ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hbm_source_beam_parity(lti, index_cfg, queries):
+    """A full beam search through HBMSource == DenseSource, bit for bit."""
+    g = lti.graph
+    kw = dict(L=48, max_visits=index_cfg.visits_bound(48), beam_width=2,
+              use_kernel=False)
+    ref = beam_search(g.adjacency, g.active, g.start,
+                      jnp.asarray(queries[:8]),
+                      PQBackend(lti.codes, lti.codebook), **kw)
+    got = beam_search(None, None, g.start, jnp.asarray(queries[:8]),
+                      PQBackend(lti.codes, lti.codebook),
+                      source=HBMSource(g.adjacency, g.active),
+                      R=g.adjacency.shape[1], **kw)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------ system integration
+def test_system_search_disk_parity_and_patch(tmp_path, points, queries):
+    """End to end with ``storage_dir``: search_disk == search_batch across
+    inserts, deletes and a StreamingMerge; the merge delta-patches the
+    layout in place (storage_rows_patched > 0) instead of rewriting it."""
+    from repro.core.config import IndexConfig
+    cfg = SystemConfig(
+        index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                          L_search=48, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=64, merge_threshold=100_000,
+        temp_capacity=256, insert_batch=32,
+        storage_dir=str(tmp_path / "store"),
+        prefetch_depth=1, adjacency_cache_mb=0)
+    sys_ = bootstrap_system(points[:400], np.arange(400), cfg)
+    assert os.path.isfile(
+        str(tmp_path / "store" / "lti" / "topology.bin"))
+    for i in range(96):
+        sys_.insert(5000 + i, points[450 + i])
+    for e in (1, 7, 5003):
+        sys_.delete(e)
+    q = queries[:8]
+    ref = sys_.search_batch(q, k=5)
+    got = sys_.search_disk(q, k=5)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    assert sys_.stats.io_rows_read > 0
+
+    sys_.merge()
+    assert sys_.stats.storage_rows_patched > 0
+    ref = sys_.search_batch(q, k=5)
+    got = sys_.search_disk(q, k=5)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    sys_.close_storage()
+
+
+def test_system_knob_reconfigure_conservation(tmp_path, points, queries):
+    """Depth/cache knobs change timing and the read/hit split, never the
+    results; SystemStats obeys io_rows_read + io_cache_hits == requested."""
+    from repro.core.config import IndexConfig
+    cfg = SystemConfig(
+        index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                          L_search=48, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=64, merge_threshold=100_000,
+        temp_capacity=256, insert_batch=32,
+        storage_dir=str(tmp_path / "store"),
+        prefetch_depth=0, adjacency_cache_mb=0)
+    sys_ = bootstrap_system(points[:400], np.arange(400), cfg)
+    q = queries[:8]
+    ref = sys_.search_batch(q, k=5)
+
+    sys_.search_disk(q, k=5)
+    baseline = sys_.stats.io_rows_read          # cache off, depth 0
+    assert sys_.stats.io_cache_hits == 0
+
+    sys_.cfg = dataclasses.replace(sys_.cfg, prefetch_depth=2,
+                                   adjacency_cache_mb=4)
+    sys_.close_storage()                        # reopen with the new knobs
+    r0, c0 = sys_.stats.io_rows_read, sys_.stats.io_cache_hits
+    got = sys_.search_disk(q, k=5)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+    reads = sys_.stats.io_rows_read - r0
+    hits = sys_.stats.io_cache_hits - c0
+    assert hits > 0
+    assert reads + hits == baseline             # conservation
+    sys_.close_storage()
