@@ -2,7 +2,12 @@
 
 FreshVamana (alpha-RNG consolidation) vs Delete Policy A (edge removal) and
 Policy B with alpha=1 (aggressive pruning) — the naive baselines collapse,
-FreshVamana holds.
+FreshVamana holds.  ``fresh_local`` runs the same cycle through the
+localized (affected-set) sweep and additionally tracks the exact
+unreachable-live fraction (full-population probe, ``core.reach``) per
+cycle: localized repair must not erode graph connectivity over cycles
+(the ``unreachable_rise`` metric — docs/ARCHITECTURE.md, "Localized
+delete repair").
 """
 from __future__ import annotations
 
@@ -13,12 +18,13 @@ import jax.numpy as jnp
 from repro.core.delete import (consolidate_deletes, consolidate_policy_a,
                                consolidate_policy_b, delete)
 from repro.core.index import build, insert
+from repro.core.reach import unreachable_fraction
 
 from .common import (dataset, default_cfg, emit, mem_recall, queryset,
-                     timed)
+                     timed, write_bench_json)
 
 
-def run_cycles(policy: str, frac=0.10, cycles=8, n=2000):
+def run_cycles(policy: str, frac=0.10, cycles=8, n=2000, probe=False):
     pts = dataset(n)
     q = queryset()
     cfg = default_cfg(n)
@@ -26,10 +32,19 @@ def run_cycles(policy: str, frac=0.10, cycles=8, n=2000):
     state = build(pts, cfg, batch=128)
     fns = {
         "fresh": lambda s: consolidate_deletes(s, cfg),
+        "fresh_local": lambda s: consolidate_deletes(s, cfg, mode="local"),
         "naive_a": consolidate_policy_a,
         "naive_b": lambda s: consolidate_policy_b(s, cfg),
     }
+
+    def gauge(s):
+        # Full-population probe (every live point), not a sample: n is
+        # small enough here that the exact fraction is affordable.
+        return (float(unreachable_fraction(s, cfg, samples=n))
+                if probe else 0.0)
+
     recalls = [mem_recall(state, cfg, q)[0]]
+    unreach = [gauge(state)]
     n_del = int(n * frac)
     for _ in range(cycles):
         live = np.flatnonzero(np.asarray(state.active & ~state.deleted))
@@ -44,16 +59,25 @@ def run_cycles(policy: str, frac=0.10, cycles=8, n=2000):
             vv[:len(sl)] = vecs[lo:lo + 128]
             state = insert(state, jnp.asarray(slots), jnp.asarray(vv), cfg)
         recalls.append(mem_recall(state, cfg, q)[0])
-    return recalls
+        unreach.append(gauge(state))
+    return recalls, unreach
 
 
 def main(quick: bool = False):
     cycles = 4 if quick else 8
-    for policy in ("fresh", "naive_a", "naive_b"):
-        recalls, secs = timed(run_cycles, policy, cycles=cycles)
+    for policy in ("fresh", "fresh_local", "naive_a", "naive_b"):
+        probe = policy in ("fresh", "fresh_local")
+        (recalls, unreach), secs = timed(run_cycles, policy, cycles=cycles,
+                                         probe=probe)
+        extra = ({"unreachable_cycle0": unreach[0],
+                  "unreachable_final": unreach[-1],
+                  "unreachable_max": max(unreach),
+                  "unreachable_rise": unreach[-1] - unreach[0]}
+                 if probe else {})
         emit(f"fig2_recall_stability_{policy}", secs / cycles,
              "cycle0=%.3f final=%.3f min=%.3f" % (
-                 recalls[0], recalls[-1], min(recalls)))
+                 recalls[0], recalls[-1], min(recalls)), **extra)
+    return write_bench_json("recall_stability", quick=quick)
 
 
 if __name__ == "__main__":

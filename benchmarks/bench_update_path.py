@@ -7,6 +7,10 @@ Pallas kernels):
                        launch at the insert and repair operating shapes —
                        the direct jnp-vs-fused comparison the acceptance
                        bar reads (the fused launch must not be slower).
+  ``consolidate_{global,local}_*``  Algorithm-4 delete consolidation at
+                       1% / 5% / 20% delete rates, global sweep vs the
+                       localized affected-set repair (bit-identical
+                       results; the local rows carry speedup_vs_global).
   everything else      end-to-end mutation ops: batched inserts
                        (Algorithm 2), delete consolidation (Algorithm 4),
                        and the three-phase StreamingMerge (§5.3, both
@@ -129,6 +133,38 @@ def bench_engine(engine: str, use_kernel: bool, pts: np.ndarray,
              staged_per_s=n_new / t_m, engine=engine)
 
 
+def bench_repair_modes(engine: str, use_kernel: bool, pts: np.ndarray,
+                       quick: bool) -> None:
+    """Global sweep vs localized affected-set repair across delete rates.
+
+    Same deleted index, same repair engine — only the walk differs, so the
+    ratio isolates the launches-skipped win.  At 1% deletes the affected
+    set is a small fraction of the capacity-sized global sweep; by 20%
+    most rows have a deleted out-neighbor and the gap closes."""
+    n, dim = pts.shape
+    half = n // 2
+    cfg = default_cfg(n, dim, use_kernel=use_kernel)
+    state = mem.build(pts[:half], cfg, batch=128)
+    jax.block_until_ready(state.adjacency)
+    rates = (0.01,) if quick else (0.01, 0.05, 0.20)
+    for rate in rates:
+        k = max(1, int(round(half * rate)))
+        victims = jnp.asarray(
+            np.linspace(0, half - 1, k).astype(np.int32))
+        gd = delete(state, victims)
+        t_by_mode = {}
+        for mode in ("global", "local"):
+            run = lambda m=mode: consolidate_deletes(gd, cfg, mode=m)
+            jax.block_until_ready(run().adjacency)       # compile
+            _, t = timed(run, repeats=1 if quick else 3)
+            t_by_mode[mode] = t
+            extra = ({} if mode == "global" else
+                     {"speedup_vs_global": t_by_mode["global"] / t})
+            emit(f"consolidate_{mode}_{rate:.0%}_{engine}", t,
+                 f"ndel={k}", deletes_per_s=k / t, delete_rate=rate,
+                 engine=engine, **extra)
+
+
 def main(quick: bool = False) -> str:
     import gc
     n = 600 if quick else 3000
@@ -142,6 +178,7 @@ def main(quick: bool = False) -> str:
         gc.collect()
         bench_prune_launch(engine, use_kernel, dim)
         bench_engine(engine, use_kernel, pts, quick)
+        bench_repair_modes(engine, use_kernel, pts, quick)
     return write_bench_json("update_path", quick=quick)
 
 

@@ -15,6 +15,13 @@
 # storage_dir set + scripts/disk_probe.py asserting bit-parity at prefetch
 # depths 0/1/2, the read/cache-hit conservation law, delta patching, and
 # staging-buffer reuse (contracts of docs/STORAGE.md).
+#
+# `smoke.sh --local-repair` runs the localized delete-repair probe instead:
+# two systems routed always-local vs always-global through interleaved
+# inserts/deletes/merges + scripts/local_repair_probe.py asserting merge
+# bit-parity across the routing, the repair counters, the reachability
+# gauge, and standalone consolidate() (contracts of docs/ARCHITECTURE.md,
+# "Localized delete repair").
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -28,6 +35,11 @@ fi
 
 if [[ "${1:-}" == "--disk" ]]; then
   python scripts/disk_probe.py
+  exit 0
+fi
+
+if [[ "${1:-}" == "--local-repair" ]]; then
+  python scripts/local_repair_probe.py
   exit 0
 fi
 

@@ -32,6 +32,15 @@ class IndexConfig:
         StreamingMerge) on the update side.  None (default) auto-selects:
         kernels on TPU, jnp reference path elsewhere.  Both paths are
         bit-identical; the jnp path is the parity oracle.
+      repair_mode: how ``consolidate_deletes{_codes}`` walks the index.
+        ``"global"`` is the paper's Algorithm-4 sweep over every block;
+        ``"local"`` first computes the affected set (live nodes with >=1
+        deleted out-neighbor), gathers only those rows into padded
+        fixed-shape blocks, repairs them through the same batched prune
+        engine, and scatters the rows back — bit-identical to the global
+        sweep, order-of-magnitude cheaper at low delete rates.  The
+        system routes merges between the two by delete rate
+        (``SystemConfig.local_repair_threshold``).
     """
 
     capacity: int
@@ -44,6 +53,7 @@ class IndexConfig:
     dtype: str = "float32"
     beam_width: int = 1
     use_kernel: Optional[bool] = None
+    repair_mode: str = "global"
 
     def visits_bound(self, L: int) -> int:
         if self.max_visits:
@@ -151,6 +161,29 @@ class SystemConfig:
     #   conservation law in core/search.py's counter contract).  0 = off
     #   (every row request touches the file; n_reads matches the
     #   in-memory engine bit-for-bit).
+    # Localized delete repair + reachability guard (docs/ARCHITECTURE.md,
+    # "Localized delete repair").
+    local_repair_threshold: float = 0.05  # a merge's Delete phase runs the
+    #   localized (affected-set) repair when the LTI's delete rate —
+    #   DeleteList members resident in the LTI / live LTI points — is at
+    #   or below this fraction; above it the global Algorithm-4 sweep is
+    #   cheaper (most rows are affected anyway).  Both paths are
+    #   bit-identical; 0 forces every merge global.
+    reach_probe_samples: int = 32 # reachability monitor: after every merge
+    #   (and standalone consolidate()) sample this many live LTI points and
+    #   beam-search each one's own vector from the entry point; the
+    #   fraction NOT found lands in SystemStats.unreachable_frac.  0
+    #   disables the probe.
+    reach_escalate_frac: float = 0.05  # when a probe after a *localized*
+    #   repair estimates an unreachable fraction more than this much ABOVE
+    #   the baseline (the estimate after the last global sweep, or the
+    #   first probe), the next Delete phase is forced to the global sweep
+    #   (SystemStats.repair_escalations counts these).  The comparison is
+    #   against the baseline, not zero: batched inserts orphan a few
+    #   percent of points at small R (no in-edges survive the back-edge
+    #   prune), which is a build artifact the delete path did not cause
+    #   and cannot repair.  Sized to the probe's sampling noise at the
+    #   default reach_probe_samples.
     io_latency_us: float = 0.0    # simulated device latency per IO round
     #   that touches topology.bin (a round's block reads ride the queue
     #   concurrently — §6.2).  Benchmarks only: page-cached mmap reads

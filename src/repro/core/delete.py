@@ -14,8 +14,29 @@ streamed HBM->VMEM, repaired in parallel, written back.  Under
 (``kernels.delete_repair``: candidate assembly + all R prune rounds +
 changed-row select, vectorized across the block's rows); the pre-engine
 jnp blocks are kept verbatim as the bit-parity oracle.
+
+Two sweep modes (``IndexConfig.repair_mode``, overridable per call):
+
+- ``"global"`` — the paper's full scan: every ``capacity/block`` block is
+  repaired, affected or not.  Cost is independent of the delete rate.
+- ``"local"`` — Algorithm 4's loop set is exactly the *affected set*
+  (live nodes with >=1 deleted out-neighbor; ``affected_mask``).  The
+  localized sweep finds those rows with one O(N*R) gather/compare pass,
+  gathers them into fixed-shape padded blocks, repairs the blocks through
+  the SAME per-block engine (one fused launch per block under the
+  kernels), and scatters the repaired rows back.  Row repair is
+  independent row-to-row, so the result is bit-identical to the global
+  sweep while touching ~``|affected|/capacity`` of the blocks — an
+  order of magnitude cheaper at low delete rates.  The affected ids are
+  materialized on the host (data-dependent size), so the localized mode
+  cannot run under an enclosing ``jit`` — ``streaming_merge`` dispatches
+  around it.
 """
 from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +55,70 @@ def delete(state: GraphState, slots: jax.Array) -> GraphState:
     deleted = state.deleted.at[safe].set(
         jnp.where(ok, True, state.deleted[safe]))
     return state._replace(deleted=deleted)
+
+
+def affected_mask(adjacency: jax.Array, deleted: jax.Array,
+                  usable: jax.Array) -> jax.Array:
+    """Algorithm 4's loop set: live nodes with >=1 deleted out-neighbor.
+
+    One O(N*R) gather/compare over the adjacency — the reverse-edge pass
+    (in-neighbors of D) and D's own out-balls collapse into this forward
+    scan because an edge p->v with v in D *is* p being an in-neighbor of
+    D.  Rows outside the mask are untouched by the repair (their
+    ``nbr_del.any()`` select keeps the old row), so repairing only the
+    masked rows is bit-identical to the global sweep.
+    """
+    safe = jnp.maximum(adjacency, 0)
+    nbr_del = (adjacency >= 0) & deleted[safe]
+    return usable & nbr_del.any(axis=1)
+
+
+def repair_cap_overflow(adjacency: jax.Array, deleted: jax.Array,
+                        usable: jax.Array, cap: int) -> jax.Array:
+    """Count live nodes whose deleted out-neighbors exceed the SDC
+    expansion cap — each such node's repair silently dropped >=1
+    expansion ball (``_repair_block_codes``).  Surfaced as
+    ``SystemStats.repair_cap_overflows``; deleted edges are still pruned
+    from the kept set regardless (the keep-mask is uncapped)."""
+    safe = jnp.maximum(adjacency, 0)
+    nbr_del = (adjacency >= 0) & deleted[safe]
+    return jnp.sum((jnp.sum(nbr_del, axis=1) > cap) & usable)
+
+
+def _finish_consolidate(state: GraphState, adjacency: jax.Array) -> GraphState:
+    """Shared consolidation tail: slot reclamation + entry-point upkeep.
+
+    The start is re-picked when the current one is deleted, inactive, or
+    already the empty sentinel; when NO live point remains the start
+    becomes INVALID (searches then return empty instead of seeding from a
+    garbage medoid of an all-false mask) and the next insert re-seeds it.
+    """
+    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
+    active = state.active & ~state.deleted
+    stale = (state.start < 0) | state.deleted[state.start] \
+        | ~state.active[state.start]
+    start = jnp.where(
+        active.any(),
+        jnp.where(stale, medoid(state.vectors, active), state.start),
+        INVALID).astype(jnp.int32)
+    return state._replace(
+        adjacency=adjacency, active=active,
+        deleted=jnp.zeros_like(state.deleted), start=start)
+
+
+def _scatter_repaired(adjacency, rows_fn, aff: np.ndarray, block: int, R):
+    """Localized sweep body: pad the affected ids to a block multiple,
+    repair block-by-block with the SAME engine as the global sweep
+    (``rows_fn`` maps [n_blocks, block] ids -> repaired rows), and
+    scatter the rows back.  Padding duplicates ``aff[0]`` — duplicate
+    scatter indices write identical repaired rows, so the result is
+    well-defined."""
+    n_blocks = -(-len(aff) // block)
+    padded = np.full(n_blocks * block, aff[0], dtype=np.int32)
+    padded[:len(aff)] = aff
+    ids = jnp.asarray(padded).reshape(n_blocks, block)
+    rows = rows_fn(ids)
+    return adjacency.at[ids.reshape(-1)].set(rows.reshape(-1, R))
 
 
 def _repair_block(adjacency, prune_table, deleted, usable, node_ids, alpha, R):
@@ -80,38 +165,59 @@ def _repair_block_kernel(adjacency, prune_table, deleted, usable, node_ids,
         node_ids, usable[node_ids], alpha=alpha, R=R, use_kernel=True)
 
 
+@partial(jax.jit, static_argnames=("alpha", "R", "kernel"))
+def _repair_blocks_fp(adjacency, table, deleted, usable, ids, alpha, R,
+                      kernel):
+    """Blocked full-precision repair sweep, jitted ONCE per (shape,
+    alpha, R, engine) so repeated consolidations — standalone calls, the
+    localized merge path — reuse the compiled program instead of paying a
+    prune-engine retrace per call.  Nested jit inlines, so the fused
+    merge program is unchanged."""
+    repair = _repair_block_kernel if kernel else _repair_block
+
+    def run(b):
+        return repair(adjacency, table, deleted, usable, b, alpha, R)
+
+    return jax.lax.map(run, ids)
+
+
 def consolidate_deletes(state: GraphState, cfg: IndexConfig,
                         block: int = 256,
-                        prune_table: jax.Array | None = None) -> GraphState:
-    """Algorithm 4 over the whole index, then slot reclamation.
+                        prune_table: jax.Array | None = None,
+                        mode: str | None = None) -> GraphState:
+    """Algorithm 4 (global or localized sweep), then slot reclamation.
 
     prune_table: distance table for RobustPrune — full-precision vectors by
     default; the StreamingMerge delete phase passes PQ-decoded vectors instead
     (paper §5.3 Delete Phase).
+    mode: ``"global"`` | ``"local"`` (None -> ``cfg.repair_mode``).  The
+    localized sweep repairs only the affected rows — bit-identical output,
+    but the affected ids round-trip through the host so it must not be
+    called under an enclosing ``jit``.
     """
     N = state.capacity
     table = state.vectors if prune_table is None else prune_table
     usable = state.active & ~state.deleted
-    n_blocks = -(-N // block)
-    pad = n_blocks * block
-    ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(n_blocks, block)
-    repair = (_repair_block_kernel if cfg.kernel_enabled()
-              else _repair_block)
 
-    rows = jax.lax.map(
-        lambda b: repair(state.adjacency, table, state.deleted,
-                         usable, b, cfg.alpha, cfg.R),
-        ids)
-    adjacency = rows.reshape(pad, cfg.R)[:N]
+    def rows_fn(ids):
+        return _repair_blocks_fp(state.adjacency, table, state.deleted,
+                                 usable, ids, cfg.alpha, cfg.R,
+                                 cfg.kernel_enabled())
+
+    if (cfg.repair_mode if mode is None else mode) == "local":
+        aff = np.nonzero(np.asarray(
+            affected_mask(state.adjacency, state.deleted, usable)))[0]
+        adjacency = (state.adjacency if len(aff) == 0 else
+                     _scatter_repaired(state.adjacency, rows_fn, aff,
+                                       block, cfg.R))
+    else:
+        n_blocks = -(-N // block)
+        pad = n_blocks * block
+        ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(
+            n_blocks, block)
+        adjacency = rows_fn(ids).reshape(pad, cfg.R)[:N]
     # Reclaim: deleted slots become free (edges cleared, flags reset).
-    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
-    active = state.active & ~state.deleted
-    start = jnp.where(
-        state.deleted[state.start] | ~state.active[state.start],
-        medoid(state.vectors, active), state.start).astype(jnp.int32)
-    return state._replace(
-        adjacency=adjacency, active=active,
-        deleted=jnp.zeros_like(state.deleted), start=start)
+    return _finish_consolidate(state, adjacency)
 
 
 def _repair_block_codes(adjacency, codes, tables, deleted, usable, node_ids,
@@ -167,34 +273,48 @@ def _repair_block_codes_kernel(adjacency, codes, tables, deleted, usable,
         use_kernel=True)
 
 
+@partial(jax.jit, static_argnames=("alpha", "R", "cap", "kernel"))
+def _repair_blocks_codes(adjacency, codes, tables, deleted, usable, ids,
+                         alpha, R, cap, kernel):
+    """SDC twin of ``_repair_blocks_fp`` — same jit-cache rationale."""
+    repair = (_repair_block_codes_kernel if kernel
+              else _repair_block_codes)
+
+    def run(b):
+        return repair(adjacency, codes, tables, deleted, usable, b,
+                      alpha, R, cap)
+
+    return jax.lax.map(run, ids)
+
+
 def consolidate_deletes_codes(state: GraphState, cfg: IndexConfig,
                               codes: jax.Array, tables: jax.Array,
                               block: int = 1024,
-                              cap: int = 8) -> GraphState:
+                              cap: int = 8,
+                              mode: str | None = None) -> GraphState:
     """Algorithm 4 with SDC distances (StreamingMerge delete phase at its
     traffic-optimal operating point — see EXPERIMENTS.md §Perf)."""
     N = state.capacity
     usable = state.active & ~state.deleted
-    n_blocks = -(-N // block)
-    pad = n_blocks * block
-    ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(
-        n_blocks, block)
-    repair = (_repair_block_codes_kernel if cfg.kernel_enabled()
-              else _repair_block_codes)
-    rows = jax.lax.map(
-        lambda b: repair(state.adjacency, codes, tables,
-                         state.deleted, usable, b,
-                         cfg.alpha, cfg.R, cap),
-        ids)
-    adjacency = rows.reshape(pad, cfg.R)[:N]
-    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
-    active = state.active & ~state.deleted
-    start = jnp.where(
-        state.deleted[state.start] | ~state.active[state.start],
-        medoid(state.vectors, active), state.start).astype(jnp.int32)
-    return state._replace(
-        adjacency=adjacency, active=active,
-        deleted=jnp.zeros_like(state.deleted), start=start)
+
+    def rows_fn(ids):
+        return _repair_blocks_codes(state.adjacency, codes, tables,
+                                    state.deleted, usable, ids, cfg.alpha,
+                                    cfg.R, cap, cfg.kernel_enabled())
+
+    if (cfg.repair_mode if mode is None else mode) == "local":
+        aff = np.nonzero(np.asarray(
+            affected_mask(state.adjacency, state.deleted, usable)))[0]
+        adjacency = (state.adjacency if len(aff) == 0 else
+                     _scatter_repaired(state.adjacency, rows_fn, aff,
+                                       block, cfg.R))
+    else:
+        n_blocks = -(-N // block)
+        pad = n_blocks * block
+        ids = jnp.arange(pad, dtype=jnp.int32).clip(0, N - 1).reshape(
+            n_blocks, block)
+        adjacency = rows_fn(ids).reshape(pad, cfg.R)[:N]
+    return _finish_consolidate(state, adjacency)
 
 
 # ----------------------------------------------------------------------------
@@ -202,17 +322,16 @@ def consolidate_deletes_codes(state: GraphState, cfg: IndexConfig,
 # ----------------------------------------------------------------------------
 
 def consolidate_policy_a(state: GraphState) -> GraphState:
-    """Delete Policy A: drop all edges incident to deleted nodes, add nothing."""
+    """Delete Policy A: drop all edges incident to deleted nodes, add nothing.
+
+    Entry-point upkeep is the shared ``_finish_consolidate`` tail — the
+    predicate matches ``consolidate_deletes`` (deleted OR already-inactive
+    start is re-picked; an inactive start used to survive Policy A and
+    seed searches from a dead node)."""
     safe = jnp.maximum(state.adjacency, 0)
     nbr_del = (state.adjacency >= 0) & state.deleted[safe]
     adjacency = jnp.where(nbr_del, INVALID, state.adjacency)
-    adjacency = jnp.where(state.deleted[:, None], INVALID, adjacency)
-    active = state.active & ~state.deleted
-    start = jnp.where(state.deleted[state.start],
-                      medoid(state.vectors, active),
-                      state.start).astype(jnp.int32)
-    return state._replace(adjacency=adjacency, active=active,
-                          deleted=jnp.zeros_like(state.deleted), start=start)
+    return _finish_consolidate(state, adjacency)
 
 
 def consolidate_policy_b(state: GraphState, cfg: IndexConfig,

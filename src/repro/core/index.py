@@ -42,8 +42,16 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
         vecs.astype(state.vectors.dtype), mode="drop")
     active = state.active.at[wslots].set(True, mode="drop")
     deleted = state.deleted.at[wslots].set(False, mode="drop")
+    # Re-seed the entry point when it is the empty sentinel (a consolidate
+    # that deleted every live point leaves start=INVALID): the first valid
+    # inserted slot becomes the new start so this batch's edge searches —
+    # and every later search — have a live seed again.
+    first_valid = jnp.where(valid.any(),
+                            slots[jnp.argmax(valid)], state.start)
+    start = jnp.where(state.start < 0, first_valid,
+                      state.start).astype(jnp.int32)
     st = state._replace(
-        vectors=vectors, active=active, deleted=deleted,
+        vectors=vectors, active=active, deleted=deleted, start=start,
         n_total=jnp.maximum(state.n_total,
                             jnp.max(jnp.where(valid, slots, -1)) + 1))
     usable = st.active & ~st.deleted

@@ -23,6 +23,17 @@ phase prunes each chunk with ONE ``prune.robust_prune_batch`` call, and the
 Patch phase applies Delta through ``insert.apply_back_edges{_codes}`` —
 kernel- and jnp-path outputs are bit-identical (docs/ARCHITECTURE.md,
 "Mutation engine").
+
+Delete-phase sweep modes (``repair_mode`` kwarg, None -> ``cfg.repair_mode``):
+
+- ``"global"`` — the whole merge stays ONE jitted device program (the
+  historical shape): Algorithm 4 scans every block.
+- ``"local"`` — the Delete phase runs the localized affected-set repair
+  (``delete.consolidate_deletes(mode="local")``), which round-trips the
+  affected ids through the host and therefore runs eagerly; phases 2+3
+  still run as one jitted program (``_insert_patch_phases``, the same
+  traced body the fused path inlines).  Outputs are bit-identical to the
+  global merge — only wall-clock and dispatch count differ.
 """
 from __future__ import annotations
 
@@ -34,7 +45,8 @@ import jax.numpy as jnp
 
 from . import pq as pqm
 from .config import IndexConfig, PQConfig
-from .delete import consolidate_deletes, consolidate_deletes_codes
+from .delete import (consolidate_deletes, consolidate_deletes_codes,
+                     repair_cap_overflow)
 from .distance import INVALID
 from .insert import (apply_back_edges, apply_back_edges_codes,
                      compute_insert_edges)
@@ -42,16 +54,23 @@ from .lti import LTIState
 from .prune import SDCPrune, robust_prune_batch
 from .search import PQBackend, beam_search
 
+# Expansion cap of the SDC delete repair (candidate width R + cap*R);
+# overflows — nodes with more deleted out-neighbors than the cap — are
+# counted into MergeStats.repair_cap_overflows.
+SDC_REPAIR_CAP = 8
+
 
 class MergeStats(NamedTuple):
     n_deleted: jax.Array
     n_inserted: jax.Array
     n_backedge_pairs: jax.Array
     slots: jax.Array            # [Nn] slot assigned per staged row (INVALID ok)
+    repair_cap_overflows: jax.Array  # nodes whose SDC repair dropped >=1
+    #   expansion ball (deleted out-neighbors > SDC_REPAIR_CAP); always 0
+    #   on the full-precision (use_sdc=False) path, whose expansion is
+    #   uncapped.
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "pq_cfg", "insert_chunk",
-                                              "block", "use_sdc"))
 def streaming_merge(
     lti: LTIState,
     new_vecs: jax.Array,        # [Nn, d] staged TempIndex points (rows may be
@@ -63,11 +82,28 @@ def streaming_merge(
     insert_chunk: int = 256,
     block: int = 1024,
     use_sdc: bool = False,
+    repair_mode: str | None = None,
 ) -> tuple[LTIState, MergeStats]:
     """With ``use_sdc`` every prune distance comes straight from the PQ
     codes via symmetric-distance tables (numerically identical to pruning
     on decoded reconstructions, ~16x less HBM traffic, no decoded-table
     buffer) — EXPERIMENTS.md §Perf iteration 1 on the merge cell."""
+    mode = cfg.repair_mode if repair_mode is None else repair_mode
+    if mode == "local":
+        return _streaming_merge_local(
+            lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
+            insert_chunk=insert_chunk, block=block, use_sdc=use_sdc)
+    return _streaming_merge_fused(
+        lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
+        insert_chunk=insert_chunk, block=block, use_sdc=use_sdc)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pq_cfg", "insert_chunk",
+                                              "block", "use_sdc"))
+def _streaming_merge_fused(lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
+                           *, insert_chunk, block, use_sdc):
+    """The historical one-program merge: global Delete phase + phases 2/3,
+    all inside a single jit."""
     g = lti.graph
     codebook = lti.codebook
 
@@ -76,14 +112,65 @@ def streaming_merge(
     # vectors ... to calculate the approximate distances").
     n_del = (g.active & delete_mask).sum()
     g = g._replace(deleted=g.deleted | (delete_mask & g.active))
+    overflow = jnp.int32(0)
     if use_sdc:
         tables = pqm.sdc_tables(codebook)
         decoded = None
+        overflow = repair_cap_overflow(
+            g.adjacency, g.deleted, g.active & ~g.deleted, SDC_REPAIR_CAP)
         g = consolidate_deletes_codes(g, cfg, lti.codes, tables,
-                                      block=block)
+                                      block=block, cap=SDC_REPAIR_CAP,
+                                      mode="global")
     else:
         decoded = pqm.decode(codebook, lti.codes, pq_cfg).astype(jnp.float32)
-        g = consolidate_deletes(g, cfg, block=block, prune_table=decoded)
+        g = consolidate_deletes(g, cfg, block=block, prune_table=decoded,
+                                mode="global")
+
+    return _insert_patch_phases(
+        g, lti.codes, codebook, decoded, new_vecs, new_valid, n_del,
+        overflow, cfg, pq_cfg, insert_chunk=insert_chunk, block=block,
+        use_sdc=use_sdc)
+
+
+def _streaming_merge_local(lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
+                           *, insert_chunk, block, use_sdc):
+    """Localized merge: eager affected-set Delete phase, then the SAME
+    jitted phases-2/3 body as the fused path.  Bit-identical results."""
+    g = lti.graph
+    codebook = lti.codebook
+
+    n_del = (g.active & delete_mask).sum()
+    g = g._replace(deleted=g.deleted | (delete_mask & g.active))
+    overflow = jnp.int32(0)
+    if use_sdc:
+        tables = pqm.sdc_tables(codebook)
+        decoded = None
+        overflow = repair_cap_overflow(
+            g.adjacency, g.deleted, g.active & ~g.deleted, SDC_REPAIR_CAP)
+        g = consolidate_deletes_codes(g, cfg, lti.codes, tables,
+                                      block=block, cap=SDC_REPAIR_CAP,
+                                      mode="local")
+    else:
+        decoded = pqm.decode(codebook, lti.codes, pq_cfg).astype(jnp.float32)
+        g = consolidate_deletes(g, cfg, block=block, prune_table=decoded,
+                                mode="local")
+
+    return _insert_patch_phases(
+        g, lti.codes, codebook, decoded, new_vecs, new_valid, n_del,
+        overflow, cfg, pq_cfg, insert_chunk=insert_chunk, block=block,
+        use_sdc=use_sdc)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pq_cfg", "insert_chunk",
+                                              "block", "use_sdc"))
+def _insert_patch_phases(g, old_codes, codebook, decoded, new_vecs, new_valid,
+                         n_del, overflow, cfg, pq_cfg, *, insert_chunk, block,
+                         use_sdc):
+    """Phases 2 (Insert) + 3 (Patch), shared by the fused and localized
+    merge paths (inlined into the fused path's jit; the localized path's
+    own device program)."""
+    if use_sdc:
+        tables = pqm.sdc_tables(codebook)
 
     # ---- Phase 2: Insert (random reads against the intermediate LTI) ------
     Nn = new_vecs.shape[0]
@@ -95,14 +182,20 @@ def streaming_merge(
     wslots = jnp.where(slots >= 0, slots, g.capacity)
 
     new_codes = pqm.encode(codebook, new_vecs, pq_cfg)
-    codes = lti.codes.at[wslots].set(new_codes, mode="drop")
+    codes = old_codes.at[wslots].set(new_codes, mode="drop")
     vectors = g.vectors.at[wslots].set(
         new_vecs.astype(g.vectors.dtype), mode="drop")
     active = g.active.at[wslots].set(True, mode="drop")
     if not use_sdc:
         decoded = decoded.at[wslots].set(
             pqm.decode(codebook, new_codes, pq_cfg), mode="drop")
-    g = g._replace(vectors=vectors, active=active,
+    # Re-seed the entry point when the Delete phase emptied the index
+    # (start=INVALID sentinel): the first allocated slot seeds this
+    # merge's insert searches and every search after the swap.
+    first_new = jnp.where((slots >= 0).any(),
+                          slots[jnp.argmax(slots >= 0)], INVALID)
+    start = jnp.where(g.start < 0, first_new, g.start).astype(jnp.int32)
+    g = g._replace(vectors=vectors, active=active, start=start,
                    n_total=jnp.maximum(g.n_total,
                                        jnp.max(jnp.where(slots >= 0, slots, -1)) + 1))
     usable = g.active & ~g.deleted
@@ -177,7 +270,8 @@ def streaming_merge(
 
     g = g._replace(adjacency=adjacency)
     stats = MergeStats(n_del, (slots >= 0).sum(),
-                       (pairs_j >= 0).sum(), slots)
+                       (pairs_j >= 0).sum(), slots,
+                       jnp.asarray(overflow, jnp.int32))
     return LTIState(g, codes, codebook), stats
 
 

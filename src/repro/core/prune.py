@@ -248,3 +248,19 @@ def check_alpha_rng(adj_row: jax.Array, p_vec: jax.Array, vectors: jax.Array,
     # violation: an earlier-selected neighbor j alpha-covers i, yet i was kept.
     viol = both & (alpha * pair.T <= d_o[:, None]) & jnp.isfinite(d_o)[:, None]
     return ~viol.any()
+
+
+def check_alpha_rng_rows(adjacency: jax.Array, node_ids: jax.Array,
+                         vectors: jax.Array, alpha: float) -> jax.Array:
+    """Vectorized ``check_alpha_rng`` over a set of rows.
+
+    [len(node_ids)] bool — per-row alpha-RNG verdicts for
+    ``adjacency[node_ids]`` against anchors ``vectors[node_ids]``.  The
+    localized delete repair's natural post-condition: pass the affected
+    ids (``delete.affected_mask``) and the table the prune ran on, and
+    every repaired row must come back True.
+    """
+    safe = jnp.maximum(node_ids, 0)
+    return jax.vmap(
+        lambda p: check_alpha_rng(adjacency[p], vectors[p], vectors, alpha)
+    )(safe)

@@ -1,0 +1,74 @@
+"""Reachability monitor: a sampled probe of unreachable live points.
+
+Localized delete repair (``delete.consolidate_deletes(mode="local")``)
+repairs exactly the rows the global Algorithm-4 sweep would change, so
+it inherits the sweep's connectivity properties — but any localized
+scheme needs a guard against the unreachable-points pathology (points
+that keep losing in-edges across repair cycles until no greedy path
+reaches them; see PAPERS.md on graph degradation under deletions).
+
+``unreachable_fraction`` estimates that pathology directly: sample
+``samples`` live points, beam-search each one's OWN vector from the
+entry point, and call a point unreachable when its slot shows up in
+neither the result list nor the visited set.  A healthy Vamana graph
+self-navigates — searching a stored vector lands on its own slot — so
+the estimate is ~0 on intact graphs and grows as repair quality
+degrades.  The system exposes it as the ``SystemStats.unreachable_frac``
+gauge and escalates a localized repair back to the global sweep when the
+estimate degrades more than ``SystemConfig.reach_escalate_frac`` ABOVE
+the baseline recorded after the last global sweep (a freshly built graph
+already carries a few percent of orphaned points — batched inserts whose
+back-edges all lost the prune — which no delete repair caused or can
+cure, so the guard is relative, not absolute).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .config import IndexConfig
+from .graph import GraphState
+from .search import FullPrecisionBackend, beam_search
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "L"))
+def _probe(adjacency, active, start, vectors, picks, cfg: IndexConfig, L: int):
+    queries = vectors[picks]
+    res = beam_search(adjacency, active, start, queries,
+                      FullPrecisionBackend(vectors),
+                      L=L, max_visits=cfg.visits_bound(L),
+                      beam_width=cfg.beam_width,
+                      use_kernel=cfg.kernel_enabled())
+    seen = jnp.concatenate([res.ids, res.visited], axis=1)       # [n, L+V]
+    found = jnp.any(seen == picks[:, None], axis=1)
+    return 1.0 - jnp.mean(found.astype(jnp.float32))
+
+
+def unreachable_fraction(state: GraphState, cfg: IndexConfig,
+                         samples: int = 32, seed: int = 0,
+                         L: int | None = None) -> float:
+    """Estimate the fraction of live points greedy search cannot reach.
+
+    Draws exactly ``samples`` live slots (with replacement when fewer live
+    points exist — the probe batch stays a fixed shape, so repeated probes
+    reuse one compiled program) and searches each one's own vector from
+    ``state.start``.  Returns 0.0 for an empty index (nothing to reach)
+    and 1.0 when live points exist but the entry point is the empty
+    sentinel (everything is unreachable by definition).
+    """
+    live = np.asarray(state.active & ~state.deleted)
+    live_ids = np.nonzero(live)[0]
+    if len(live_ids) == 0 or samples <= 0:
+        return 0.0
+    if int(state.start) < 0:
+        return 1.0
+    rng = np.random.default_rng(seed)
+    picks = rng.choice(live_ids, size=int(samples),
+                       replace=len(live_ids) < int(samples)).astype(np.int32)
+    L = cfg.L_search if L is None else L
+    return float(_probe(state.adjacency, state.active, state.start,
+                        state.vectors, jnp.asarray(picks), cfg, L))

@@ -54,6 +54,7 @@ from .distance import INVALID
 from .graph import GraphState, empty_graph, pad_graph, stack_lanes
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
+from .reach import unreachable_fraction
 from .wal import WriteAheadLog, log_epoch, replay
 
 
@@ -99,6 +100,22 @@ class SystemStats:
     #   DGAI-style delta patches StreamingMerge issues
     storage_bytes_written: int = 0   # bytes those patches (and full layout
     #   writes) put on disk
+    # Localized delete repair + reachability monitor (docs/ARCHITECTURE.md,
+    # "Localized delete repair").
+    local_repairs: int = 0      # Delete phases run as the localized
+    #   affected-set sweep (delete rate <= cfg.local_repair_threshold)
+    global_repairs: int = 0     # Delete phases run as the global sweep
+    consolidations: int = 0     # standalone consolidate() calls (Algorithm 4
+    #   on the LTI outside a merge)
+    repair_cap_overflows: int = 0  # nodes whose SDC delete repair had more
+    #   deleted out-neighbors than the expansion cap (merge.SDC_REPAIR_CAP)
+    #   — each dropped >=1 expansion ball; deleted edges are still pruned.
+    reach_probes: int = 0       # reachability probes run (sampled self-search
+    #   of live LTI points after merges/consolidations)
+    repair_escalations: int = 0 # localized repairs whose probe exceeded
+    #   cfg.reach_escalate_frac, forcing the next Delete phase global
+    unreachable_frac: float = 0.0  # gauge: latest probe's estimate of the
+    #   unreachable-live-point fraction (0.0 until the first probe)
     # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
     # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
     insert_latencies: list = field(default_factory=list)
@@ -159,6 +176,13 @@ class FreshDiskANN:
         self._insert_lock = threading.RLock()
         self._merge_inflight = 0             # staged points being merged now
         self._merge_thread: Optional[threading.Thread] = None
+        self._force_global_repair = False    # set when a reachability probe
+        #   after a localized repair degrades past cfg.reach_escalate_frac
+        #   above the baseline; the next Delete phase then runs the global
+        #   sweep and clears it.
+        self._reach_baseline: Optional[float] = None  # probe estimate after
+        #   the last global sweep (or the first probe ever) — what a
+        #   localized repair's probe is compared against.
         self._tuned_w: Optional[int] = None  # cached autotuned beam width
         # Unified-fan-out caches: the LaneStack + ext-id tables (keyed by
         # tier-state identity — states are immutable values, so a flush /
@@ -804,11 +828,19 @@ class FreshDiskANN:
             dmask[np.isin(lti_ids, dl)] = True
         if w:
             dmask[np.isin(lti_ids, exts[:w])] = True
+        repair_mode = self._pick_repair_mode(dmask)
         new_lti, stats = streaming_merge(
             self.lti, jnp.asarray(vecs), jnp.asarray(valid),
             jnp.asarray(dmask), icfg, self.cfg.pq,
-            insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block)
+            insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block,
+            repair_mode=repair_mode)
         jax.block_until_ready(new_lti.graph.adjacency)
+        self.stats.repair_cap_overflows += int(stats.repair_cap_overflows)
+        if repair_mode == "local":
+            self.stats.local_repairs += 1
+        else:
+            self.stats.global_repairs += 1
+            self._force_global_repair = False  # the escalation is served
         # Rebuild the external-id table: deleted rows out, new rows in
         # (the merge reports the slot it assigned to each staged row).
         new_ids = self.lti_ext_ids.copy()
@@ -872,6 +904,115 @@ class FreshDiskANN:
             # pre-merge records, truncating would lose them on crash.
         self.stats.merges += 1
         self.stats.merge_seconds += time.perf_counter() - t0
+        self._probe_reachability(repair_mode)
+
+    def _pick_repair_mode(self, dmask: np.ndarray) -> str:
+        """Route the merge's Delete phase: the localized affected-set sweep
+        when the LTI's delete rate is at or below
+        ``cfg.local_repair_threshold`` (and no reachability escalation is
+        pending), the global Algorithm-4 sweep otherwise.  Both produce
+        bit-identical graphs — this picks wall-clock, not semantics."""
+        if self._force_global_repair:
+            return "global"
+        if self.cfg.index.repair_mode == "local":
+            return "local"     # explicit user routing wins below escalation
+        thr = self.cfg.local_repair_threshold
+        if thr <= 0:
+            return "global"
+        active = np.asarray(self.lti.graph.active)
+        n_live = int(active.sum())
+        n_del = int(np.count_nonzero(dmask & active))
+        return "local" if n_del <= thr * max(n_live, 1) else "global"
+
+    def _probe_reachability(self, repair_mode: str) -> None:
+        """Sampled self-search probe of the LTI after a Delete phase; sets
+        the ``unreachable_frac`` gauge and arms the global-sweep escalation
+        when a localized repair left too many live points stranded.
+
+        Escalation compares against a BASELINE — the estimate recorded
+        after the last global sweep (or the first probe) — because a few
+        percent of points are unreachable on a freshly built graph already
+        (batched inserts whose back-edges all lost the prune); the monitor
+        guards against *repair-induced* degradation on top of that."""
+        n = self.cfg.reach_probe_samples
+        if n <= 0:
+            return
+        lti, _ = self._lti_pair
+        frac = unreachable_fraction(lti.graph, self.cfg.index, samples=n,
+                                    seed=self.stats.reach_probes)
+        self.stats.unreachable_frac = frac
+        self.stats.reach_probes += 1
+        if repair_mode != "local" or self._reach_baseline is None:
+            self._reach_baseline = frac
+        elif frac > self._reach_baseline + self.cfg.reach_escalate_frac:
+            self.stats.repair_escalations += 1
+            self._force_global_repair = True
+
+    def consolidate(self, mode: str = "local") -> int:
+        """Standalone Algorithm 4 on the LTI — repair DeleteList residents
+        without waiting for (or paying) a full StreamingMerge.
+
+        The localized default makes this cheap at low delete rates: only
+        the affected rows (plus the reclaimed deleted rows) change, and
+        when ``cfg.storage_dir`` is set exactly that affected-union-deleted
+        row set is delta-patched into the on-disk layout.  Returns the
+        number of LTI points consolidated away.  Ids whose only copy was
+        the LTI leave the DeleteList; copies in temp tiers keep their
+        delete pending, exactly as a merge would."""
+        from .delete import affected_mask, consolidate_deletes
+
+        with self._merge_lock:
+            icfg = self.cfg.index
+            lti, table = self._lti_pair
+            del_snapshot = set(self.deleted_ext)
+            dmask = np.zeros(icfg.capacity, bool)
+            if del_snapshot:
+                dl = np.asarray(sorted(del_snapshot), np.int64)
+                dmask[np.isin(self.lti_ext_ids, dl)] = True
+            dmask &= np.asarray(lti.graph.active)
+            n_del = int(dmask.sum())
+            if n_del == 0:
+                return 0
+            g = lti.graph
+            g = g._replace(deleted=g.deleted | jnp.asarray(dmask))
+            # The changed-row set is known a priori: affected rows get
+            # repaired, deleted rows get cleared.  It anchors the storage
+            # delta patch below — no post-hoc row compare needed.
+            changed = np.asarray(affected_mask(
+                g.adjacency, g.deleted, g.active & ~g.deleted)) | dmask
+            decoded = pqm.decode(
+                lti.codebook, lti.codes, self.cfg.pq).astype(jnp.float32)
+            new_g = consolidate_deletes(g, icfg, block=self.cfg.merge_block,
+                                        prune_table=decoded, mode=mode)
+            jax.block_until_ready(new_g.adjacency)
+            if mode == "local":
+                self.stats.local_repairs += 1
+            else:
+                self.stats.global_repairs += 1
+                self._force_global_repair = False
+            # Retire the consolidated rows from the ext table, swap the
+            # (LTI, table) pair as one generation, drop derived caches.
+            new_ids = table.copy()
+            for e in new_ids[dmask]:
+                e = int(e)
+                if e >= 0 and self._ext_loc.get(e, ("?",))[0] == "lti":
+                    del self._ext_loc[e]
+            new_ids[dmask] = -1
+            self._lti_pair = (LTIState(new_g, lti.codes, lti.codebook),
+                              new_ids)
+            self._tuned_w = None
+            self._fanout_cache = None
+            self._drop_cache = None
+            self._shard_place = None
+            if self.cfg.storage_dir:
+                self._sync_storage(adj_changed=changed)
+            alive = self._live_ext_ids()
+            dl = np.fromiter(del_snapshot, np.int64, len(del_snapshot))
+            self.deleted_ext -= set(dl[~np.isin(dl, alive)].tolist())
+            self._delete_epoch += 1
+            self.stats.consolidations += 1
+            self._probe_reachability(mode)
+            return n_del
 
     # ------------------------------------------------------- storage tier
     def _storage_path(self) -> str:

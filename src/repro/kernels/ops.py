@@ -265,6 +265,13 @@ def delete_repair_fp(row, nbr_del, exp, exp_ok, usable_c, d_p, vecs, p,
     new rows [B, R].  Candidate assembly, prune rounds, and the final
     changed-row select are ONE launch per block
     (``core.delete.consolidate_deletes``).
+
+    The contract is strictly per-row: each output row is a pure function
+    of its own operand slice, never of its neighbors in the block.  That
+    is what lets the localized repair mode feed GATHERED blocks — an
+    arbitrary (even duplicated, for padding) set of node ids per launch —
+    and still be bit-identical to the global sweep's aligned blocks
+    (``core.delete`` module doc, "local" mode).
     """
     if not use_kernel:
         return jax.vmap(lambda *a: ref.delete_repair_fp_ref(

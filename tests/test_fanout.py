@@ -138,6 +138,26 @@ def test_unified_parity_after_merge(points, queries):
     np.testing.assert_array_equal(d_u, d_s)
 
 
+def test_unified_parity_after_localized_merge(points, queries):
+    """Same restack contract when the merge's Delete phase runs the
+    localized (affected-set) repair instead of the global sweep: the
+    unified fan-out program must stay bit-identical to the oracle."""
+    lcfg = IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                       L_search=64, alpha=1.2, repair_mode="local")
+    sys_u = _three_tier_system(points, index=lcfg)
+    sys_s = _three_tier_system(points, index=lcfg, batch_fanout=False)
+    for s in (sys_u, sys_s):
+        s.delete(5)                          # LTI resident -> Delete phase
+        s.delete(2001)
+        s.merge()
+        assert s.stats.local_repairs >= 1 and s.stats.global_repairs == 0
+    ids_u, d_u = sys_u.search(queries, k=5)
+    ids_s, d_s = sys_s.search(queries, k=5)
+    np.testing.assert_array_equal(ids_u, ids_s)
+    np.testing.assert_array_equal(d_u, d_s)
+    assert 5 not in np.asarray(ids_u)
+
+
 def test_search_lanes_matches_dedicated_engines(points, queries):
     """Per-lane (ids, dists, hops, cmps) of the heterogeneous-lane search ==
     the dedicated engines: mem.search on each temp tier, search_lti on the

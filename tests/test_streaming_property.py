@@ -194,3 +194,108 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=10, deadline=None)
     def test_streaming_interleavings_hypothesis(seed, n_ops):
         run_interleaving(seed, n_ops=n_ops)
+
+
+def test_streaming_interleaving_localized_repair():
+    """The full §5.2 invariant sweep with every merge Delete phase forced
+    through the localized affected-set repair — outputs are bit-identical
+    to the global sweep, so every oracle property must hold unchanged."""
+    run_interleaving(
+        21, index=IndexConfig(capacity=1024, dim=DIM, R=16, L_build=24,
+                              L_search=32, alpha=1.2, repair_mode="local"))
+
+
+def test_localized_vs_global_merge_routing_bit_parity():
+    """Two systems replaying the same op stream — one routed always-local,
+    one always-global — must hold bit-identical LTI graphs and search
+    results after every merge (the tentpole's end-to-end parity claim)."""
+    rng = np.random.default_rng(9)
+    base = rng.standard_normal((64, DIM)).astype(np.float32)
+    mk = lambda thr: bootstrap_system(
+        base, np.arange(64),
+        _cfg(local_repair_threshold=thr, reach_probe_samples=0))
+    s_local, s_global = mk(1.0), mk(0.0)
+    next_id = 1000
+    for round_ in range(3):
+        for sys_ in (s_local, s_global):
+            for j in range(20):
+                sys_.insert(next_id + j, base[j] + round_ + 1)
+            for e in (round_ * 3, round_ * 3 + 1):
+                sys_.delete(e)
+            sys_._flush_inserts()
+            sys_.merge()
+            sys_.wait_merge()
+        next_id += 100
+        np.testing.assert_array_equal(
+            np.asarray(s_local.lti.graph.adjacency),
+            np.asarray(s_global.lti.graph.adjacency))
+        q = rng.standard_normal((4, DIM)).astype(np.float32)
+        ids_l, d_l = s_local.search(q, k=5)
+        ids_g, d_g = s_global.search(q, k=5)
+        np.testing.assert_array_equal(np.asarray(ids_l), np.asarray(ids_g))
+        np.testing.assert_array_equal(np.asarray(d_l), np.asarray(d_g))
+    assert s_local.stats.local_repairs == 3
+    assert s_local.stats.global_repairs == 0
+    assert s_global.stats.local_repairs == 0
+    assert s_global.stats.global_repairs == 3
+
+
+def test_reachability_gauge_low_rate_cycles():
+    """Repeated low-rate delete/repair cycles: the unreachable-fraction
+    gauge is probed after every merge, stays a valid fraction, and does
+    not trend upward (the localized repair must not erode connectivity
+    cycle over cycle)."""
+    rng = np.random.default_rng(13)
+    n0 = 96
+    base = rng.standard_normal((n0, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(
+        base, np.arange(n0),
+        _cfg(local_repair_threshold=1.0, reach_probe_samples=64))
+    gauges = []
+    next_id = 1000
+    for cycle in range(4):
+        live = sorted(e for e in range(n0) if e not in sys_.deleted_ext)
+        for e in rng.choice(live, 2, replace=False):
+            sys_.delete(int(e))
+        for j in range(4):
+            sys_.insert(next_id, _mk_vec(rng))
+            next_id += 1
+        sys_._flush_inserts()
+        sys_.merge()
+        sys_.wait_merge()
+        gauges.append(sys_.stats.unreachable_frac)
+        assert 0.0 <= gauges[-1] <= 1.0
+    assert sys_.stats.reach_probes >= 4
+    assert sys_.stats.local_repairs >= 1
+    # no upward trend: the last probe must not exceed the first by more
+    # than the 64-sample binomial noise floor
+    assert gauges[-1] <= gauges[0] + 0.125, gauges
+    # escalation bookkeeping is consistent: every escalation forces the
+    # NEXT sweep global, so escalations can never exceed global repairs + 1
+    assert sys_.stats.repair_escalations <= sys_.stats.global_repairs + 1
+
+
+def test_consolidate_standalone():
+    """FreshDiskANN.consolidate(): Algorithm 4 on the LTI outside a merge —
+    deleted LTI residents leave the graph, the DeleteList retires ids with
+    no surviving copy, searches stay correct."""
+    rng = np.random.default_rng(17)
+    base = rng.standard_normal((48, DIM)).astype(np.float32)
+    sys_ = bootstrap_system(base, np.arange(48),
+                            _cfg(reach_probe_samples=16))
+    for e in (3, 4, 5):
+        sys_.delete(e)
+    n = sys_.consolidate()
+    assert n == 3
+    assert sys_.stats.consolidations == 1
+    assert sys_.stats.reach_probes >= 1
+    assert not {3, 4, 5} & sys_.deleted_ext      # only copies were in the LTI
+    assert sys_.size == 45
+    ids, _ = sys_.search(base[3:4], k=5)
+    assert 3 not in set(int(x) for x in np.asarray(ids)[0])
+    # a second call with an empty DeleteList is a no-op
+    assert sys_.consolidate() == 0
+    # revive after consolidate works exactly like revive after merge
+    sys_.insert(3, base[3])
+    ids, _ = sys_.search(base[3:4], k=1)
+    assert int(ids[0, 0]) == 3

@@ -209,3 +209,190 @@ def test_full_merge_improves_alpha_rng_on_decoded_table(points):
     live = np.nonzero(np.asarray(merged.graph.active))[0]
     post = _alpha_ok_fraction(merged.graph, live, decoded, cfg.alpha)
     assert post >= pre, (pre, post)
+
+
+# ---------------------------------------------------------------------------
+# 4. localized delete repair + the delete-path bugfix sweep
+# ---------------------------------------------------------------------------
+
+def test_localized_consolidate_bit_parity(points):
+    """mode="local" gathers/repairs/scatters only the affected rows and
+    must reproduce the global sweep bit-for-bit — whole adjacency, flags,
+    and entry point, on both engine paths."""
+    from repro.core.delete import affected_mask
+    for uk in (False, True):
+        cfg = _cfg(uk)
+        g = mem.build(points[:300], cfg, batch=64)
+        gd = delete(g, jnp.arange(0, 300, 13))
+        aff = int(affected_mask(gd.adjacency, gd.deleted,
+                                gd.active & ~gd.deleted).sum())
+        assert 0 < aff < 300          # genuinely partial coverage
+        a = consolidate_deletes(gd, cfg, mode="global")
+        b = consolidate_deletes(gd, cfg, mode="local")
+        np.testing.assert_array_equal(np.asarray(a.adjacency),
+                                      np.asarray(b.adjacency))
+        np.testing.assert_array_equal(np.asarray(a.active),
+                                      np.asarray(b.active))
+        assert int(a.start) == int(b.start)
+
+
+def test_localized_consolidate_codes_bit_parity(points):
+    """SDC flavor of the same contract (capped expansion, PQ distances)."""
+    from repro.core import pq as pqm
+    from repro.core.delete import consolidate_deletes_codes
+    lti = build_lti(points[:300], _cfg(False), _pq(), batch=64)
+    tables = pqm.sdc_tables(lti.codebook)
+    for uk in (False, True):
+        cfg = _cfg(uk)
+        gd = delete(lti.graph, jnp.arange(0, 300, 13))
+        a = consolidate_deletes_codes(gd, cfg, lti.codes, tables,
+                                      block=256, mode="global")
+        b = consolidate_deletes_codes(gd, cfg, lti.codes, tables,
+                                      block=256, mode="local")
+        np.testing.assert_array_equal(np.asarray(a.adjacency),
+                                      np.asarray(b.adjacency))
+        assert int(a.start) == int(b.start)
+
+
+@pytest.mark.parametrize("use_sdc", [False, True])
+def test_streaming_merge_local_parity(points, use_sdc):
+    """A localized merge (eager Delete phase + jitted phases 2/3) must be
+    bit-identical to the fused global merge."""
+    cfg, pq_cfg = _cfg(False), _pq()
+    lti = build_lti(points[:300], cfg, pq_cfg, batch=64)
+    newv = jnp.asarray(points[300:400])
+    valid = jnp.ones((100,), bool)
+    dmask = jnp.zeros((1024,), bool).at[jnp.arange(0, 300, 11)].set(True)
+    m_g, s_g = streaming_merge(lti, newv, valid, dmask, cfg, pq_cfg,
+                               insert_chunk=32, block=256, use_sdc=use_sdc,
+                               repair_mode="global")
+    m_l, s_l = streaming_merge(lti, newv, valid, dmask, cfg, pq_cfg,
+                               insert_chunk=32, block=256, use_sdc=use_sdc,
+                               repair_mode="local")
+    np.testing.assert_array_equal(np.asarray(m_g.graph.adjacency),
+                                  np.asarray(m_l.graph.adjacency))
+    np.testing.assert_array_equal(np.asarray(s_g.slots),
+                                  np.asarray(s_l.slots))
+    assert int(s_g.repair_cap_overflows) == int(s_l.repair_cap_overflows)
+
+
+def test_localized_rows_satisfy_alpha_rng(points):
+    """Post-condition: every row the localized pass repaired is a fresh
+    RobustPrune output and satisfies the alpha-RNG invariant."""
+    from repro.core.delete import affected_mask
+    from repro.core.prune import check_alpha_rng_rows
+    cfg = _cfg(False)
+    g = mem.build(points[:300], cfg, batch=64)
+    gd = delete(g, jnp.arange(0, 300, 7))
+    aff = np.nonzero(np.asarray(affected_mask(
+        gd.adjacency, gd.deleted, gd.active & ~gd.deleted)))[0]
+    out = consolidate_deletes(gd, cfg, mode="local")
+    oks = np.asarray(check_alpha_rng_rows(
+        out.adjacency, jnp.asarray(aff.astype(np.int32)), out.vectors,
+        cfg.alpha))
+    assert oks.all()
+
+
+def test_affected_mask_covers_changed_rows(points):
+    """The rows the global sweep changes are exactly a subset of
+    affected-set ∪ deleted — the localized mode's coverage guarantee."""
+    from repro.core.delete import affected_mask
+    cfg = _cfg(False)
+    g = mem.build(points[:300], cfg, batch=64)
+    gd = delete(g, jnp.arange(0, 300, 13))
+    cover = np.asarray(affected_mask(
+        gd.adjacency, gd.deleted, gd.active & ~gd.deleted)) \
+        | np.asarray(gd.deleted)
+    out = consolidate_deletes(gd, cfg, mode="global")
+    changed = np.asarray((out.adjacency != gd.adjacency).any(axis=1))
+    assert not (changed & ~cover).any()
+
+
+def test_policy_a_repicks_inactive_start(points):
+    """Regression: an already-inactive (not deleted) start slot must be
+    re-picked by Policy A, not survive to seed searches from a dead node."""
+    from repro.core.delete import consolidate_policy_a
+    cfg = _cfg(False)
+    g = mem.build(points[:300], cfg, batch=64)
+    g = g._replace(active=g.active.at[g.start].set(False))
+    out = consolidate_policy_a(g)
+    assert int(out.start) != int(g.start)
+    assert bool(out.active[out.start])
+
+
+def test_delete_everything_then_reinsert(points):
+    """Deleting 100%% of the points must leave the sentinel start (no
+    garbage medoid of an all-false mask), searches must come back empty,
+    and the next insert must re-seed the entry point."""
+    cfg = _cfg(False)
+    g = mem.build(points[:300], cfg, batch=64)
+    gd = delete(g, jnp.arange(300, dtype=jnp.int32))
+    for mode in ("global", "local"):
+        out = consolidate_deletes(gd, cfg, mode=mode)
+        assert int(out.start) == int(INVALID)
+        assert not bool(out.active.any())
+        ids, _, _, _ = mem.search(out, jnp.asarray(points[:4]), cfg,
+                                  k=5, L=32)
+        assert (np.asarray(ids) < 0).all()
+    # re-insert into the emptied index: start re-seeds to the first slot
+    out = consolidate_deletes(gd, cfg, mode="local")
+    slots = jnp.arange(16, dtype=jnp.int32)
+    st = mem.insert(out, slots, jnp.asarray(points[:16]), cfg)
+    assert int(st.start) >= 0 and bool(st.active[st.start])
+    ids, _, _, _ = mem.search(st, jnp.asarray(points[:4]), cfg, k=3, L=32)
+    assert (np.asarray(ids)[:, 0] >= 0).all()
+
+
+def test_merge_delete_everything_then_reinsert(points):
+    """The merge Delete phase hitting 100%% of the LTI must hand phases
+    2/3 the sentinel start, which then re-seeds from the first inserted
+    slot — the merged LTI serves its new points."""
+    cfg, pq_cfg = _cfg(False), _pq()
+    lti = build_lti(points[:300], cfg, pq_cfg, batch=64)
+    dmask = jnp.zeros((1024,), bool).at[jnp.arange(300)].set(True)
+    newv = jnp.asarray(points[300:364])
+    valid = jnp.ones((64,), bool)
+    for mode in ("global", "local"):
+        merged, stats = streaming_merge(lti, newv, valid, dmask, cfg,
+                                        pq_cfg, insert_chunk=32, block=256,
+                                        repair_mode=mode)
+        g = merged.graph
+        assert int(stats.n_deleted) == 300
+        assert int(stats.n_inserted) == 64
+        assert int(g.start) >= 0 and bool(g.active[g.start])
+        assert int(g.active.sum()) == 64
+
+
+def test_repair_cap_overflow_counter(points):
+    """A node with more deleted out-neighbors than the SDC expansion cap
+    must fire the overflow counter, and its repaired row must still shed
+    every deleted edge (the keep-mask is uncapped)."""
+    from repro.core import pq as pqm
+    from repro.core.delete import (consolidate_deletes_codes,
+                                   repair_cap_overflow)
+    from repro.core.merge import SDC_REPAIR_CAP
+    cfg = _cfg(False)
+    lti = build_lti(points[:300], cfg, _pq(), batch=64)
+    g = lti.graph
+    # delete SDC_REPAIR_CAP+2 of one node's out-neighbors
+    p = int(jnp.argmax((g.adjacency >= 0).sum(axis=1)))
+    row = np.asarray(g.adjacency[p])
+    victims = row[row >= 0][:SDC_REPAIR_CAP + 2].astype(np.int32)
+    assert len(victims) == SDC_REPAIR_CAP + 2
+    gd = delete(g, jnp.asarray(victims))
+    usable = gd.active & ~gd.deleted
+    n_over = int(repair_cap_overflow(gd.adjacency, gd.deleted, usable,
+                                     SDC_REPAIR_CAP))
+    assert n_over >= 1
+    tables = pqm.sdc_tables(lti.codebook)
+    out = consolidate_deletes_codes(gd, cfg, lti.codes, tables,
+                                    block=256, cap=SDC_REPAIR_CAP)
+    new_row = np.asarray(out.adjacency[p])
+    assert not np.isin(new_row[new_row >= 0], victims).any()
+    # ... and a pure-delete SDC merge surfaces the count in MergeStats
+    dmask = jnp.zeros((1024,), bool).at[jnp.asarray(victims)].set(True)
+    none = jnp.zeros((1, DIM), jnp.float32)
+    _, stats = streaming_merge(lti, none, jnp.zeros((1,), bool), dmask,
+                               cfg, _pq(), insert_chunk=32, block=256,
+                               use_sdc=True)
+    assert int(stats.repair_cap_overflows) == n_over
