@@ -181,11 +181,15 @@ def shard_sweep(quick: bool = False, tag: str = "serve_shards"):
 
 
 def serving_sweeps(quick: bool = True):
-    """Standalone batch+shard sweeps -> BENCH_serving.json (the CI step
-    runs this under 4 fake host devices so the artifact carries real
-    multi-shard rows)."""
+    """Standalone serving benches -> BENCH_serving.json (the CI step runs
+    this under 4 fake host devices so the artifact carries real
+    multi-shard rows): batch + shard sweeps plus the Poisson-arrival
+    scheduler rows (sustained QPS, p50/p99, deadline-miss rate, occupancy
+    with concurrent inserts/deletes — ``bench_concurrent.poisson_serving``)."""
+    from .bench_concurrent import poisson_serving
     batch_sweep(quick)
     shard_sweep(quick)
+    poisson_serving(quick)
     write_bench_json("serving", quick=quick)
 
 

@@ -11,6 +11,13 @@
 # devices (XLA_FLAGS) + scripts/shard_probe.py asserting the shard-count
 # invariance / dispatch / micro-batching contracts of docs/SERVING.md.
 #
+# `smoke.sh --serving` runs the serving-front-end probe instead: 4 fake host
+# devices + scripts/serving_probe.py asserting the continuous-batching
+# scheduler's virtual-clock invariants (deadline-aware close, backpressure
+# shed, scheduled-vs-direct bit-parity) and multi-replica routing (1/2/4
+# replica parity, 2x2 replica-x-shard composition, round-robin accounting,
+# background-merge survival) — contracts of docs/SERVING.md.
+#
 # `smoke.sh --disk` runs the storage-tier probe instead: a tiny system with
 # storage_dir set + scripts/disk_probe.py asserting bit-parity at prefetch
 # depths 0/1/2, the read/cache-hit conservation law, delta patching, and
@@ -30,6 +37,12 @@ export REPRO_PALLAS_INTERPRET=1
 if [[ "${1:-}" == "--shards" ]]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python scripts/shard_probe.py
+  exit 0
+fi
+
+if [[ "${1:-}" == "--serving" ]]; then
+  XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python scripts/serving_probe.py
   exit 0
 fi
 

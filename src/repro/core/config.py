@@ -190,6 +190,30 @@ class SystemConfig:
     #   cost ~0 on this container, so prefetch overlap is unmeasurable
     #   without it.  Demand rounds sleep on the critical path, prefetch
     #   generations on the worker thread.
+    # Continuous-batching serving front end (serving/scheduler.py —
+    # docs/SERVING.md, "The serving loop").  The scheduler packs ragged
+    # request arrivals into fixed-shape micro-batches of ``batch_queries``
+    # queries, closing a batch when it fills OR when the oldest request's
+    # deadline budget would be violated, whichever comes first.
+    slo_ms: float = 0.0           # per-request latency SLO: a request
+    #   submitted at t must complete by t + slo_ms.  The scheduler closes a
+    #   partial batch once now + dispatch-estimate reaches the oldest
+    #   request's deadline; requests completing late are counted in
+    #   SystemStats.deadline_misses.  0 = no deadline (batches close only
+    #   when full, or on flush()).
+    serve_queue_capacity: int = 1024  # bounded request queue: submissions
+    #   beyond this depth are SHED (rejected, SystemStats.shed_requests)
+    #   instead of growing the queue without bound — overload surfaces as
+    #   explicit backpressure, not as unbounded latency.
+    dispatch_estimate_ms: float = 1.0  # seed of the scheduler's EWMA
+    #   estimate of one micro-batch dispatch's wall time; the estimate is
+    #   subtracted from the SLO budget when deciding the batch-close time
+    #   and updated from measured dispatches.
+    clock: Optional[object] = None  # injected Clock for the scheduler
+    #   (serving.scheduler.Clock protocol): None = wall clock
+    #   (time.monotonic).  Tests inject serving.scheduler.VirtualClock so
+    #   every batch-close/shed/deadline decision is deterministic — the
+    #   policy core consults only this clock, never the wall.
 
 
 # The paper's operating point for the billion-scale deployment (§6.2).

@@ -69,6 +69,45 @@ class _Temp:
 LATENCY_RESERVOIR = 1024
 
 
+class Reservoir:
+    """Fixed-size uniform sample of an unbounded stream (Vitter's
+    algorithm R) with percentile snapshots over the retained sample.
+
+    Every element of the stream has probability ``size / seen`` of being
+    in the sample at any point, so ``percentile`` is an unbiased estimate
+    of the stream percentile in O(size) memory however long we run — and
+    EXACT while ``seen <= size`` (the sample is then the whole stream).
+    The serving-latency contract tests live in ``tests/test_scheduler.py``.
+    """
+
+    def __init__(self, size: int = LATENCY_RESERVOIR, seed: int = 0):
+        self.size = size
+        self.sample: list = []
+        self.seen = 0
+        self._rng = np.random.default_rng(seed)
+
+    def record(self, x: float) -> None:
+        self.seen += 1
+        if len(self.sample) < self.size:
+            self.sample.append(x)
+        else:
+            j = int(self._rng.integers(self.seen))
+            if j < self.size:
+                self.sample[j] = x
+
+    def percentile(self, p: float) -> float:
+        """Linear-interpolated percentile of the sample (NaN when empty)."""
+        if not self.sample:
+            return float("nan")
+        return float(np.percentile(self.sample, p))
+
+    def snapshot(self) -> dict:
+        """{p50, p99, n} — the reservoir-backed percentile snapshot the
+        serving benchmarks and the stats surface report."""
+        return {"p50": self.percentile(50.0), "p99": self.percentile(99.0),
+                "n": self.seen}
+
+
 @dataclass
 class SystemStats:
     inserts: int = 0
@@ -116,21 +155,65 @@ class SystemStats:
     #   cfg.reach_escalate_frac, forcing the next Delete phase global
     unreachable_frac: float = 0.0  # gauge: latest probe's estimate of the
     #   unreachable-live-point fraction (0.0 until the first probe)
-    # Fixed-size reservoir (Vitter's algorithm R) — a uniform sample of all
-    # insert latencies in O(LATENCY_RESERVOIR) memory, however long we run.
-    insert_latencies: list = field(default_factory=list)
-    latencies_seen: int = 0
-    _lat_rng: np.random.Generator = field(
-        default_factory=lambda: np.random.default_rng(0), repr=False)
+    # Continuous-batching serving front end (serving/scheduler.py —
+    # docs/SERVING.md, "The serving loop").  Counters are owned here so one
+    # stats surface covers queue, batch and dispatch behavior; the
+    # scheduler updates them under its own lock.
+    scheduled_requests: int = 0  # requests admitted to the serving queue
+    shed_requests: int = 0       # requests REJECTED by queue backpressure
+    #   (queue at cfg.serve_queue_capacity) — the bounded-queue contract:
+    #   overload sheds explicitly instead of growing latency without bound
+    batches_dispatched: int = 0  # micro-batches the scheduler closed and
+    #   served (each is >= 1 and <= cfg.batch_queries requests)
+    deadline_misses: int = 0     # requests completing after arrival +
+    #   cfg.slo_ms (deadline-aware close aims the dispatch estimate at
+    #   making this 0; late polls and underestimates land here)
+    queue_depth: int = 0         # gauge: pending requests after the last
+    #   scheduler submit/close (the backpressure observable)
+    batch_occupancy: float = 0.0  # gauge: fill fraction (n / batch_queries)
+    #   of the last dispatched micro-batch — 1.0 when batches close full,
+    #   lower when the deadline closes them early
+    # Latency reservoirs (Vitter's algorithm R, see ``Reservoir``): uniform
+    # samples in O(LATENCY_RESERVOIR) memory however long we run, each
+    # reporting p50/p99 via ``.snapshot()``.
+    #   insert_latency  — per insert() call (WAL + buffer + flush share)
+    #   search_latency  — per dispatched search micro-batch (device program
+    #                     wall time, recorded inside _search_dispatch)
+    #   serve_latency   — per scheduled request, arrival -> completion on
+    #                     the scheduler's clock (queue wait + dispatch)
+    insert_latency: Reservoir = field(default_factory=Reservoir, repr=False)
+    search_latency: Reservoir = field(
+        default_factory=lambda: Reservoir(seed=1), repr=False)
+    serve_latency: Reservoir = field(
+        default_factory=lambda: Reservoir(seed=2), repr=False)
 
     def record_latency(self, seconds: float) -> None:
-        self.latencies_seen += 1
-        if len(self.insert_latencies) < LATENCY_RESERVOIR:
-            self.insert_latencies.append(seconds)
-        else:
-            j = int(self._lat_rng.integers(self.latencies_seen))
-            if j < LATENCY_RESERVOIR:
-                self.insert_latencies[j] = seconds
+        self.insert_latency.record(seconds)
+
+    # Back-compat views of the insert reservoir's previous field names.
+    @property
+    def insert_latencies(self) -> list:
+        return self.insert_latency.sample
+
+    @property
+    def latencies_seen(self) -> int:
+        return self.insert_latency.seen
+
+    def serving_snapshot(self) -> dict:
+        """One structured view of the serving surface: p50/p99 for each
+        latency reservoir plus the queue/batch counters — what the serving
+        benchmarks emit as machine-readable fields."""
+        return {
+            "search": self.search_latency.snapshot(),
+            "serve": self.serve_latency.snapshot(),
+            "insert": self.insert_latency.snapshot(),
+            "scheduled_requests": self.scheduled_requests,
+            "shed_requests": self.shed_requests,
+            "batches_dispatched": self.batches_dispatched,
+            "deadline_misses": self.deadline_misses,
+            "queue_depth": self.queue_depth,
+            "batch_occupancy": self.batch_occupancy,
+        }
 
 
 class FreshDiskANN:
@@ -340,6 +423,20 @@ class FreshDiskANN:
 
     def _search_dispatch(self, queries: np.ndarray, k: int, kk: int,
                          L: int, W: int) -> tuple[np.ndarray, np.ndarray]:
+        """Timed wrapper: every dispatched micro-batch samples its wall
+        time into ``stats.search_latency`` (the reservoir behind the
+        serving benches' p50/p99 rows) — lane-less no-op calls, which
+        launch no program, are not samples."""
+        d0 = self.stats.search_dispatches
+        t0 = time.perf_counter()
+        out = self._search_dispatch_impl(queries, k, kk, L, W)
+        if self.stats.search_dispatches > d0:
+            self.stats.search_latency.record(time.perf_counter() - t0)
+        return out
+
+    def _search_dispatch_impl(self, queries: np.ndarray, k: int, kk: int,
+                              L: int, W: int
+                              ) -> tuple[np.ndarray, np.ndarray]:
         """Serve ONE fixed-shape micro-batch (all query-count accounting
         already done by ``search_batch``)."""
         q = jnp.asarray(queries, jnp.float32)

@@ -184,6 +184,38 @@ def data_mesh(n_shards: int, axis: str = "data") -> Mesh:
     return Mesh(np.asarray(devs[:n_shards]), (axis,))
 
 
+def replica_mesh(n_replicas: int, n_shards: int = 1,
+                 axes: tuple = ("replica", "data")) -> Mesh:
+    """The 2-axis serving mesh: a ``[n_replicas, n_shards]`` device grid.
+
+    Rows are data-parallel replicas (each serves whole queries against a
+    full copy of the index), columns are the within-replica LTI row shards
+    (``shard_lti`` composing inside each replica).  Built directly from
+    ``jax.devices()`` like ``data_mesh`` so a subset grid — e.g. 2x2 on a
+    4-fake-device CPU — works on every supported jax version.
+    """
+    import numpy as np
+    devs = jax.devices()
+    need = n_replicas * n_shards
+    if need > len(devs):
+        raise ValueError(
+            f"replica_mesh: {n_replicas}x{n_shards} devices requested but "
+            f"only {len(devs)} present")
+    grid = np.asarray(devs[:need]).reshape(n_replicas, n_shards)
+    return Mesh(grid, axes)
+
+
+def replica_groups(mesh: Mesh, axis: str = "data") -> list:
+    """Split a 2-axis replica mesh into its per-replica 1-axis data meshes.
+
+    Each row of the grid becomes a standalone ``Mesh`` over that replica's
+    devices — exactly what ``serving.steps.make_sharded_unified_step``
+    consumes, so the within-replica sharded program needs no changes to
+    run on a replica's device group (``serving.replica.ReplicaSet``)."""
+    import numpy as np
+    return [Mesh(row, (axis,)) for row in np.asarray(mesh.devices)]
+
+
 def lti_lane_specs(axis: str = "data"):
     """(GraphState spec pytree, codes spec) for the row-sharded LTI lane.
 

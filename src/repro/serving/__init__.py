@@ -1,2 +1,6 @@
 from .steps import (make_lm_prefill_step, make_lm_decode_step,
-                    make_recsys_serve_step, make_retrieval_step)  # noqa: F401
+                    make_recsys_serve_step, make_retrieval_step,
+                    make_sharded_unified_step)  # noqa: F401
+from .scheduler import (BatchScheduler, Clock, Ticket, VirtualClock,
+                        WallClock)  # noqa: F401
+from .replica import ReplicaSet  # noqa: F401

@@ -225,6 +225,94 @@ def test_shard_invariance_on_fake_devices(n_dev):
     assert "SHARD-PROBE OK" in out.stdout
 
 
+# ------------------------------------------------- multi-replica routing
+
+def test_replica_set_single_device_parity(points, queries):
+    """ReplicaSet on one device (1 replica x 1 shard) runs the real
+    replica-routed program and must be bit-identical to `search_batch` —
+    the tier-1 half of the replica-invariance contract (the multi-device
+    half is `scripts/serving_probe.py`)."""
+    from repro.serving import ReplicaSet
+    sys_ = _three_tier_system(points, batch_queries=4)
+    for e in (0, 5, 2000, 2149):
+        sys_.delete(e)
+    ref_ids, ref_d = sys_.search_batch(queries[:12], k=5)
+    rs = ReplicaSet(sys_, 1)
+    ids, d = rs.search_batch(queries[:12], k=5)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(d, ref_d)
+
+
+def test_replica_round_robin_accounting(points, queries):
+    """Each fixed-shape micro-batch lands on the next replica in turn and
+    is counted in `dispatches[r]`; `search_dispatches` still counts every
+    program once.  (One device -> one replica; the spread across 2/4
+    replicas is asserted in the probe.)"""
+    from repro.serving import ReplicaSet
+    sys_ = _three_tier_system(points, batch_queries=4)
+    rs = ReplicaSet(sys_, 1)
+    d0 = sys_.stats.search_dispatches
+    rs.search_batch(queries[:10], k=5)          # 4 + 4 + 2(padded) chunks
+    assert rs.dispatches == [3]
+    assert sys_.stats.search_dispatches - d0 == 3
+    # pinned routing bypasses round-robin
+    rs.search_batch(queries[:2], k=5, replica=0)
+    assert rs.dispatches == [4]
+    with pytest.raises(ValueError):
+        rs.search_batch(queries[:2], k=5, replica=7)
+
+
+def test_replica_set_degrades_to_device_census(points):
+    """Asking for more replicas x shards than devices exist degrades (cap
+    shards, then replicas) instead of raising — same posture as
+    `shard_lti`'s census cap."""
+    from repro.serving import ReplicaSet
+    sys_ = _three_tier_system(points)
+    rs = ReplicaSet(sys_, 8, n_shards=8)
+    assert rs.n_replicas >= 1 and rs.n_shards >= 1
+    ids, _ = rs.search_batch(points[:4], k=3)
+    assert ids.shape == (4, 3)
+
+
+def test_replica_routing_survives_background_merge(points, queries):
+    """A background merge swaps the LTI generation mid-service: every
+    replica's placement cache must miss on its next dispatch and re-place
+    the new graph, keeping parity with a fresh reference system."""
+    from repro.serving import ReplicaSet
+    ref = _three_tier_system(points)
+    sys_ = _three_tier_system(points, batch_queries=4,
+                              background_merge=True)
+    rs = ReplicaSet(sys_, 1)
+    rs.search_batch(queries[:4], k=5)           # warm the placement cache
+    for s in (ref, sys_):
+        s.delete(2001)
+    ref.merge()
+    sys_.merge(background=True)
+    sys_.wait_merge()
+    assert sys_.stats.merges == 1
+    ids_r, d_r = ref.search_batch(queries[:12], k=5)
+    ids, d = rs.search_batch(queries[:12], k=5)
+    np.testing.assert_array_equal(ids, ids_r)
+    np.testing.assert_array_equal(d, d_r)
+
+
+def test_serving_invariance_on_fake_devices():
+    """Multi-device half of the replica contract: scripts/serving_probe.py
+    in a subprocess with 4 fake host devices — scheduler invariants under a
+    virtual clock, per-query bit-parity 1 vs 2 vs 4 replicas, 2x2
+    replicas-x-shards composition, round-robin accounting, and routing
+    survival across a background merge."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env.pop("PYTHONPATH", None)               # probe inserts src/ itself
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "serving_probe.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, f"probe failed:\n{out.stdout}\n{out.stderr}"
+    assert "SERVING-PROBE OK" in out.stdout
+
+
 # ------------------------------------------- query-batched frontier kernel
 
 def test_frontier_select_batch_matches_vmapped_ref(rng):
