@@ -32,8 +32,8 @@ from repro.core.autotune import BeamPoint, pick_beam_width
 from repro.core.lti import build_lti, search_lti, write_lti_layout
 from repro.storage import DiskLTISearcher
 
-from .common import dataset, default_cfg, default_pq, emit, queryset, timed, \
-    write_bench_json
+from .common import dataset, default_cfg, default_pq, emit, locality_stream, \
+    queryset, timed, write_bench_json
 
 # Simulated per-queue-submission device latency for the disk rows (us).
 # ~500us is a pessimistic SATA-class read; at 0 the page-cached mmap makes
@@ -85,6 +85,44 @@ def _disk_sweep(lti, cfg, q, quick: bool):
         layout.close()
 
 
+def _storage_delta_sweep(quick: bool):
+    """IO cost of UPDATES: what each streaming merge writes back through
+    the DGAI-style delta patch (``storage.layout.patch_layout``) on the
+    clustered-expiry stream, arrival order vs locality-scheduled.
+
+    ``storage_delta_*`` rows report, summed over the stream: adjacency
+    rows rewritten, DISTINCT 4KB topology blocks dirtied (the real SSD
+    write granularity — this is where proximity-ordered slot placement
+    pays), and total bytes written.  The wall column is the merge compute,
+    not the patch (the disk rows above cover read-path wall)."""
+    import jax
+    cycles, per, cap, ndel = ((4, 192, 8192, 48) if quick
+                              else (6, 512, 16384, 96))
+    base_blocks = None
+    for loc in (False, True):
+        jax.clear_caches()
+        with tempfile.TemporaryDirectory() as td:
+            recs = locality_stream(cycles, per, ndel, loc, cap=cap,
+                                   layout_path=os.path.join(td, "layout"))
+        rows = sum(r["adj_rows"] for r in recs)
+        blocks = sum(r["adj_blocks"] for r in recs)
+        byts = sum(r["bytes_written"] for r in recs)
+        block_bytes = blocks * 4096          # what the SSD actually commits
+        wall = sum(r["wall"] for r in recs[3:])
+        extra = ({} if base_blocks is None
+                 else {"blocks_vs_arrival": blocks / base_blocks})
+        if base_blocks is None:
+            base_blocks = max(1, blocks)
+        tag = "on" if loc else "off"
+        emit(f"storage_delta_{tag}", wall,
+             f"cycles={cycles} adj_rows={rows} adj_blocks={blocks} "
+             f"bytes={byts}",
+             cycles=cycles, staged_per_cycle=per, adj_rows=rows,
+             adj_blocks=blocks, bytes_written=byts,
+             block_bytes_written=block_bytes, locality=int(loc),
+             **extra)
+
+
 def main(quick: bool = False):
     n = 1500 if quick else 3000
     pts, q = dataset(n), queryset()
@@ -108,6 +146,7 @@ def main(quick: bool = False):
         emit(f"autotune_pick_L{L}", 0.0, f"W={best}", L=L, W=best)
 
     _disk_sweep(lti, cfg, q, quick)
+    _storage_delta_sweep(quick)
     write_bench_json("io_cost", quick=quick, n=n,
                      disk_latency_us=DISK_LATENCY_US)
 

@@ -20,8 +20,8 @@ from repro.core.delete import (consolidate_deletes, consolidate_policy_a,
 from repro.core.index import build, insert
 from repro.core.reach import unreachable_fraction
 
-from .common import (dataset, default_cfg, emit, mem_recall, queryset,
-                     timed, write_bench_json)
+from .common import (dataset, default_cfg, emit, locality_stream,
+                     mem_recall, queryset, timed, write_bench_json)
 
 
 def run_cycles(policy: str, frac=0.10, cycles=8, n=2000, probe=False):
@@ -77,6 +77,20 @@ def main(quick: bool = False):
         emit(f"fig2_recall_stability_{policy}", secs / cycles,
              "cycle0=%.3f final=%.3f min=%.3f" % (
                  recalls[0], recalls[-1], min(recalls)), **extra)
+    # Locality-scheduled merges on the clustered-expiry stream: topology
+    # legitimately differs from arrival order, recall must not (the
+    # recall-equivalence contract of docs/ARCHITECTURE.md, "Update-path
+    # locality") — the off/on rows are the paired measurement.
+    mc, per, cap, ndel = (4, 192, 8192, 48) if quick else (6, 512, 16384, 96)
+    for loc in (False, True):
+        recs, secs = timed(locality_stream, mc, per, ndel, loc, cap=cap,
+                           measure_recall=True)
+        rc = [r["recall"] for r in recs]
+        emit(f"fig2_recall_stability_merge_locality_{'on' if loc else 'off'}",
+             secs / mc, "cycle0=%.3f final=%.3f min=%.3f" % (
+                 rc[0], rc[-1], min(rc)),
+             recall_cycle0=rc[0], recall_final=rc[-1], recall_min=min(rc),
+             locality=int(loc))
     return write_bench_json("recall_stability", quick=quick)
 
 

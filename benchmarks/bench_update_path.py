@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (dataset, default_cfg, default_pq, emit,
-                               timed, write_bench_json)
+                               locality_stream, timed, write_bench_json)
 from repro.core import index as mem
 from repro.core.delete import consolidate_deletes, delete
 from repro.core.lti import build_lti
@@ -165,6 +165,41 @@ def bench_repair_modes(engine: str, use_kernel: bool, pts: np.ndarray,
                  engine=engine, **extra)
 
 
+def bench_locality(quick: bool) -> None:
+    """Arrival-order vs locality-scheduled merges on the clustered-expiry
+    stream (``common.locality_stream`` — the workload the proximity
+    ordering exists for).  The ``merge_locality_*`` rows carry the three
+    acceptance numbers: steady-state merge wall (cycles 0-2 pay
+    compilation — insert-only shapes, then the first expiry cycle's
+    launch buckets — on both arms and are excluded), Delta prune rows
+    LAUNCHED (fixed-shape worst case vs measured power-of-two buckets),
+    and distinct 4KB topology blocks the delta dirtied (placement
+    compounding — the gap widens with cycles as cluster mates stay
+    contiguous)."""
+    cycles, per, cap, ndel = ((4, 192, 8192, 48) if quick
+                              else (6, 512, 16384, 96))
+    base = None
+    for loc in (False, True):
+        jax.clear_caches()
+        recs = locality_stream(cycles, per, ndel, loc, cap=cap)
+        steady = recs[3:]
+        wall = sum(r["wall"] for r in steady)
+        prune = sum(r["prune_rows"] for r in recs)
+        targets = sum(r["backedge_targets"] for r in recs)
+        rows = sum(r["delta_rows"] for r in recs)
+        blocks = sum(r["delta_blocks"] for r in recs)
+        extra = {} if base is None else {"speedup_vs_arrival": base / wall}
+        if base is None:
+            base = wall
+        tag = "on" if loc else "off"
+        emit(f"merge_locality_{tag}", wall,
+             f"cycles={cycles} staged={per}/cyc prune_rows={prune} "
+             f"targets={targets} delta_blocks={blocks}",
+             cycles=cycles, staged_per_cycle=per, prune_rows=prune,
+             backedge_targets=targets, delta_rows=rows,
+             delta_blocks=blocks, locality=int(loc), **extra)
+
+
 def main(quick: bool = False) -> str:
     import gc
     n = 600 if quick else 3000
@@ -179,6 +214,7 @@ def main(quick: bool = False) -> str:
         bench_prune_launch(engine, use_kernel, dim)
         bench_engine(engine, use_kernel, pts, quick)
         bench_repair_modes(engine, use_kernel, pts, quick)
+    bench_locality(quick)
     return write_bench_json("update_path", quick=quick)
 
 

@@ -62,6 +62,94 @@ def timed(fn, *args, repeats=1, **kw):
     return out, (time.perf_counter() - t0) / repeats
 
 
+def locality_stream(cycles: int, per_cycle: int, n_del: int, locality: bool,
+                    *, cap: int = 16384, dim: int = DIM, seed: int = 3,
+                    layout_path: str | None = None,
+                    measure_recall: bool = False) -> list[dict]:
+    """Clustered-expiry streaming-merge driver shared by the locality
+    benches (bench_update_path.bench_locality and bench_io_cost's
+    storage-delta sweep — SAME stream, so their numbers compose).
+
+    The workload is the streaming pattern locality ordering exists for:
+    each cycle inserts ``per_cycle`` points drawn from four FRESH clusters
+    (a moving distribution), and from cycle 2 on expires up to ``n_del``
+    points of the cluster window inserted two cycles earlier (time-to-live
+    deletes, clustered like the inserts that created them).  Slot->cluster
+    tracking rides ``MergeStats.slots``.
+
+    Returns one record per cycle: merge wall seconds, changed adjacency
+    rows and DISTINCT 4KB topology blocks (``merge.adjacency_delta_mask``),
+    Delta prune rows launched and distinct targets; with ``layout_path``
+    the base LTI is written through ``repro.storage`` and every cycle's
+    delta is patched to disk, adding the measured ``patch_layout`` stats
+    (adj_rows / adj_blocks / bytes_written) to the record; with
+    ``measure_recall`` each record adds recall@10 of a fixed clustered
+    query set against brute force over the live set (the
+    recall-equivalence contract, measured per cycle).
+    """
+    import jax
+    from repro.core.lti import build_lti, write_lti_layout
+    from repro.core.merge import adjacency_delta_mask, streaming_merge
+    from repro.storage.layout import patch_layout
+
+    rng0 = np.random.default_rng(seed)
+    cfg = IndexConfig(capacity=cap, dim=dim, R=28, L_build=32, L_search=48,
+                      alpha=1.2)
+    pq = default_pq(dim)
+    rpb = max(1, 4096 // (cfg.R * 4))
+    centers = rng0.standard_normal((8 + 4 * cycles, dim)) * 4.0
+    base = (centers[rng0.integers(0, 8, 512)]
+            + 0.2 * rng0.standard_normal((512, dim))).astype(np.float32)
+    lti = build_lti(base, cfg, pq, batch=64)
+    if layout_path:
+        write_lti_layout(layout_path, lti).close()
+    q = (centers[rng0.integers(0, len(centers), 32)]
+         + 0.2 * rng0.standard_normal((32, dim))).astype(np.float32)
+
+    rng = np.random.default_rng(7)
+    slot_cluster: dict[int, int] = {}
+    out = []
+    for cyc in range(cycles):
+        window = np.arange(8 + cyc * 4, 8 + cyc * 4 + 4)
+        which = rng.choice(window, per_cycle)
+        newp = (centers[which] + 0.2 * rng.standard_normal(
+            (per_cycle, dim))).astype(np.float32)
+        dmask = np.zeros(cap, bool)
+        if cyc >= 2:
+            victim_cl = 8 + (cyc - 2) * 4          # expire the oldest window
+            act = np.asarray(lti.graph.active & ~lti.graph.deleted)
+            vict = [s for s, c in slot_cluster.items()
+                    if c == victim_cl and act[s]][:n_del]
+            dmask[vict] = True
+        old_adj = lti.graph.adjacency
+        t0 = time.perf_counter()
+        lti, stats = streaming_merge(
+            lti, jnp.asarray(newp), jnp.ones((per_cycle,), bool),
+            jnp.asarray(dmask), cfg, pq, insert_chunk=128, block=512,
+            locality=locality, locality_seed=cyc)
+        jax.block_until_ready(lti.graph.adjacency)
+        wall = time.perf_counter() - t0
+        for i, s in enumerate(np.asarray(stats.slots)):
+            if s >= 0:
+                slot_cluster[int(s)] = int(which[i])
+        delta = adjacency_delta_mask(old_adj, lti.graph.adjacency)
+        changed = np.nonzero(np.asarray(delta))[0]
+        rec = {"cycle": cyc, "wall": wall, "delta_rows": int(changed.size),
+               "delta_blocks": int(np.unique(changed // rpb).size),
+               "prune_rows": int(stats.n_prune_rows),
+               "backedge_targets": int(stats.n_backedge_targets),
+               "n_deleted": int(stats.n_deleted)}
+        if layout_path:
+            ps = patch_layout(layout_path, lti.graph, codes=lti.codes,
+                              adj_changed=np.asarray(delta))
+            rec.update(adj_rows=ps.adj_rows, adj_blocks=ps.adj_blocks,
+                       bytes_written=ps.bytes_written)
+        if measure_recall:
+            rec["recall"] = mem_recall(lti.graph, cfg, q, k=10)[0]
+        out.append(rec)
+    return out
+
+
 _RECORDS: list[dict] = []
 
 

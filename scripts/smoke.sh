@@ -23,6 +23,13 @@
 # depths 0/1/2, the read/cache-hit conservation law, delta patching, and
 # staging-buffer reuse (contracts of docs/STORAGE.md).
 #
+# `smoke.sh --locality` runs the locality-aware update batching probe
+# instead: two systems differing only in SystemConfig.locality_order driven
+# through the same clustered stream + scripts/locality_probe.py asserting
+# seeded-permutation determinism, bucketed prune-launch reduction, storage
+# delta coherence, and recall equivalence (contracts of
+# docs/ARCHITECTURE.md, "Update-path locality").
+#
 # `smoke.sh --local-repair` runs the localized delete-repair probe instead:
 # two systems routed always-local vs always-global through interleaved
 # inserts/deletes/merges + scripts/local_repair_probe.py asserting merge
@@ -53,6 +60,11 @@ fi
 
 if [[ "${1:-}" == "--local-repair" ]]; then
   python scripts/local_repair_probe.py
+  exit 0
+fi
+
+if [[ "${1:-}" == "--locality" ]]; then
+  python scripts/locality_probe.py
   exit 0
 fi
 

@@ -41,6 +41,11 @@ class IndexConfig:
         sweep, order-of-magnitude cheaper at low delete rates.  The
         system routes merges between the two by delete rate
         (``SystemConfig.local_repair_threshold``).
+      locality_clusters: number of sampled medoids ``core.locality`` uses to
+        proximity-order an update batch when ``SystemConfig.locality_order``
+        is on (flush reorder + locality merge).  More clusters = finer
+        grouping but smaller groups to amortize prune launches over; 0 keeps
+        the default.  Ignored while ``locality_order`` is off.
     """
 
     capacity: int
@@ -54,6 +59,7 @@ class IndexConfig:
     beam_width: int = 1
     use_kernel: Optional[bool] = None
     repair_mode: str = "global"
+    locality_clusters: int = 16
 
     def visits_bound(self, L: int) -> int:
         if self.max_visits:
@@ -184,6 +190,22 @@ class SystemConfig:
     #   prune), which is a build artifact the delete path did not cause
     #   and cannot repair.  Sized to the probe's sampling noise at the
     #   default reach_probe_samples.
+    # Locality-aware update batching (core/locality.py —
+    # docs/ARCHITECTURE.md, "Update-path locality").
+    locality_order: bool = False  # proximity-order update batches before
+    #   they hit the graph: the insert buffer is reordered by sampled-medoid
+    #   cluster at flush time (so a flush chunk's back-edge pairs collide
+    #   onto fewer distinct targets and the Delta prune launch shrinks to a
+    #   measured power-of-two bucket), and StreamingMerge's Phase 2 runs the
+    #   locality schedule (cluster-ordered chunks inserted EAGERLY — each
+    #   chunk's Delta lands before the next chunk searches, so cluster
+    #   mates wire to each other and the back-edge patch concentrates onto
+    #   the new rows, shrinking `adjacency_delta_mask` and therefore
+    #   `patch_layout`'s rewritten rows/bytes).  Reordering legitimately
+    #   changes slot assignment and topology: the contract is recall
+    #   equivalence with arrival order plus bit-determinism for a fixed
+    #   batch + seed, NOT bit-parity (docs/ARCHITECTURE.md).  Counters:
+    #   SystemStats.{flush,merge}_backedge_targets / _prune_rows.
     io_latency_us: float = 0.0    # simulated device latency per IO round
     #   that touches topology.bin (a round's block reads ride the queue
     #   concurrently — §6.2).  Benchmarks only: page-cached mmap reads

@@ -71,6 +71,69 @@ def insert(state: GraphState, slots: jax.Array, vecs: jax.Array,
     return st._replace(adjacency=adjacency)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "L", "reprune"))
+def insert_edges_stage(state: GraphState, slots: jax.Array, vecs: jax.Array,
+                       cfg: IndexConfig, L: Optional[int] = None,
+                       reprune: bool = False):
+    """Stages 1+2 of ``insert`` as a standalone program: store the batch,
+    search + prune its out-edges, scatter the new rows — returning the
+    staged state plus the Delta pair list *without* applying it.
+
+    ``insert_edges_stage`` followed by ``insert_apply_delta`` (with
+    ``affected_cap=None``) is bit-identical to one ``insert`` call
+    (tests/test_locality.py pins this).  The locality-ordered flush uses
+    the split so it can measure the chunk's DISTINCT back-edge target count
+    on the host between the stages and size the Delta prune launch to a
+    matching power-of-two bucket instead of the worst case.
+    """
+    L = L or cfg.L_build
+    valid = slots >= 0
+    wslots = jnp.where(valid, slots, state.capacity)
+    vectors = state.vectors.at[wslots].set(
+        vecs.astype(state.vectors.dtype), mode="drop")
+    active = state.active.at[wslots].set(True, mode="drop")
+    deleted = state.deleted.at[wslots].set(False, mode="drop")
+    first_valid = jnp.where(valid.any(),
+                            slots[jnp.argmax(valid)], state.start)
+    start = jnp.where(state.start < 0, first_valid,
+                      state.start).astype(jnp.int32)
+    st = state._replace(
+        vectors=vectors, active=active, deleted=deleted, start=start,
+        n_total=jnp.maximum(state.n_total,
+                            jnp.max(jnp.where(valid, slots, -1)) + 1))
+    usable = st.active & ~st.deleted
+    edges = compute_insert_edges(
+        state.adjacency if not reprune else st.adjacency,
+        st.active, usable, st.start, st.vectors,
+        jnp.where(valid, slots, INVALID), vecs,
+        FullPrecisionBackend(st.vectors),
+        L=L, max_visits=cfg.visits_bound(L), alpha=cfg.alpha, R=cfg.R,
+        beam_width=cfg.beam_width, use_kernel=cfg.kernel_enabled())
+    new_adj = jnp.where(valid[:, None], edges.new_adj, INVALID)
+    adjacency = st.adjacency.at[wslots].set(new_adj, mode="drop")
+    pairs_j = new_adj.reshape(-1)
+    return st._replace(adjacency=adjacency), pairs_j, edges.pairs_p
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "affected_cap"))
+def insert_apply_delta(state: GraphState, pairs_j: jax.Array,
+                       pairs_p: jax.Array, cfg: IndexConfig,
+                       affected_cap: Optional[int] = None) -> GraphState:
+    """Stage 3 of ``insert``: apply the staged Delta pair list.
+
+    ``affected_cap`` (static) sizes the grouped prune launch; the caller
+    must guarantee cap >= distinct(pairs_j) or affected rows are silently
+    dropped (``insert._apply_back_edges_impl``).  None = worst case,
+    completing the bit-identical replication of ``insert``.
+    """
+    usable = state.active & ~state.deleted
+    adjacency = apply_back_edges(
+        state.adjacency, state.vectors, usable, pairs_j, pairs_p,
+        alpha=cfg.alpha, R=cfg.R, use_kernel=cfg.kernel_enabled(),
+        affected_cap=affected_cap)
+    return state._replace(adjacency=adjacency)
+
+
 def _search_impl(state: GraphState, queries: jax.Array, cfg: IndexConfig,
                  *, k: int, L: int, beam_width: Optional[int]):
     res = beam_search(state.adjacency, state.active, state.start, queries,

@@ -122,12 +122,23 @@ def _dedupe_combine(combine: jax.Array) -> jax.Array:
 
 
 def _apply_back_edges_impl(adjacency, backend, usable, pairs_j, pairs_p, *,
-                           alpha, R, d_max, chunk, use_kernel):
+                           alpha, R, d_max, chunk, use_kernel,
+                           affected_cap=None):
     """Shared Delta application (stage 3 / StreamingMerge Patch phase).
 
     Affected nodes are processed in blocks via ``lax.scan`` — the Patch-phase
     block pass of StreamingMerge (one block of rows streamed, patched, written
     back) and a memory bound for plain batched inserts alike.
+
+    ``affected_cap`` (static) bounds the number of processed rows below the
+    worst case min(P, N).  The locality paths measure the DISTINCT back-edge
+    target count D on the host and pass a power-of-two bucket >= D
+    (``locality.next_bucket``), so a proximity-ordered batch whose pairs
+    collide onto few targets launches a proportionally smaller prune — the
+    fixed-shape program cannot shrink dynamically otherwise.  Correctness
+    requires cap >= D: top_k over the 0/1 indicator captures every affected
+    row exactly when the launch width covers the 1s.  None = worst case
+    (bit-identical to the historical behavior).
     """
     N = adjacency.shape[0]
     P = pairs_j.shape[0]
@@ -135,6 +146,8 @@ def _apply_back_edges_impl(adjacency, backend, usable, pairs_j, pairs_p, *,
     # Every affected node appears (<= P of them); top_k over the 0/1 indicator
     # returns lowest-index ties first, so all 1s are captured when P <= a_max.
     a_max = min(P, N)
+    if affected_cap is not None:
+        a_max = max(1, min(a_max, int(affected_cap)))
     _, affected = jax.lax.top_k((cnt > 0).astype(jnp.int32), a_max)
 
     def rows_for(adj, js, usable):
@@ -179,12 +192,14 @@ def apply_back_edges_codes(
     d_max: int | None = None,
     chunk: int = 1024,
     use_kernel: bool = False,
+    affected_cap: int | None = None,
 ) -> jax.Array:
     """Patch phase with SDC distances (see apply_back_edges)."""
     d_max = d_max if d_max is not None else R
     return _apply_back_edges_impl(
         adjacency, SDCPrune(codes, tables), usable, pairs_j, pairs_p,
-        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel)
+        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel,
+        affected_cap=affected_cap)
 
 
 def apply_back_edges(
@@ -199,9 +214,11 @@ def apply_back_edges(
     d_max: int | None = None,
     chunk: int = 1024,
     use_kernel: bool = False,
+    affected_cap: int | None = None,
 ) -> jax.Array:
     """Stage 3: apply Delta.  Affected nodes append or re-prune (Alg. 2)."""
     d_max = d_max if d_max is not None else R
     return _apply_back_edges_impl(
         adjacency, FullPrecisionPrune(prune_table), usable, pairs_j, pairs_p,
-        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel)
+        alpha=alpha, R=R, d_max=d_max, chunk=chunk, use_kernel=use_kernel,
+        affected_cap=affected_cap)

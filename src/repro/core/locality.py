@@ -1,0 +1,134 @@
+"""Locality-aware update batching — proximity-order a batch before it hits
+the graph (Slipstream, arXiv 2606.02992; DGAI, arXiv 2510.25401).
+
+FreshDiskANN's update cost is dominated by per-point graph work whose price
+depends on *which rows it touches*: an insert's beam search walks a
+neighborhood, its back-edges land on the nodes of that neighborhood, and the
+Patch phase pays one grouped prune per **distinct** back-edge target.  Points
+that arrive interleaved across the vector space scatter that work; points
+processed in proximity order collide onto the same rows, so
+
+  * a flush chunk's B beam searches expand overlapping frontiers,
+  * its B*R Delta pairs hit far fewer distinct targets (one amortized group
+    prune instead of one row per pair), and
+  * a merge's back-edges concentrate onto rows that are being rewritten
+    anyway (the just-inserted cluster mates), which the storage layer's
+    delta patch converts into fewer rewritten rows and bytes
+    (``storage.layout.patch_layout`` — the DGAI observation).
+
+``locality_order`` is the ordering primitive: a seeded sampled-medoid sort
+that is jit-friendly (fixed shapes, no host round-trip), deterministic for a
+fixed ``(vecs, valid, seed)``, and a true permutation — the same multiset of
+points goes in and comes out.  Consumers: ``system._flush_inserts`` (RW-tier
+flushes) and ``merge.streaming_merge(..., locality=True)`` (the Phase-2
+insert scan), both gated behind ``SystemConfig.locality_order``.
+
+Contract (docs/ARCHITECTURE.md, "Update-path locality"): reordering
+legitimately changes slot assignment and graph topology, so the acceptance
+bar is *recall equivalence* with the arrival-order path plus
+*bit-determinism* for a fixed input batch and seed — NOT bit-parity with the
+unordered path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def locality_order(vecs: jax.Array, valid: Optional[jax.Array] = None, *,
+                   n_clusters: int = 16, seed: int = 0,
+                   key: Optional[jax.Array] = None) -> jax.Array:
+    """Proximity-ordering permutation over a batch of vectors.
+
+    Samples ``min(n_clusters, B)`` medoid rows from the batch (seeded,
+    biased to valid rows), assigns every row to its nearest medoid, and
+    returns ``perm`` [B] int32 sorting rows by (cluster, distance-to-medoid,
+    original index) — cluster-mates become contiguous, nearest-to-medoid
+    first, with the original index as the stable tiebreak.  Invalid rows
+    (``valid`` False) sort last in original order.
+
+    ``seed`` is folded into a PRNG key here so the jitted body traces the
+    key as DATA — flushes and merges vary the seed every call, and a static
+    seed would recompile the program each time.  Callers already holding a
+    key (e.g. inside a larger traced program) pass ``key=`` instead.
+
+    Properties the tests pin (tests/test_locality.py):
+      * permutation — ``sort(perm) == arange(B)`` always;
+      * deterministic — same ``(vecs, valid, seed)`` -> same perm, bit for
+        bit (medoid sampling uses a fixed PRNG key, sorts are stable);
+      * fixed-shape — jit-compiles once per (B, d, n_clusters), for ANY
+        seed; no host round-trip, so it can run inside a larger jitted
+        program.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    if valid is None:
+        valid = jnp.ones((vecs.shape[0],), bool)
+    return _locality_order_impl(vecs, valid, key, n_clusters)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters",))
+def _locality_order_impl(vecs: jax.Array, valid: jax.Array, key: jax.Array,
+                         n_clusters: int) -> jax.Array:
+    B = vecs.shape[0]
+    k = max(1, min(n_clusters, B))
+    v = vecs.astype(jnp.float32)
+    # Seeded medoid sample, biased to valid rows.  The tiny floor keeps the
+    # categorical well-defined when nothing is valid (the perm then only
+    # orders padding, which callers drop).
+    w = jnp.where(valid, 1.0, 1e-9)
+    idx = jax.random.choice(key, B, shape=(k,), replace=True, p=w / w.sum())
+    med = v[idx]                                             # [k, d]
+    d = jnp.sum((v[:, None, :] - med[None, :, :]) ** 2, -1)  # [B, k]
+    cl = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dc = jnp.take_along_axis(d, cl[:, None], axis=1)[:, 0]
+    cl = jnp.where(valid, cl, jnp.int32(k))                  # invalid last
+    dc = jnp.where(valid, dc, jnp.inf)
+    # Two-pass stable sort == lexsort by (cluster major, distance minor,
+    # original index as the final tiebreak).
+    order = jnp.argsort(dc, stable=True)
+    perm = order[jnp.argsort(cl[order], stable=True)]
+    return perm.astype(jnp.int32)
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    """``inv`` with ``inv[perm[i]] == i`` — maps ordered positions back to
+    original row indices (e.g. un-permuting the merge's slot report)."""
+    return jnp.zeros_like(perm).at[perm].set(
+        jnp.arange(perm.shape[0], dtype=perm.dtype))
+
+
+def cluster_spans(perm: jax.Array, vecs: jax.Array, valid: jax.Array, *,
+                  n_clusters: int = 16, seed: int = 0) -> int:
+    """Number of cluster transitions along the ordered batch — a host-side
+    diagnostic (lower = better grouping; a perfect ordering has at most
+    ``n_clusters - 1`` transitions over the valid prefix)."""
+    import numpy as np
+    B = vecs.shape[0]
+    k = max(1, min(n_clusters, B))
+    v = jnp.asarray(vecs, jnp.float32)
+    w = jnp.where(jnp.asarray(valid, bool), 1.0, 1e-9)
+    idx = jax.random.choice(jax.random.PRNGKey(seed), B, shape=(k,),
+                            replace=True, p=w / w.sum())
+    d = jnp.sum((v[:, None, :] - v[idx][None, :, :]) ** 2, -1)
+    cl = np.asarray(jnp.argmin(d, axis=1))[np.asarray(perm)]
+    ok = np.asarray(valid, bool)[np.asarray(perm)]
+    cl = cl[ok]
+    return int((cl[1:] != cl[:-1]).sum()) if len(cl) > 1 else 0
+
+
+def next_bucket(n: int, *, floor: int = 16, cap: int | None = None) -> int:
+    """Round a dynamic affected-row count up to a power-of-two launch bucket.
+
+    The locality paths size their Patch-phase prune launches from the
+    *measured* distinct-target count; bucketing to powers of two (with a
+    floor) bounds the number of jit specializations while keeping the
+    launch proportional to real work instead of the worst case.
+    """
+    if n <= 0:
+        return 0
+    b = max(floor, 1 << (n - 1).bit_length())
+    return min(b, cap) if cap is not None else b

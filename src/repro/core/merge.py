@@ -42,6 +42,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import pq as pqm
 from .config import IndexConfig, PQConfig
@@ -50,6 +51,7 @@ from .delete import (consolidate_deletes, consolidate_deletes_codes,
 from .distance import INVALID
 from .insert import (apply_back_edges, apply_back_edges_codes,
                      compute_insert_edges)
+from .locality import locality_order, next_bucket
 from .lti import LTIState
 from .prune import SDCPrune, robust_prune_batch
 from .search import PQBackend, beam_search
@@ -58,6 +60,12 @@ from .search import PQBackend, beam_search
 # overflows — nodes with more deleted out-neighbors than the cap — are
 # counted into MergeStats.repair_cap_overflows.
 SDC_REPAIR_CAP = 8
+
+# Mirrors ``storage.layout.BLOCK_BYTES`` (the 4KB SSD-sector granularity of
+# topology.bin) without importing the storage tier into core: the locality
+# merge's slot placement groups new rows by this block size so the delta
+# patch dirties as few blocks as possible.
+TOPOLOGY_BLOCK_BYTES = 4096
 
 
 class MergeStats(NamedTuple):
@@ -69,6 +77,12 @@ class MergeStats(NamedTuple):
     #   expansion ball (deleted out-neighbors > SDC_REPAIR_CAP); always 0
     #   on the full-precision (use_sdc=False) path, whose expansion is
     #   uncapped.
+    n_backedge_targets: jax.Array    # DISTINCT Delta targets the Patch phase
+    #   touched (rows with real work; <= n_backedge_pairs)
+    n_prune_rows: jax.Array          # prune-engine rows the Patch phase
+    #   LAUNCHED: the fixed-shape worst case min(P, N) on the arrival-order
+    #   paths, the sum of measured power-of-two buckets on the locality
+    #   path — the number the locality ordering exists to shrink.
 
 
 def streaming_merge(
@@ -83,12 +97,30 @@ def streaming_merge(
     block: int = 1024,
     use_sdc: bool = False,
     repair_mode: str | None = None,
+    locality: bool = False,
+    locality_seed: int = 0,
 ) -> tuple[LTIState, MergeStats]:
     """With ``use_sdc`` every prune distance comes straight from the PQ
     codes via symmetric-distance tables (numerically identical to pruning
     on decoded reconstructions, ~16x less HBM traffic, no decoded-table
-    buffer) — EXPERIMENTS.md §Perf iteration 1 on the merge cell."""
+    buffer) — EXPERIMENTS.md §Perf iteration 1 on the merge cell.
+
+    ``locality=True`` runs Phase 2 on the locality schedule
+    (``_streaming_merge_ordered``): staged rows are proximity-ordered by
+    ``core.locality.locality_order`` (seeded by ``locality_seed``) and
+    inserted as EAGER cluster-ordered chunks — each chunk's Delta is applied
+    before the next chunk searches, so cluster mates wire to each other and
+    the back-edge patch concentrates onto the just-inserted rows.  Slot
+    assignment and topology legitimately differ from the arrival-order
+    merge; the contract is recall equivalence + bit-determinism for a fixed
+    (inputs, seed), not bit-parity (docs/ARCHITECTURE.md, "Update-path
+    locality")."""
     mode = cfg.repair_mode if repair_mode is None else repair_mode
+    if locality:
+        return _streaming_merge_ordered(
+            lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
+            insert_chunk=insert_chunk, block=block, use_sdc=use_sdc,
+            mode=mode, seed=locality_seed)
     if mode == "local":
         return _streaming_merge_local(
             lti, new_vecs, new_valid, delete_mask, cfg, pq_cfg,
@@ -269,10 +301,235 @@ def _insert_patch_phases(g, old_codes, codebook, decoded, new_vecs, new_valid,
             alpha=cfg.alpha, R=cfg.R, chunk=block, use_kernel=use_kernel)
 
     g = g._replace(adjacency=adjacency)
+    # Distinct Delta targets (device-side: sort + neighbor-compare).  The
+    # arrival-order Patch launches the fixed-shape worst case min(P, N)
+    # prune rows regardless of how many targets actually collide — the gap
+    # between the two numbers is the headroom the locality path cashes in.
+    skey = jnp.sort(jnp.where(pairs_j >= 0, pairs_j, jnp.int32(g.capacity)))
+    live = skey < g.capacity
+    distinct = (live & jnp.concatenate(
+        [jnp.ones((1,), bool), skey[1:] != skey[:-1]])).sum()
     stats = MergeStats(n_del, (slots >= 0).sum(),
                        (pairs_j >= 0).sum(), slots,
-                       jnp.asarray(overflow, jnp.int32))
+                       jnp.asarray(overflow, jnp.int32),
+                       distinct.astype(jnp.int32),
+                       jnp.int32(min(pairs_j.shape[0], g.capacity)))
     return LTIState(g, codes, codebook), stats
+
+
+def _streaming_merge_ordered(lti, new_vecs, new_valid, delete_mask, cfg,
+                             pq_cfg, *, insert_chunk, block, use_sdc, mode,
+                             seed):
+    """Locality-schedule merge: eager Phase 1 (honoring ``mode``), then
+    Phase 2 as cluster-ordered chunks inserted EAGERLY — each chunk's Delta
+    is applied before the next chunk searches.
+
+    Why eager: on the arrival-order paths new points have no in-edges until
+    the single Phase-3 patch, so chunks cannot see each other and reordering
+    alone changes nothing but slot labels.  With per-chunk patching, a
+    chunk's searches DO reach its earlier-inserted cluster mates, so its
+    out-edges and back-edges land on the new rows (being rewritten anyway)
+    instead of scattering across the old graph — ``adjacency_delta_mask``
+    shrinks, and ``patch_layout`` rewrites measurably fewer rows/bytes.
+    Each chunk's Delta prune also launches at a measured power-of-two
+    bucket (host-counted distinct targets -> ``affected_cap``) instead of
+    the fixed-shape worst case.
+
+    The host round-trip per chunk (distinct-target count) is the price of
+    the dynamic launch size; ``MergeStats.n_prune_rows`` records the
+    realized total so benchmarks can weigh it against the arrival-order
+    worst case.  Deterministic for fixed (inputs, seed): the ordering is
+    seeded, chunking is sequential, and every launch size is a pure
+    function of the data."""
+    g = lti.graph
+    codebook = lti.codebook
+
+    # ---- Phase 1: Delete (identical to the arrival-order paths) -----------
+    n_del = (g.active & delete_mask).sum()
+    g = g._replace(deleted=g.deleted | (delete_mask & g.active))
+    overflow = jnp.int32(0)
+    tables = decoded = None
+    if use_sdc:
+        tables = pqm.sdc_tables(codebook)
+        overflow = repair_cap_overflow(
+            g.adjacency, g.deleted, g.active & ~g.deleted, SDC_REPAIR_CAP)
+        g = consolidate_deletes_codes(g, cfg, lti.codes, tables,
+                                      block=block, cap=SDC_REPAIR_CAP,
+                                      mode=mode)
+    else:
+        decoded = pqm.decode(codebook, lti.codes, pq_cfg).astype(jnp.float32)
+        g = consolidate_deletes(g, cfg, block=block, prune_table=decoded,
+                                mode=mode)
+
+    # ---- Phase 2a: order + allocate + store (one jitted stage) ------------
+    # Rows the Delete phase already rewrote (freed slots go all-INVALID,
+    # repaired neighbors change) mark their 4KB topology blocks dirty for
+    # this merge's patch: placing new points there costs ZERO extra block
+    # writes (the DGAI placement observation).
+    phase1_dirty = adjacency_delta_mask(lti.graph.adjacency, g.adjacency)
+    g, codes, decoded, slots_ord, ord_vecs, perm = _locality_stage(
+        g, lti.codes, codebook, decoded, new_vecs, new_valid, phase1_dirty,
+        jax.random.PRNGKey(seed), cfg, pq_cfg, use_sdc=use_sdc)
+    usable = g.active & ~g.deleted
+
+    Nn = new_vecs.shape[0]
+    n_chunks = max(1, -(-Nn // insert_chunk))
+    pad = n_chunks * insert_chunk - Nn
+    c_slots = jnp.concatenate(
+        [slots_ord, jnp.full((pad,), INVALID, jnp.int32)]
+    ).reshape(n_chunks, insert_chunk)
+    c_vecs = jnp.concatenate(
+        [ord_vecs.astype(jnp.float32),
+         jnp.zeros((pad, new_vecs.shape[1]), jnp.float32)]
+    ).reshape(n_chunks, insert_chunk, -1)
+
+    # ---- Phase 2b/3: eager chunk loop, per-chunk Delta patch --------------
+    adjacency = g.adjacency
+    n_pairs = n_targets = n_rows = 0
+    cap_max = min(insert_chunk * cfg.R, g.capacity)
+    for c in range(n_chunks):
+        adjacency, pj, pp = _ordered_insert_chunk(
+            adjacency, g.active, g.start, usable, codes, codebook, tables,
+            decoded, c_slots[c], c_vecs[c], cfg, use_sdc=use_sdc)
+        pj_h = np.asarray(pj)
+        d_c = int(np.unique(pj_h[pj_h >= 0]).size)
+        n_pairs += int((pj_h >= 0).sum())
+        if d_c == 0:
+            continue
+        bucket = next_bucket(d_c, cap=cap_max)
+        n_targets += d_c
+        n_rows += bucket
+        adjacency = _ordered_patch(
+            adjacency, codes, tables, decoded, usable, pj, pp, cfg,
+            bucket=bucket, block=block, use_sdc=use_sdc)
+    g = g._replace(adjacency=adjacency)
+
+    # Report slots in ORIGINAL row order (perm is a permutation, so the
+    # scatter covers every entry): staged row i landed in slot
+    # slots_orig[i], whatever position the ordering gave it.
+    slots_orig = jnp.full((Nn,), INVALID, jnp.int32).at[perm].set(slots_ord)
+    stats = MergeStats(n_del, (slots_ord >= 0).sum(), jnp.int32(n_pairs),
+                       slots_orig, jnp.asarray(overflow, jnp.int32),
+                       jnp.int32(n_targets), jnp.int32(n_rows))
+    return LTIState(g, codes, codebook), stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pq_cfg", "use_sdc"))
+def _locality_stage(g, old_codes, codebook, decoded, new_vecs, new_valid,
+                    phase1_dirty, key, cfg, pq_cfg, *, use_sdc):
+    """Proximity-order the staged rows, allocate slots along the ordering,
+    and store vectors/codes/flags — the ordered twin of the staging prologue
+    in ``_insert_patch_phases``.
+
+    Slot placement is locality-aware (two DGAI-style effects on the delta
+    patch): free slots inside ALREADY-DIRTY 4KB topology blocks
+    (``phase1_dirty`` rows — this merge's delete repairs and freed slots)
+    are consumed first, since new rows there ride block writes the patch
+    must issue anyway; the remainder fills fresh blocks in ascending order.
+    Rows consume slots in cluster order, so cluster mates land CONTIGUOUS —
+    which a LATER merge inserting near the same clusters cashes in, its
+    back-edge targets then occupying few distinct blocks.  The count of
+    allocated slots (and validity masking) matches the arrival-order merge;
+    only the placement differs."""
+    k = cfg.locality_clusters or 16
+    perm = locality_order(new_vecs.astype(jnp.float32), new_valid,
+                          n_clusters=k, key=key)
+    ord_vecs = new_vecs[perm]
+    ord_valid = new_valid[perm]
+    Nn = ord_vecs.shape[0]
+    cap = g.capacity
+    free = ~g.active
+    rpb = max(1, TOPOLOGY_BLOCK_BYTES // (cfg.R * 4))
+    blk = jnp.arange(cap, dtype=jnp.int32) // rpb
+    n_blocks = -(-cap // rpb)
+    block_dirty = jnp.zeros((n_blocks,), jnp.int32).at[blk].add(
+        phase1_dirty.astype(jnp.int32)) > 0
+    # Rank: free slots in dirty blocks ascending, then free slots in clean
+    # blocks ascending, then occupied slots (never taken — masked below).
+    arange = jnp.arange(cap, dtype=jnp.int32)
+    rank = jnp.where(block_dirty[blk], arange, cap + arange)
+    rank = jnp.where(free, rank, 2 * cap)
+    slots = jnp.argsort(rank)[:Nn].astype(jnp.int32)
+    slots = jnp.where(ord_valid & free[slots], slots, INVALID)
+    wslots = jnp.where(slots >= 0, slots, g.capacity)
+    new_codes = pqm.encode(codebook, ord_vecs, pq_cfg)
+    codes = old_codes.at[wslots].set(new_codes, mode="drop")
+    vectors = g.vectors.at[wslots].set(
+        ord_vecs.astype(g.vectors.dtype), mode="drop")
+    active = g.active.at[wslots].set(True, mode="drop")
+    if not use_sdc:
+        decoded = decoded.at[wslots].set(
+            pqm.decode(codebook, new_codes, pq_cfg), mode="drop")
+    first_new = jnp.where((slots >= 0).any(),
+                          slots[jnp.argmax(slots >= 0)], INVALID)
+    start = jnp.where(g.start < 0, first_new, g.start).astype(jnp.int32)
+    g = g._replace(vectors=vectors, active=active, start=start,
+                   n_total=jnp.maximum(
+                       g.n_total,
+                       jnp.max(jnp.where(slots >= 0, slots, -1)) + 1))
+    return g, codes, decoded, slots, ord_vecs, perm
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_sdc"))
+def _ordered_insert_chunk(adjacency, active, start, usable, codes, codebook,
+                          tables, decoded, sl, vv, cfg, *, use_sdc):
+    """One locality-schedule insert chunk: search + prune + scatter the new
+    rows, returning the chunk's Delta pair list.  The traced body mirrors
+    ``insert_block`` inside ``_insert_patch_phases`` — the difference is
+    purely the call schedule (eager, so this chunk sees every previously
+    patched chunk)."""
+    backend = PQBackend(codes, codebook)
+    use_kernel = cfg.kernel_enabled()
+    N = adjacency.shape[0]
+    if use_sdc:
+        res = beam_search(adjacency, active, start, vv, backend,
+                          L=cfg.L_build,
+                          max_visits=cfg.visits_bound(cfg.L_build),
+                          beam_width=cfg.beam_width, use_kernel=use_kernel)
+        cand = jnp.concatenate([res.visited, res.ids], axis=1)
+        safe = jnp.maximum(cand, 0)
+        ok = (cand >= 0) & usable[safe] & (cand != sl[:, None])
+        d_p = jax.vmap(
+            lambda c, vec: pqm.adc(codes[c], pqm.lut(codebook, vec))
+        )(safe, vv)
+        new_adj = robust_prune_batch(
+            SDCPrune(codes, tables), cand, ok, alpha=cfg.alpha,
+            R=cfg.R, use_kernel=use_kernel, d_p=d_p).ids
+        src = jnp.broadcast_to(sl[:, None], new_adj.shape).reshape(-1)
+    else:
+        edges = compute_insert_edges(
+            adjacency, active, usable, start, decoded, sl, vv, backend,
+            L=cfg.L_build, max_visits=cfg.visits_bound(cfg.L_build),
+            alpha=cfg.alpha, R=cfg.R, beam_width=cfg.beam_width,
+            use_kernel=use_kernel)
+        new_adj = edges.new_adj
+        src = edges.pairs_p
+    valid = sl >= 0
+    new_adj = jnp.where(valid[:, None], new_adj, INVALID)
+    adjacency = adjacency.at[jnp.where(valid, sl, N)].set(
+        new_adj, mode="drop")
+    pj = new_adj.reshape(-1)
+    pp = jnp.where(pj >= 0, src, INVALID)
+    return adjacency, pj, pp
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bucket", "block",
+                                             "use_sdc"))
+def _ordered_patch(adjacency, codes, tables, decoded, usable, pj, pp, cfg, *,
+                   bucket, block, use_sdc):
+    """Per-chunk Delta application at a measured launch size: ``bucket``
+    (static, power of two, >= the chunk's distinct target count) bounds the
+    grouped prune to the rows that actually have work."""
+    use_kernel = cfg.kernel_enabled()
+    if use_sdc:
+        return apply_back_edges_codes(
+            adjacency, codes, tables, usable, pj, pp,
+            alpha=cfg.alpha, R=cfg.R, chunk=block, use_kernel=use_kernel,
+            affected_cap=bucket)
+    return apply_back_edges(
+        adjacency, decoded, usable, pj, pp,
+        alpha=cfg.alpha, R=cfg.R, chunk=block, use_kernel=use_kernel,
+        affected_cap=bucket)
 
 
 @jax.jit

@@ -52,6 +52,7 @@ from . import pq as pqm
 from .config import IndexConfig, PQConfig, SystemConfig
 from .distance import INVALID
 from .graph import GraphState, empty_graph, pad_graph, stack_lanes
+from .locality import locality_order, next_bucket
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
 from .reach import unreachable_fraction
@@ -137,6 +138,9 @@ class SystemStats:
     io_bytes_read: int = 0      # topology.bin bytes read (whole blocks)
     storage_rows_patched: int = 0    # adjacency rows rewritten by the
     #   DGAI-style delta patches StreamingMerge issues
+    storage_blocks_patched: int = 0  # DISTINCT 4KB topology blocks those
+    #   rows live in — the real SSD write granularity; what the locality
+    #   merge's dirty-block-first slot placement shrinks
     storage_bytes_written: int = 0   # bytes those patches (and full layout
     #   writes) put on disk
     # Localized delete repair + reachability monitor (docs/ARCHITECTURE.md,
@@ -155,6 +159,18 @@ class SystemStats:
     #   cfg.reach_escalate_frac, forcing the next Delete phase global
     unreachable_frac: float = 0.0  # gauge: latest probe's estimate of the
     #   unreachable-live-point fraction (0.0 until the first probe)
+    # Update-path locality (core/locality.py — docs/ARCHITECTURE.md,
+    # "Update-path locality").  Counters accumulate whether
+    # cfg.locality_order is on or off, so on/off runs are directly
+    # comparable: targets counts DISTINCT back-edge rows with real work,
+    # prune_rows counts rows the grouped Delta prune actually LAUNCHED
+    # (worst-case min(P, N) on the arrival-order paths, measured
+    # power-of-two buckets on the locality paths).
+    flushes: int = 0                 # RW-tier buffer flushes
+    flush_backedge_targets: int = 0  # distinct Delta targets across flushes
+    flush_prune_rows: int = 0        # prune rows launched by flush Deltas
+    merge_backedge_targets: int = 0  # distinct Delta targets across merges
+    merge_prune_rows: int = 0        # prune rows launched by merge Patches
     # Continuous-batching serving front end (serving/scheduler.py —
     # docs/SERVING.md, "The serving loop").  Counters are owned here so one
     # stats surface covers queue, batch and dispatch behavior; the
@@ -176,7 +192,11 @@ class SystemStats:
     # Latency reservoirs (Vitter's algorithm R, see ``Reservoir``): uniform
     # samples in O(LATENCY_RESERVOIR) memory however long we run, each
     # reporting p50/p99 via ``.snapshot()``.
-    #   insert_latency  — per insert() call (WAL + buffer + flush share)
+    #   insert_latency  — per insert() call (WAL append + buffer append
+    #                     ONLY; the amortized flush is sampled separately,
+    #                     so per-insert p99 reflects the steady-state cost)
+    #   flush_latency   — per buffer flush (device-side insert of one
+    #                     drained buffer), sampled once per flush
     #   search_latency  — per dispatched search micro-batch (device program
     #                     wall time, recorded inside _search_dispatch)
     #   serve_latency   — per scheduled request, arrival -> completion on
@@ -186,6 +206,8 @@ class SystemStats:
         default_factory=lambda: Reservoir(seed=1), repr=False)
     serve_latency: Reservoir = field(
         default_factory=lambda: Reservoir(seed=2), repr=False)
+    flush_latency: Reservoir = field(
+        default_factory=lambda: Reservoir(seed=3), repr=False)
 
     def record_latency(self, seconds: float) -> None:
         self.insert_latency.record(seconds)
@@ -207,6 +229,8 @@ class SystemStats:
             "search": self.search_latency.snapshot(),
             "serve": self.serve_latency.snapshot(),
             "insert": self.insert_latency.snapshot(),
+            "flush": self.flush_latency.snapshot(),
+            "flushes": self.flushes,
             "scheduled_requests": self.scheduled_requests,
             "shed_requests": self.shed_requests,
             "batches_dispatched": self.batches_dispatched,
@@ -252,11 +276,20 @@ class FreshDiskANN:
         self.stats = SystemStats()
         self._merge_lock = threading.Lock()
         self._ro_lock = threading.Lock()     # guards self.ro mutations
-        # Guards the insert buffer and RW-tier mutations: the insert path
-        # and a background merge's snapshot (save -> _flush_inserts) would
-        # otherwise race on the buffer swap and on rw slot allocation.
-        # RLock: insert -> _flush_inserts and save -> _flush_inserts nest.
+        # Guards the insert buffer and RW-tier BOOKKEEPING (buffer append /
+        # swap, DeleteList edits, ext-id maps).  The device-side flush
+        # compute runs OUTSIDE it (under _flush_lock only), so concurrent
+        # insert/delete/search calls are never blocked for a whole flush.
+        # RLock: save -> _flush_inserts nests under it.
         self._insert_lock = threading.RLock()
+        # Serializes flushes end to end: buffer swap + device compute +
+        # RW-tier publish.  Anything that must observe a QUIESCED flush
+        # path (save/snapshot, rollover freeze) takes it first.  Canonical
+        # lock order everywhere: _flush_lock -> _insert_lock -> _ro_lock —
+        # never acquire a lock to the LEFT of one you hold.  RLock:
+        # rollover/save -> _flush_inserts nest.
+        self._flush_lock = threading.RLock()
+        self._flush_seq = 0                  # locality-order seed per flush
         self._merge_inflight = 0             # staged points being merged now
         self._merge_thread: Optional[threading.Thread] = None
         self._force_global_repair = False    # set when a reachability probe
@@ -314,7 +347,15 @@ class FreshDiskANN:
 
     # ------------------------------------------------------------------ API
     def insert(self, ext_id: int, vec: np.ndarray) -> None:
-        """Route to the RW-TempIndex (paper §5.2); batched flush."""
+        """Route to the RW-TempIndex (paper §5.2); batched flush.
+
+        The lock hold covers only the WAL append + buffer append; the
+        device-side flush (when this insert fills the batch) runs after the
+        lock is RELEASED, under ``_flush_lock``, so concurrent
+        insert/delete/search calls are not blocked for a whole flush.
+        ``insert_latency`` therefore samples the bookkeeping cost only —
+        the amortized flush lands in ``flush_latency``, once per flush.
+        """
         t0 = time.perf_counter()
         with self._insert_lock:
             if self.wal:
@@ -326,10 +367,11 @@ class FreshDiskANN:
             if int(ext_id) in self.deleted_ext:
                 self.deleted_ext.discard(int(ext_id))
                 self._delete_epoch += 1  # drop-mask caches must see the revive
-            if len(self._insert_buf_id) >= self.cfg.insert_batch:
-                self._flush_inserts()
+            full = len(self._insert_buf_id) >= self.cfg.insert_batch
         self.stats.inserts += 1
         self.stats.record_latency(time.perf_counter() - t0)
+        if full:
+            self._flush_inserts()
         self._maybe_rollover()
 
     def delete(self, ext_id: int) -> None:
@@ -781,16 +823,65 @@ class FreshDiskANN:
         return res_i.astype(np.int64), res_d.astype(np.float32)
 
     def _flush_inserts(self) -> None:
-        with self._insert_lock:
-            self._flush_inserts_locked()
+        """Land the insert buffer in the RW tier.
 
-    def _flush_inserts_locked(self) -> None:
+        Locking: the buffer swap is the only step under ``_insert_lock``;
+        the device-side compute + publish run under ``_flush_lock`` alone
+        (canonical order flush -> insert), so a flush in flight never
+        blocks concurrent insert/delete/search bookkeeping.  The unlocked
+        emptiness peek is benign: a concurrently appended point is landed
+        by ITS OWN insert's flush (or the next rendezvous), and the swap
+        re-checks under the lock.
+
+        Delete-vs-flight invariant: a buffered id is never in
+        ``deleted_ext`` (``insert`` revives at append time, ``delete``
+        drops buffered copies), so the publish loop below must NOT touch
+        the DeleteList — a ``delete`` issued while the flush is in flight
+        lands in ``deleted_ext`` and has to STAY there, masking the row
+        this flush publishes (tests/test_system.py pins it).
+        """
         if not self._insert_buf_id:
             return
+        with self._flush_lock:
+            with self._insert_lock:
+                ids = self._insert_buf_id
+                vecs = self._insert_buf_v
+                if not ids:
+                    return
+                self._insert_buf_id, self._insert_buf_v = [], []
+            t0 = time.perf_counter()
+            self._flush_compute(ids, vecs)
+            self.stats.flushes += 1
+            self.stats.flush_latency.record(time.perf_counter() - t0)
+
+    def _flush_compute(self, ids: list, vecs: list) -> None:
+        """Device-side flush of one drained buffer (caller holds
+        ``_flush_lock``; ``_insert_lock`` must NOT be required here).
+
+        With ``cfg.locality_order`` the whole drained buffer is
+        proximity-ordered first (seeded per flush), then every chunk runs
+        the split insert (``mem.insert_edges_stage`` +
+        ``mem.insert_apply_delta``): cluster mates share search frontiers
+        and their back-edge pairs collide onto few DISTINCT targets, so the
+        Delta prune launches at a measured power-of-two bucket instead of
+        the worst case.  Arrival order runs the same split with
+        ``affected_cap=None`` — bit-identical to the historical fused
+        ``mem.insert`` (tests/test_locality.py) — so the
+        targets-vs-launched counters accumulate comparably either way.
+
+        Publish order per chunk: ext-id rows BEFORE the state swap, so a
+        search capturing ``t.state`` mid-flush never maps a live row
+        through a stale -1 entry.
+        """
         B = self.cfg.insert_batch
-        ids = self._insert_buf_id
-        vecs = self._insert_buf_v
-        self._insert_buf_id, self._insert_buf_v = [], []
+        if self.cfg.locality_order and len(ids) > 1:
+            perm = np.asarray(locality_order(
+                jnp.asarray(np.stack(vecs)),
+                n_clusters=self.cfg.index.locality_clusters or 16,
+                seed=self._flush_seq))
+            ids = [ids[i] for i in perm]
+            vecs = [vecs[i] for i in perm]
+        self._flush_seq += 1
         t = self.rw
         for lo in range(0, len(ids), B):
             chunk_i = ids[lo:lo + B]
@@ -800,13 +891,12 @@ class FreshDiskANN:
                 # Seed the empty temp graph: first point becomes the start.
                 st = t.state
                 v0 = jnp.asarray(chunk_v[0], st.vectors.dtype)
+                t.ext_ids[0] = chunk_i[0]
                 t.state = st._replace(
                     vectors=st.vectors.at[0].set(v0),
                     active=st.active.at[0].set(True),
                     start=jnp.int32(0), n_total=jnp.int32(1))
-                t.ext_ids[0] = chunk_i[0]
                 self._ext_loc[chunk_i[0]] = ("rw", 0)
-                self.deleted_ext.discard(chunk_i[0])
                 chunk_i, chunk_v, slots = chunk_i[1:], chunk_v[1:], slots[1:] + 0
                 t.n = 1
                 if not chunk_i:
@@ -816,18 +906,37 @@ class FreshDiskANN:
                 [slots, np.full(pad, INVALID, np.int32)])
             pvecs = np.zeros((B, self.cfg.index.dim), np.float32)
             pvecs[:len(chunk_v)] = np.stack(chunk_v)
-            t.state = mem.insert(t.state, jnp.asarray(pslots),
-                                 jnp.asarray(pvecs), self.temp_cfg)
+            st, pj, pp = mem.insert_edges_stage(
+                t.state, jnp.asarray(pslots), jnp.asarray(pvecs),
+                self.temp_cfg)
+            pj_h = np.asarray(pj)
+            d_c = int(np.unique(pj_h[pj_h >= 0]).size)
+            self.stats.flush_backedge_targets += d_c
+            if self.cfg.locality_order:
+                if d_c:
+                    bucket = next_bucket(
+                        d_c, cap=min(pj_h.size, self.cfg.temp_capacity))
+                    self.stats.flush_prune_rows += bucket
+                    st = mem.insert_apply_delta(st, pj, pp, self.temp_cfg,
+                                                affected_cap=bucket)
+            else:
+                self.stats.flush_prune_rows += min(
+                    pj_h.size, self.cfg.temp_capacity)
+                st = mem.insert_apply_delta(st, pj, pp, self.temp_cfg)
             for s, e in zip(slots, chunk_i):
                 t.ext_ids[s] = e
+            t.state = st
+            for s, e in zip(slots, chunk_i):
                 self._ext_loc[e] = ("rw", int(s))
-                self.deleted_ext.discard(e)  # re-insert revives the id
             t.n += len(chunk_i)
 
     def _maybe_rollover(self) -> None:
-        with self._insert_lock:
+        # flush_lock first (canonical order): the freeze must observe a
+        # quiesced flush path, or the RW tier could be swapped out from
+        # under an in-flight flush's publish loop.
+        with self._flush_lock, self._insert_lock:
             if self.rw.n >= self.cfg.ro_snapshot_points:
-                self._flush_inserts_locked()
+                self._flush_inserts()
                 frozen = self.rw
                 with self._ro_lock:
                     self.ro.append(frozen)
@@ -930,9 +1039,17 @@ class FreshDiskANN:
             self.lti, jnp.asarray(vecs), jnp.asarray(valid),
             jnp.asarray(dmask), icfg, self.cfg.pq,
             insert_chunk=self.cfg.insert_batch, block=self.cfg.merge_block,
-            repair_mode=repair_mode)
+            repair_mode=repair_mode,
+            # Locality merge (docs/ARCHITECTURE.md, "Update-path
+            # locality"): seeded by the merge ordinal so every merge is
+            # deterministic for its inputs yet successive merges don't
+            # reuse one medoid sample.
+            locality=self.cfg.locality_order,
+            locality_seed=self.stats.merges)
         jax.block_until_ready(new_lti.graph.adjacency)
         self.stats.repair_cap_overflows += int(stats.repair_cap_overflows)
+        self.stats.merge_backedge_targets += int(stats.n_backedge_targets)
+        self.stats.merge_prune_rows += int(stats.n_prune_rows)
         if repair_mode == "local":
             self.stats.local_repairs += 1
         else:
@@ -991,8 +1108,10 @@ class FreshDiskANN:
                 # truncation would otherwise be durable nowhere.  Restart
                 # goes THROUGH the live handle: truncating the file under an
                 # open positional handle would leave a zero-hole at its
-                # stale offset on the next append.
-                with self._insert_lock:
+                # stale offset on the next append.  _flush_lock is taken
+                # FIRST (canonical order: flush -> insert) because the
+                # snapshot's own flush nests under it.
+                with self._flush_lock, self._insert_lock:
                     self._save_locked(
                         os.path.join(self.cfg.snapshot_dir,
                                      f"merge_{self.stats.merges + 1}"))
@@ -1130,6 +1249,7 @@ class FreshDiskANN:
             ps = slay.patch_layout(path, lti.graph, codes=lti.codes,
                                    ext_ids=table, adj_changed=adj_changed)
             self.stats.storage_rows_patched += ps.adj_rows
+            self.stats.storage_blocks_patched += ps.adj_blocks
             self.stats.storage_bytes_written += ps.bytes_written
         else:
             lay = slay.write_layout(path, lti.graph, codes=lti.codes,
@@ -1220,11 +1340,16 @@ class FreshDiskANN:
 
     # ------------------------------------------------------------ snapshots
     def save(self, path: str) -> None:
-        with self._insert_lock:   # freeze buffer + RW tier while we snapshot
+        # Freeze the whole update path while we snapshot: flush first
+        # (canonical order) so no flush is in flight, then the buffer/RW
+        # bookkeeping.
+        with self._flush_lock, self._insert_lock:
             self._save_locked(path)
 
     def _save_locked(self, path: str) -> None:
-        self._flush_inserts_locked()  # buffered inserts must land in temps
+        # Caller holds _flush_lock + _insert_lock; both are RLocks, so the
+        # nested flush re-enters them.
+        self._flush_inserts()  # buffered inserts must land in temps
         os.makedirs(path, exist_ok=True)
         if self.cfg.storage_dir:
             # Decoupled snapshot: the LTI lands as a storage layout

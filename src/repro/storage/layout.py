@@ -60,6 +60,10 @@ BLOCK_BYTES = 4096
 class PatchStats:
     """What a delta patch actually wrote (lands in ``SystemStats``)."""
     adj_rows: int = 0
+    adj_blocks: int = 0  # DISTINCT 4KB topology blocks those rows live in —
+    #   the real SSD-write granularity.  Locality-ordered merges concentrate
+    #   changed rows, so adj_blocks shrinks faster than adj_rows
+    #   (BENCH_io_cost.json's storage-delta sweep measures both).
     vec_rows: int = 0
     code_rows: int = 0
     bytes_written: int = 0
@@ -273,9 +277,12 @@ def patch_layout(path: str, graph, *, codes=None, ext_ids=None,
             adj_changed = np.asarray(adj_changed, bool)
         vec_changed = np.any(np.asarray(lay.vectors) != vecs, axis=1)
         stats = PatchStats(generation=lay.generation + 1)
-        for i in np.nonzero(adj_changed)[0]:
+        changed_rows = np.nonzero(adj_changed)[0]
+        for i in changed_rows:
             lay.adjacency[i] = adj[i]
         stats.adj_rows = int(adj_changed.sum())
+        stats.adj_blocks = int(np.unique(changed_rows
+                                         // lay.block_rows).size)
         stats.bytes_written += stats.adj_rows * lay.row_bytes
         for i in np.nonzero(vec_changed)[0]:
             lay.vectors[i] = vecs[i]

@@ -197,6 +197,10 @@ def test_patch_topology_only_writes_no_vector_bytes(lti, tmp_path):
     assert ps.adj_rows == 2
     assert ps.vec_rows == 0 and ps.code_rows == 0
     assert ps.bytes_written == 2 * lay.row_bytes
+    # Block counter: rows 7 and 123 live in distinct 4KB topology blocks
+    # at this row size — the SSD-granular cost the locality merge shrinks.
+    assert ps.adj_blocks == np.unique(
+        np.asarray([7, 123]) // lay.block_rows).size
     re = open_layout(str(tmp_path / "lay"))
     np.testing.assert_array_equal(np.asarray(re.adjacency), adj)
     assert re.generation == 1                     # bumped LAST
@@ -208,6 +212,7 @@ def test_patch_noop_writes_nothing(lti, tmp_path):
     lay.close()
     ps = patch_layout(str(tmp_path / "lay"), lti.graph, codes=lti.codes)
     assert ps.adj_rows == 0 and ps.vec_rows == 0 and ps.code_rows == 0
+    assert ps.adj_blocks == 0
     assert ps.bytes_written == 0
 
 

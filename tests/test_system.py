@@ -178,3 +178,98 @@ def test_background_merge_concurrent_search(points, queries):
     sys_.wait_merge()
     assert sys_.stats.merges >= 1
     assert (np.asarray(ids) >= -1).all()
+
+
+# --------------------------------------------------- flush-path concurrency
+# The narrowed _insert_lock critical section (insert() holds it only for
+# WAL + buffer bookkeeping; the device-side flush runs under _flush_lock
+# after release) and the split insert/flush latency accounting.
+
+def test_delete_during_inflight_flush_sticks(points, monkeypatch):
+    """A delete issued while its point's flush is in flight must STICK:
+    the flush publish loop may not touch the DeleteList (the buffered id
+    was revived at append time, so any deleted_ext entry it would discard
+    belongs to a LATER delete)."""
+    import threading
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    started, release = threading.Event(), threading.Event()
+    inner = sys_._flush_compute
+
+    def gated(ids, vecs):
+        started.set()
+        assert release.wait(timeout=30)
+        inner(ids, vecs)
+
+    monkeypatch.setattr(sys_, "_flush_compute", gated)
+    victim = 3000
+
+    def filler():                       # fills the batch -> triggers flush
+        for i in range(sys_.cfg.insert_batch):
+            sys_.insert(victim + i, points[300 + i])
+
+    t = threading.Thread(target=filler)
+    t.start()
+    assert started.wait(timeout=30)
+    # Flush is mid-compute; insert()/delete() bookkeeping must not block on
+    # it (the narrowed lock), and the delete must survive the publish.
+    sys_.delete(victim)
+    release.set()
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert victim in sys_.deleted_ext
+    ids, _ = sys_.search(points[300:301], k=3)
+    assert victim not in np.asarray(ids)
+    ids2, _ = sys_.search(points[301:302], k=3)
+    assert victim + 1 in np.asarray(ids2)  # the rest of the batch flushed
+
+
+def test_flush_latency_sampled_once_per_flush(points, monkeypatch):
+    """insert_latency samples bookkeeping per insert; flush_latency samples
+    the amortized device flush once per flush, and the slow part never
+    bleeds into the per-insert numbers."""
+    import time as _time
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    inner = sys_._flush_compute
+    monkeypatch.setattr(
+        sys_, "_flush_compute",
+        lambda ids, vecs: (_time.sleep(0.25), inner(ids, vecs)))
+    n = sys_.cfg.insert_batch * 2
+    for i in range(n):
+        sys_.insert(4000 + i, points[300 + i])
+    snap = sys_.stats.serving_snapshot()
+    assert sys_.stats.flushes == 2
+    assert snap["flush"]["n"] == 2
+    assert snap["flush"]["p50"] >= 0.25
+    assert sys_.stats.insert_latency.seen == n
+    assert max(sys_.stats.insert_latency.sample) < 0.25
+
+
+def test_concurrent_insert_delete_search_no_deadlock(points):
+    """Mixed traffic across threads with the narrowed locks: everything
+    completes (no flush->insert->ro lock inversion) and accounting adds
+    up."""
+    import threading
+    sys_ = bootstrap_system(points[:300], np.arange(300), _sys_cfg())
+    errs = []
+
+    def worker(base):
+        try:
+            for i in range(40):
+                sys_.insert(base + i, points[(base + i) % 900])
+                if i % 7 == 0:
+                    sys_.delete(base + i)
+                if i % 11 == 0:
+                    sys_.search(points[i:i + 2], k=3)
+        except Exception as e:                       # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(5000 + 100 * w,))
+          for w in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errs and all(not t.is_alive() for t in ts)
+    assert sys_.stats.inserts == 160 and sys_.stats.deletes == 24
+    sys_._flush_inserts()
+    assert sys_.size == 300 + 160 - 24
