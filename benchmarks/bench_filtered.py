@@ -1,0 +1,151 @@
+"""Filtered & multi-tenant search benchmark (BENCH_filtered.json).
+
+Three sweeps, all oracle-anchored against brute force over the matching
+subset:
+
+  * selectivity sweep — filtered recall@k and QPS at label selectivity
+    {1.0, 0.5, 0.1, 0.01} on one labeled system, next to the unfiltered
+    baseline (the filter is one extra AND on the cached drop mask, so the
+    QPS column IS the cost claim); the client widens k/L by ~1/selectivity
+    (post-filtering semantics, tests/test_filtered.py);
+  * tenant sweep — per-tenant filtered recall and QPS at 2 and 8 tenants
+    (quota/shed accounting is the scheduler's, benched in BENCH_serving);
+  * drift workload — ``common.tenant_drift_stream``: per-tenant clustered
+    churn under embedding drift (the sasrec re-embedding shape) with
+    ``locality_order`` on, merged every cycle; rows carry the per-tenant
+    recall-stability series (min/mean across tenants per cycle).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.config import SystemConfig
+from repro.core.graph import FilterSpec
+from repro.core.system import bootstrap_system
+
+from .common import (DIM, dataset, default_cfg, default_pq, emit, queryset,
+                     tenant_drift_stream, write_bench_json)
+
+SELECTIVITIES = (1.0, 0.5, 0.1, 0.01)
+
+
+def _labeled_system(n, n_tenants):
+    """Labeled system: bit b set on every ceil(1/sel_b) -th point, tenants
+    striped, plus a streaming tail so filters cross the temp tiers."""
+    pts = dataset(n + n // 4)
+    cfg = SystemConfig(
+        index=default_cfg(n=4 * n, dim=DIM), pq=default_pq(DIM),
+        ro_snapshot_points=128, merge_threshold=100_000,
+        temp_capacity=512, insert_batch=64, filter_words=1)
+
+    def labels_for(i):
+        return [b for b, sel in enumerate(SELECTIVITIES)
+                if i % round(1 / sel) == 0]
+
+    sys_ = bootstrap_system(
+        pts[:n], np.arange(n), cfg,
+        labels=[labels_for(i) for i in range(n)],
+        tenants=[i % n_tenants for i in range(n)])
+    truth = {i: (labels_for(i), i % n_tenants) for i in range(n)}
+    for j in range(n // 4):
+        i = n + j
+        sys_.insert(i, pts[i], labels=labels_for(i), tenant=i % n_tenants)
+        truth[i] = (labels_for(i), i % n_tenants)
+    sys_._flush_inserts()
+    return sys_, pts, truth
+
+
+def _recall_vs_subset(ids, q, pts, keys, k):
+    mat = pts[keys]
+    d = ((mat[None] - q[:, None]) ** 2).sum(-1)
+    gt = keys[np.argsort(d, axis=1)[:, :k]]
+    hits = sum(len(set(int(x) for x in row if x >= 0) & set(g.tolist()))
+               for row, g in zip(ids, gt))
+    return hits / (k * len(q))
+
+
+def selectivity_sweep(quick: bool = False):
+    n = 1024 if quick else 2048
+    n_tenants = 4
+    sys_, pts, truth = _labeled_system(n, n_tenants)
+    q = queryset(32)
+    k = 10
+    # unfiltered baseline: the bit-parity twin of the sel=1.0 row
+    t0 = time.perf_counter()
+    ids_u, _ = sys_.search_batch(q, k)
+    base_s = time.perf_counter() - t0
+    keys_all = np.asarray(sorted(truth))
+    emit("filtered_baseline_unfiltered", base_s,
+         f"recall={_recall_vs_subset(np.asarray(ids_u), q, pts, keys_all, k):.3f}",
+         selectivity=1.0, n_tenants=n_tenants, filtered=0,
+         recall=_recall_vs_subset(np.asarray(ids_u), q, pts, keys_all, k),
+         qps=len(q) / base_s)
+    for bit, sel in enumerate(SELECTIVITIES):
+        spec = FilterSpec(all_of=(bit,))
+        k_eff = k if sel == 1.0 else min(256, int(np.ceil(k / sel * 1.5)))
+        L = min(max(64, 2 * k_eff), 1024)
+        sys_.search_batch(q, k_eff, L=L, filter=spec)   # warm the program
+        t0 = time.perf_counter()
+        ids, _ = sys_.search_batch(q, k_eff, L=L, filter=spec)
+        sec = time.perf_counter() - t0
+        ids = np.asarray(ids)[:, :k]
+        keys = np.asarray([e for e in sorted(truth)
+                           if bit in truth[e][0]])
+        rec = _recall_vs_subset(ids, q, pts, keys, k)
+        emit(f"filtered_sel_{sel}", sec, f"recall={rec:.3f}",
+             selectivity=sel, n_tenants=n_tenants, filtered=1,
+             k_eff=k_eff, L=L, recall=rec, qps=len(q) / sec)
+
+
+def tenant_sweep(quick: bool = False):
+    n = 1024 if quick else 2048
+    q = queryset(32)
+    k = 10
+    for n_tenants in (2, 8):
+        sys_, pts, truth = _labeled_system(n, n_tenants)
+        recalls, secs = [], 0.0
+        for t in range(n_tenants):
+            spec = FilterSpec(tenant=t)
+            k_eff = min(128, k * n_tenants)
+            L = min(max(64, 2 * k_eff), 1024)
+            sys_.search_batch(q, k_eff, L=L, filter=spec)
+            t0 = time.perf_counter()
+            ids, _ = sys_.search_batch(q, k_eff, L=L, filter=spec)
+            secs += time.perf_counter() - t0
+            ids = np.asarray(ids)[:, :k]
+            keys = np.asarray([e for e in sorted(truth)
+                               if truth[e][1] == t])
+            recalls.append(_recall_vs_subset(ids, q, pts, keys, k))
+        emit(f"filtered_tenants_{n_tenants}", secs / n_tenants,
+             f"recall_min={min(recalls):.3f}",
+             selectivity=1.0 / n_tenants, n_tenants=n_tenants, filtered=1,
+             recall=float(np.mean(recalls)), recall_min=min(recalls),
+             qps=len(q) * n_tenants / secs)
+
+
+def drift_workload(quick: bool = False):
+    cycles = 3 if quick else 5
+    per_tenant = 24 if quick else 48
+    recs = tenant_drift_stream(cycles, per_tenant, n_tenants=4,
+                               n_del=8, locality=True)
+    for r in recs:
+        emit(f"filtered_drift_cycle{r['cycle']}",
+             r["merge_wall"],
+             f"recall_min={r['recall_min']:.3f}",
+             selectivity=0.25, n_tenants=4, filtered=1, drift=1,
+             locality_order=1, cycle=r["cycle"],
+             insert_wall=r["insert_wall"], recall=r["recall_mean"],
+             recall_min=r["recall_min"])
+
+
+def main(quick: bool = False):
+    selectivity_sweep(quick)
+    tenant_sweep(quick)
+    drift_workload(quick)
+    write_bench_json("filtered", quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,13 @@
 # delta coherence, and recall equivalence (contracts of
 # docs/ARCHITECTURE.md, "Update-path locality").
 #
+# `smoke.sh --filters` runs the filtered/multi-tenant probe instead: 4 fake
+# host devices + scripts/filter_probe.py asserting selectivity-1.0 bit-parity
+# (direct + replica-routed), tenant isolation across tiers, post-merge label
+# survival, and the scheduler's single-spec batch closes + tenant-quota
+# sheds (contracts of docs/ARCHITECTURE.md, "Filtered & multi-tenant
+# search").
+#
 # `smoke.sh --local-repair` runs the localized delete-repair probe instead:
 # two systems routed always-local vs always-global through interleaved
 # inserts/deletes/merges + scripts/local_repair_probe.py asserting merge
@@ -50,6 +57,12 @@ fi
 if [[ "${1:-}" == "--serving" ]]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python scripts/serving_probe.py
+  exit 0
+fi
+
+if [[ "${1:-}" == "--filters" ]]; then
+  XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python scripts/filter_probe.py
   exit 0
 fi
 

@@ -236,6 +236,20 @@ class SystemConfig:
     #   (time.monotonic).  Tests inject serving.scheduler.VirtualClock so
     #   every batch-close/shed/deadline decision is deterministic — the
     #   policy core consults only this clock, never the wall.
+    # Filtered & multi-tenant search (docs/ARCHITECTURE.md, "Filtered &
+    # multi-tenant search").
+    filter_words: int = 0         # uint32 words per per-point label bitset
+    #   (so labels cover bit indices [0, 32*filter_words)).  When > 0 every
+    #   tier carries a host-side LabelTable parallel to its ext_ids table,
+    #   labels persist through WAL/snapshots/storage meta, and
+    #   search_batch(filter=FilterSpec(...)) folds the predicate into the
+    #   cached drop mask — one extra AND per candidate, no kernel change.
+    #   0 = label plumbing off; tenant ids still work (they need no words).
+    tenant_quota: int = 0         # per-tenant in-flight ticket quota in the
+    #   BatchScheduler: a tenant with this many queued (undispatched)
+    #   requests has further submissions SHED (counted per tenant in
+    #   SystemStats.tenant_sheds and globally in shed_requests).  0 = no
+    #   per-tenant quota (only serve_queue_capacity backpressure applies).
 
 
 # The paper's operating point for the billion-scale deployment (§6.2).

@@ -13,10 +13,12 @@ slots.  ``deleted`` nodes remain navigable (paper §4.2 lazy deletion) until
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .config import IndexConfig
 from .distance import INVALID, l2_sq_batch
@@ -194,6 +196,146 @@ def graph_from_layout(path: str) -> GraphState:
         return lay.graph_state()
     finally:
         lay.close()
+
+
+# --------------------------------------------------------------------------
+# Filtered / multi-tenant search: per-point label bitsets + tenant ids.
+#
+# Labels live HOST-SIDE (numpy) as side tables parallel to the per-tier
+# device arrays — exactly like the system layer's ``ext_ids`` tables.  At
+# query time a FilterSpec folds into the cached drop-mask that
+# ``index.unified_search`` already applies post-search (``lanes_to_ext``),
+# so filtering costs one extra AND per candidate and touches no kernel.
+# See docs/ARCHITECTURE.md "Filtered & multi-tenant search".
+# --------------------------------------------------------------------------
+
+NO_TENANT = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSpec:
+    """A query-time predicate over per-point labels and/or tenant id.
+
+    ``all_of`` / ``any_of`` are label bit indices; a point matches when it
+    carries EVERY ``all_of`` bit and (if ``any_of`` is non-empty) AT LEAST
+    ONE ``any_of`` bit.  ``tenant`` restricts matches to points inserted
+    under that tenant id (the mandatory-filter multi-tenancy shape).
+    Hashable/frozen so it can key the system's filter-mask cache and ride
+    scheduler tickets; an empty spec matches everything.
+    """
+    all_of: tuple[int, ...] = ()
+    any_of: tuple[int, ...] = ()
+    tenant: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "all_of", tuple(sorted(self.all_of)))
+        object.__setattr__(self, "any_of", tuple(sorted(self.any_of)))
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.all_of and not self.any_of and self.tenant is None
+
+
+class LabelTable:
+    """Packed per-slot label bitsets + tenant ids for ONE tier.
+
+    ``bits``   uint32[capacity, n_words] — bit ``b`` of word ``b // 32``
+               set when the point in that slot carries label ``b``.
+    ``tenant`` int32[capacity] — owning tenant id, ``NO_TENANT`` (-1) for
+               untenanted points.
+
+    Mutated in place by the system layer's flush/merge/consolidate paths
+    (always under the same locks as the matching ``ext_ids`` table) and
+    read by ``filter_match`` to build query-time drop masks.
+    """
+
+    __slots__ = ("bits", "tenant")
+
+    def __init__(self, capacity: int, n_words: int,
+                 bits: np.ndarray | None = None,
+                 tenant: np.ndarray | None = None):
+        self.bits = (np.zeros((capacity, n_words), np.uint32)
+                     if bits is None else np.asarray(bits, np.uint32))
+        self.tenant = (np.full(capacity, NO_TENANT, np.int32)
+                       if tenant is None else np.asarray(tenant, np.int32))
+
+    @property
+    def capacity(self) -> int:
+        return self.bits.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.bits.shape[1]
+
+    def copy(self) -> "LabelTable":
+        return LabelTable(self.capacity, self.n_words,
+                          self.bits.copy(), self.tenant.copy())
+
+    def set_row(self, slot: int, bits_row: np.ndarray, tenant: int):
+        self.bits[slot] = bits_row
+        self.tenant[slot] = tenant
+
+    def clear_rows(self, mask_or_slots):
+        self.bits[mask_or_slots] = 0
+        self.tenant[mask_or_slots] = NO_TENANT
+
+    def grow(self, capacity: int) -> "LabelTable":
+        if capacity == self.capacity:
+            return self
+        if capacity < self.capacity:
+            raise ValueError(
+                f"cannot shrink label table {self.capacity} -> {capacity}")
+        out = LabelTable(capacity, self.n_words)
+        out.bits[:self.capacity] = self.bits
+        out.tenant[:self.capacity] = self.tenant
+        return out
+
+
+def pack_labels(labels, n_words: int) -> np.ndarray:
+    """Pack an iterable of label bit indices into a uint32[n_words] row."""
+    row = np.zeros(n_words, np.uint32)
+    for b in labels or ():
+        b = int(b)
+        if not 0 <= b < 32 * n_words:
+            raise ValueError(
+                f"label bit {b} out of range for {n_words} words "
+                f"(cfg.filter_words covers bits [0, {32 * n_words}))")
+        row[b // 32] |= np.uint32(1 << (b % 32))
+    return row
+
+
+def unpack_labels(row: np.ndarray) -> list[int]:
+    """Inverse of ``pack_labels``: the sorted label bit indices set in a
+    packed uint32 row (WAL replay turns stored bitsets back into the
+    ``insert(labels=...)`` form)."""
+    out = []
+    for w, word in enumerate(np.asarray(row, np.uint32)):
+        word = int(word)
+        while word:
+            low = word & -word
+            out.append(32 * w + low.bit_length() - 1)
+            word ^= low
+    return out
+
+
+def filter_match(table: LabelTable, spec: FilterSpec) -> np.ndarray:
+    """bool[capacity] — which slots satisfy ``spec``.
+
+    Vectorized over the packed words; an empty spec matches all slots.
+    Row validity (active/deleted/ext-id) is NOT consulted here — the
+    caller ORs ``~match`` into the delete drop mask, which already covers
+    liveness.
+    """
+    match = np.ones(table.capacity, bool)
+    if spec.tenant is not None:
+        match &= table.tenant == spec.tenant
+    if spec.all_of:
+        want = pack_labels(spec.all_of, table.n_words)
+        match &= ((table.bits & want) == want).all(axis=1)
+    if spec.any_of:
+        want = pack_labels(spec.any_of, table.n_words)
+        match &= (table.bits & want).any(axis=1)
+    return match
 
 
 def medoid(vectors: jax.Array, mask: jax.Array, sample: int = 4096) -> jax.Array:

@@ -51,7 +51,9 @@ from . import index as mem
 from . import pq as pqm
 from .config import IndexConfig, PQConfig, SystemConfig
 from .distance import INVALID
-from .graph import GraphState, empty_graph, pad_graph, stack_lanes
+from .graph import (NO_TENANT, FilterSpec, GraphState, LabelTable,
+                    empty_graph, filter_match, pack_labels, pad_graph,
+                    stack_lanes)
 from .locality import locality_order, next_bucket
 from .lti import LTIState, build_lti, search_lti
 from .merge import streaming_merge
@@ -65,6 +67,8 @@ class _Temp:
     state: GraphState
     ext_ids: np.ndarray           # [capacity] int64, -1 free
     n: int = 0
+    labels: Optional[LabelTable] = None  # per-slot label bitsets + tenant
+    #   ids, row-parallel to ext_ids (filtered/multi-tenant search)
 
 
 LATENCY_RESERVOIR = 1024
@@ -189,6 +193,15 @@ class SystemStats:
     batch_occupancy: float = 0.0  # gauge: fill fraction (n / batch_queries)
     #   of the last dispatched micro-batch — 1.0 when batches close full,
     #   lower when the deadline closes them early
+    # Filtered & multi-tenant search (docs/ARCHITECTURE.md, "Filtered &
+    # multi-tenant search").
+    filtered_searches: int = 0   # queries served under a non-empty
+    #   FilterSpec (label predicate and/or tenant restriction)
+    tenant_searches: dict = field(default_factory=dict)  # tenant id ->
+    #   queries served under that tenant's mandatory filter
+    tenant_sheds: dict = field(default_factory=dict)     # tenant id ->
+    #   submissions SHED by the per-tenant quota (cfg.tenant_quota);
+    #   every one also counts in shed_requests (the global total)
     # Latency reservoirs (Vitter's algorithm R, see ``Reservoir``): uniform
     # samples in O(LATENCY_RESERVOIR) memory however long we run, each
     # reporting p50/p99 via ``.snapshot()``.
@@ -237,6 +250,9 @@ class SystemStats:
             "deadline_misses": self.deadline_misses,
             "queue_depth": self.queue_depth,
             "batch_occupancy": self.batch_occupancy,
+            "filtered_searches": self.filtered_searches,
+            "tenant_searches": dict(self.tenant_searches),
+            "tenant_sheds": dict(self.tenant_sheds),
         }
 
 
@@ -256,11 +272,14 @@ class FreshDiskANN:
             cb = pqm.PQCodebook(jnp.zeros(
                 (cfg.pq.m, cfg.pq.ksub, cfg.pq.dsub), jnp.float32))
             lti = LTIState(g, jnp.zeros((icfg.capacity, cfg.pq.m), jnp.uint8), cb)
-        # The LTI and its external-id table are read/swapped as ONE tuple so
-        # a search concurrent with a merge never mixes generations.
-        self._lti_pair: tuple[LTIState, np.ndarray] = (
+        # The LTI, its external-id table AND its label table are
+        # read/swapped as ONE tuple so a search concurrent with a merge
+        # never mixes generations.
+        self._n_label_words = cfg.filter_words
+        self._lti_pair: tuple[LTIState, np.ndarray, LabelTable] = (
             lti, lti_ext_ids if lti_ext_ids is not None
-            else np.full(icfg.capacity, -1, np.int64))
+            else np.full(icfg.capacity, -1, np.int64),
+            LabelTable(icfg.capacity, cfg.filter_words))
         self.rw = self._new_temp()
         self.ro: list[_Temp] = []
         self.deleted_ext: set[int] = set()
@@ -271,6 +290,8 @@ class FreshDiskANN:
                     self._ext_loc[int(e)] = ("lti", slot)
         self._insert_buf_v: list[np.ndarray] = []
         self._insert_buf_id: list[int] = []
+        self._insert_buf_bits: list[np.ndarray] = []   # packed label rows
+        self._insert_buf_tenant: list[int] = []        # NO_TENANT default
         self._wal_offset: Optional[int] = None  # WAL bytes a snapshot covers
         self._wal_epoch: Optional[int] = None   # ... and of which log epoch
         self.stats = SystemStats()
@@ -308,6 +329,10 @@ class FreshDiskANN:
         self._fanout_cache: Optional[tuple] = None
         self._frozen_cache: Optional[tuple] = None
         self._drop_cache: Optional[tuple] = None
+        # Filtered drop-masks: (key, epoch, {FilterSpec: drop}) — one dict
+        # of per-spec masks per (lane census, delete epoch); any tier or
+        # DeleteList mutation retires the whole dict.
+        self._filter_cache: Optional[tuple] = None
         self._delete_epoch = 0
         self._int32_warned = False
         # Sharded-LTI-lane caches (cfg.shard_lti — see _sharded_program).
@@ -335,7 +360,7 @@ class FreshDiskANN:
 
     @lti.setter
     def lti(self, value: LTIState) -> None:
-        self._lti_pair = (value, self._lti_pair[1])
+        self._lti_pair = (value, self._lti_pair[1], self._lti_pair[2])
 
     @property
     def lti_ext_ids(self) -> np.ndarray:
@@ -343,11 +368,27 @@ class FreshDiskANN:
 
     @lti_ext_ids.setter
     def lti_ext_ids(self, value: np.ndarray) -> None:
-        self._lti_pair = (self._lti_pair[0], value)
+        self._lti_pair = (self._lti_pair[0], value, self._lti_pair[2])
+
+    @property
+    def lti_labels(self) -> LabelTable:
+        return self._lti_pair[2]
+
+    @lti_labels.setter
+    def lti_labels(self, value: LabelTable) -> None:
+        self._lti_pair = (self._lti_pair[0], self._lti_pair[1], value)
 
     # ------------------------------------------------------------------ API
-    def insert(self, ext_id: int, vec: np.ndarray) -> None:
+    def insert(self, ext_id: int, vec: np.ndarray, labels=None,
+               tenant: Optional[int] = None) -> None:
         """Route to the RW-TempIndex (paper §5.2); batched flush.
+
+        ``labels`` is an optional iterable of label bit indices (packed
+        into ``cfg.filter_words`` uint32 words — filtered search matches
+        against them); ``tenant`` tags the point with an owning tenant id
+        (a mandatory filter under multi-tenancy).  Both ride the WAL as a
+        labeled-insert record, the insert buffer, and every tier's label
+        table, so they follow the point across its whole lifecycle.
 
         The lock hold covers only the WAL append + buffer append; the
         device-side flush (when this insert fills the batch) runs after the
@@ -356,12 +397,25 @@ class FreshDiskANN:
         ``insert_latency`` therefore samples the bookkeeping cost only —
         the amortized flush lands in ``flush_latency``, once per flush.
         """
+        bits = (pack_labels(labels, self._n_label_words)
+                if labels else None)
+        ten = NO_TENANT if tenant is None else int(tenant)
         t0 = time.perf_counter()
         with self._insert_lock:
             if self.wal:
-                self.wal.log_insert(ext_id, vec)
+                if bits is not None or ten != NO_TENANT:
+                    self.wal.log_insert_labeled(
+                        ext_id, vec, ten,
+                        bits if bits is not None else
+                        np.zeros(self._n_label_words, np.uint32))
+                else:
+                    self.wal.log_insert(ext_id, vec)
             self._insert_buf_id.append(int(ext_id))
             self._insert_buf_v.append(np.asarray(vec, np.float32))
+            self._insert_buf_bits.append(
+                bits if bits is not None else
+                np.zeros(self._n_label_words, np.uint32))
+            self._insert_buf_tenant.append(ten)
             # Re-insert revives the id immediately (not just at flush time),
             # so `size` and the DeleteList agree while the point is buffered.
             if int(ext_id) in self.deleted_ext:
@@ -389,6 +443,10 @@ class FreshDiskANN:
                         if x != e]
                 self._insert_buf_id = [self._insert_buf_id[i] for i in keep]
                 self._insert_buf_v = [self._insert_buf_v[i] for i in keep]
+                self._insert_buf_bits = [self._insert_buf_bits[i]
+                                         for i in keep]
+                self._insert_buf_tenant = [self._insert_buf_tenant[i]
+                                           for i in keep]
             self.deleted_ext.add(e)
             self._delete_epoch += 1    # invalidate cached drop-masks
         self.stats.deletes += 1
@@ -402,7 +460,8 @@ class FreshDiskANN:
 
     def search_batch(self, queries: np.ndarray, k: int,
                      L: Optional[int] = None,
-                     beam_width: Optional[int] = None
+                     beam_width: Optional[int] = None,
+                     filter: Optional[FilterSpec] = None
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Serve a whole query batch: LTI + every TempIndex, aggregate,
         filter DeleteList (§5.2).  Returns (ext_ids [B, k], dists [B, k]).
@@ -430,8 +489,17 @@ class FreshDiskANN:
         ``cfg.batch_fanout=False`` runs the sequential per-tier loop with
         host-side aggregation — the bit-parity oracle: both paths return
         bit-identical (ids, dists).
+
+        ``filter`` restricts results to points matching a ``FilterSpec``
+        (label predicate and/or tenant id).  The predicate folds into the
+        cached DeleteList drop-mask — applied POST-search, exactly where
+        deletes already are — so the beam search itself is untouched: a
+        filter that matches everything returns bit-identical (ids, dists)
+        to the unfiltered call, and hops/cmps never change.
         """
         self._flush_inserts()
+        fspec = filter if filter is not None and not filter.is_empty \
+            else None
         L = L or self.cfg.index.L_search
         if k > L:
             raise ValueError(
@@ -444,12 +512,17 @@ class FreshDiskANN:
         q = np.asarray(queries, np.float32)
         B = q.shape[0]
         self.stats.searches += B        # queries served, not programs
+        if fspec is not None:
+            self.stats.filtered_searches += B
+            if fspec.tenant is not None:
+                self.stats.tenant_searches[fspec.tenant] = (
+                    self.stats.tenant_searches.get(fspec.tenant, 0) + B)
         if B == 0:                      # a no-op request is not a program
             return (np.zeros((0, k), np.int64),
                     np.zeros((0, k), np.float32))
         bq = self.cfg.batch_queries
         if not bq or B == bq:
-            return self._search_dispatch(q, k, kk, L, W)
+            return self._search_dispatch(q, k, kk, L, W, fspec)
         outs = []
         for lo in range(0, B, bq):      # fixed-shape chunks, tail padded
             chunk = q[lo:lo + bq]
@@ -458,26 +531,29 @@ class FreshDiskANN:
                 qp = np.zeros((bq, q.shape[1]), np.float32)
                 qp[:n] = chunk
                 chunk = qp
-            ids, d = self._search_dispatch(chunk, k, kk, L, W)
+            ids, d = self._search_dispatch(chunk, k, kk, L, W, fspec)
             outs.append((ids[:n], d[:n]))
         return (np.concatenate([o[0] for o in outs]),
                 np.concatenate([o[1] for o in outs]))
 
     def _search_dispatch(self, queries: np.ndarray, k: int, kk: int,
-                         L: int, W: int) -> tuple[np.ndarray, np.ndarray]:
+                         L: int, W: int,
+                         fspec: Optional[FilterSpec] = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
         """Timed wrapper: every dispatched micro-batch samples its wall
         time into ``stats.search_latency`` (the reservoir behind the
         serving benches' p50/p99 rows) — lane-less no-op calls, which
         launch no program, are not samples."""
         d0 = self.stats.search_dispatches
         t0 = time.perf_counter()
-        out = self._search_dispatch_impl(queries, k, kk, L, W)
+        out = self._search_dispatch_impl(queries, k, kk, L, W, fspec)
         if self.stats.search_dispatches > d0:
             self.stats.search_latency.record(time.perf_counter() - t0)
         return out
 
     def _search_dispatch_impl(self, queries: np.ndarray, k: int, kk: int,
-                              L: int, W: int
+                              L: int, W: int,
+                              fspec: Optional[FilterSpec] = None
                               ) -> tuple[np.ndarray, np.ndarray]:
         """Serve ONE fixed-shape micro-batch (all query-count accounting
         already done by ``search_batch``)."""
@@ -489,8 +565,12 @@ class FreshDiskANN:
         if self.cfg.batch_fanout:
             bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
             if bundle is not None:
-                key, stack, t_tabs, l_tab, tables_np = bundle
-                t_drop, l_drop = self._drop_mask(key, tables_np)
+                key, stack, t_tabs, l_tab, tables_np, label_tabs = bundle
+                if fspec is None:
+                    t_drop, l_drop = self._drop_mask(key, tables_np)
+                else:
+                    t_drop, l_drop = self._filter_drop(
+                        key, tables_np, label_tabs, fspec)
                 # rerank only matters to the PQ lane; with no LTI lane it
                 # would be dead compute.
                 do_rerank = self.cfg.rerank and lti_entry is not None
@@ -510,19 +590,46 @@ class FreshDiskANN:
         # Sequential oracle: one device program per tier + host aggregation.
         cands: list[tuple[np.ndarray, np.ndarray]] = []   # (ext_ids, dists)
         if lti_entry is not None:
-            lti, lti_table = lti_entry
+            lti, lti_table = lti_entry[0], lti_entry[1]
             ids, d, _, _ = search_lti(lti, q, self.cfg.index, k=kk, L=L,
                                       beam_width=W, rerank=self.cfg.rerank)
             self.stats.search_dispatches += 1
-            cands.append((self._map_ext(np.asarray(ids), lti_table),
-                          np.asarray(d)))
+            ids = np.asarray(ids)
+            cands.append((self._map_ext(ids, lti_table),
+                          self._slot_filter(ids, np.asarray(d),
+                                            lti_entry[2], fspec)))
         for t in ([rw_t] if rw_t is not None else []) + ro_temps:
             ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
                                       L=L, beam_width=W)
             self.stats.search_dispatches += 1
-            cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
-                          np.asarray(d)))
+            ids = np.asarray(ids)
+            cands.append((self._map_ext(ids, t.ext_ids),
+                          self._slot_filter(ids, np.asarray(d),
+                                            t.labels, fspec)))
         return self._aggregate(cands, k, nq)
+
+    @staticmethod
+    def _slot_filter(slot_ids: np.ndarray, dists: np.ndarray,
+                     labels: Optional[LabelTable],
+                     fspec: Optional[FilterSpec]) -> np.ndarray:
+        """Host half of the filtered drop for the per-tier paths: inf-out
+        candidates whose slot fails ``fspec`` — the same post-search point
+        where ``lanes_to_ext`` applies the on-device mask, so the
+        sequential oracle and the unified fan-out stay bit-identical with
+        filters on.  A missing label table drops everything (a tier that
+        never saw a labeled insert has no matching points)."""
+        if fspec is None:
+            return dists
+        d = dists.copy()
+        ok = slot_ids >= 0
+        if labels is None:
+            d[ok] = np.inf
+            return d
+        m = filter_match(labels, fspec)
+        dead = np.zeros(slot_ids.shape, bool)
+        dead[ok] = ~m[slot_ids[ok]]
+        d[dead] = np.inf
+        return d
 
     # ------------------------------------------------- sharded LTI lane
     @property
@@ -611,7 +718,7 @@ class FreshDiskANN:
         if self.cfg.batch_fanout:
             bundle = self._lane_bundle(rw_t, ro_temps, lti_entry)
             if bundle is not None:
-                key, stack, t_tabs, l_tab, tables_np = bundle
+                key, stack, t_tabs, l_tab, tables_np, _ = bundle
                 t_drop, l_drop = self._drop_mask(key, tables_np)
 
                 def run(W):
@@ -622,7 +729,7 @@ class FreshDiskANN:
                     return (np.asarray(hops).max(axis=0),
                             np.asarray(cmps).sum(axis=0))
         if run is None:
-            lti, _ = self._lti_pair
+            lti = self._lti_pair[0]
             if int(lti.graph.n_total) >= L:
                 def run(W):
                     _, _, hops, cmps = search_lti(lti, probe, self.cfg.index,
@@ -653,8 +760,9 @@ class FreshDiskANN:
         rw_t = rw if rw.n > 0 else None
         with self._ro_lock:
             ro_temps = [t for t in self.ro if t.n > 0]
-        lti, lti_table = self._lti_pair          # one consistent generation
-        lti_entry = (lti, lti_table) if int(lti.graph.n_total) > 0 else None
+        lti, lti_table, lti_labels = self._lti_pair  # one generation
+        lti_entry = ((lti, lti_table, lti_labels)
+                     if int(lti.graph.n_total) > 0 else None)
         return rw_t, ro_temps, lti_entry
 
     @staticmethod
@@ -745,7 +853,12 @@ class FreshDiskANN:
                   if lanes else None)
         l_tab = (jnp.asarray(lti_tab_np.astype(id_dtype))
                  if lti_entry is not None else None)
-        bundle = (key, stack, t_tabs, l_tab, (temp_tabs_np, lti_tab_np))
+        # Label tables ride the bundle lane-ordered ([RW?] + RO, LTI) so
+        # the filtered drop-mask aligns with the stacked lanes.
+        label_tabs = ([t.labels for t in fp],
+                      lti_entry[2] if lti_entry is not None else None)
+        bundle = (key, stack, t_tabs, l_tab, (temp_tabs_np, lti_tab_np),
+                  label_tabs)
         self._fanout_cache = (key, bundle)
         return bundle
 
@@ -760,6 +873,16 @@ class FreshDiskANN:
         if (cached is not None and cached[1] == epoch
                 and self._key_hits(cached[0], key)):
             return cached[2]
+        t_mask, l_mask = self._delete_masks_np(tables_np)
+        drop = (jnp.asarray(t_mask) if t_mask.shape[0] else None,
+                jnp.asarray(l_mask) if l_mask is not None else None)
+        self._drop_cache = (key, epoch, drop)
+        return drop
+
+    def _delete_masks_np(self, tables_np: tuple
+                         ) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """Host-side DeleteList membership masks over the lane tables —
+        the shared base of ``_drop_mask`` and ``_filter_drop``."""
         temp_np, lti_np = tables_np
         deleted = self.deleted_ext.copy()        # GIL-atomic vs bg merge
         if deleted:
@@ -770,14 +893,51 @@ class FreshDiskANN:
             t_mask = np.zeros(temp_np.shape, bool)
             l_mask = (np.zeros(lti_np.shape, bool)
                       if lti_np is not None else None)
-        drop = (jnp.asarray(t_mask) if temp_np.shape[0] else None,
+        return t_mask, l_mask
+
+    def _filter_drop(self, key: tuple, tables_np: tuple, label_tabs: tuple,
+                     fspec: FilterSpec):
+        """Filtered drop masks: the DeleteList base ORed with ``~match`` of
+        ``fspec`` against each lane's label table — one extra AND per
+        candidate at the same post-search point deletes already pay, so the
+        beam search itself (hops/cmps) is untouched.  Cached per
+        (lane key, delete epoch) as a dict of per-spec masks; any tier or
+        DeleteList mutation retires the whole dict."""
+        epoch = self._delete_epoch
+        cached = self._filter_cache
+        if (cached is not None and cached[1] == epoch
+                and self._key_hits(cached[0], key)):
+            specs = cached[2]
+        else:
+            specs = {}
+            self._filter_cache = (key, epoch, specs)
+        drop = specs.get(fspec)
+        if drop is not None:
+            return drop
+        t_mask, l_mask = self._delete_masks_np(tables_np)
+        temp_labels, lti_labels = label_tabs
+        for i, lt in enumerate(temp_labels):
+            if lt is None:              # no labels ever seen: nothing matches
+                t_mask[i] = True
+                continue
+            m = filter_match(lt, fspec)
+            t_mask[i, :m.size] |= ~m
+            t_mask[i, m.size:] = True   # lane padding can't match
+        if l_mask is not None:
+            if lti_labels is None:
+                l_mask[:] = True
+            else:
+                l_mask |= ~filter_match(lti_labels, fspec)
+        drop = (jnp.asarray(t_mask) if t_mask.shape[0] else None,
                 jnp.asarray(l_mask) if l_mask is not None else None)
-        self._drop_cache = (key, epoch, drop)
+        specs[fspec] = drop
         return drop
 
     def _new_temp(self) -> _Temp:
         return _Temp(empty_graph(self.temp_cfg),
-                     np.full(self.cfg.temp_capacity, -1, np.int64))
+                     np.full(self.cfg.temp_capacity, -1, np.int64),
+                     labels=LabelTable(self.cfg.temp_capacity,
+                                       self._n_label_words))
 
     def _map_ext(self, slot_ids: np.ndarray, table: np.ndarray) -> np.ndarray:
         out = np.full(slot_ids.shape, -1, np.int64)
@@ -846,15 +1006,19 @@ class FreshDiskANN:
             with self._insert_lock:
                 ids = self._insert_buf_id
                 vecs = self._insert_buf_v
+                bits = self._insert_buf_bits
+                tens = self._insert_buf_tenant
                 if not ids:
                     return
                 self._insert_buf_id, self._insert_buf_v = [], []
+                self._insert_buf_bits, self._insert_buf_tenant = [], []
             t0 = time.perf_counter()
-            self._flush_compute(ids, vecs)
+            self._flush_compute(ids, vecs, bits, tens)
             self.stats.flushes += 1
             self.stats.flush_latency.record(time.perf_counter() - t0)
 
-    def _flush_compute(self, ids: list, vecs: list) -> None:
+    def _flush_compute(self, ids: list, vecs: list, bits: list,
+                       tens: list) -> None:
         """Device-side flush of one drained buffer (caller holds
         ``_flush_lock``; ``_insert_lock`` must NOT be required here).
 
@@ -881,23 +1045,29 @@ class FreshDiskANN:
                 seed=self._flush_seq))
             ids = [ids[i] for i in perm]
             vecs = [vecs[i] for i in perm]
+            bits = [bits[i] for i in perm]
+            tens = [tens[i] for i in perm]
         self._flush_seq += 1
         t = self.rw
         for lo in range(0, len(ids), B):
             chunk_i = ids[lo:lo + B]
             chunk_v = vecs[lo:lo + B]
+            chunk_b = bits[lo:lo + B]
+            chunk_t = tens[lo:lo + B]
             slots = np.arange(t.n, t.n + len(chunk_i), dtype=np.int32)
             if t.n == 0:
                 # Seed the empty temp graph: first point becomes the start.
                 st = t.state
                 v0 = jnp.asarray(chunk_v[0], st.vectors.dtype)
                 t.ext_ids[0] = chunk_i[0]
+                t.labels.set_row(0, chunk_b[0], chunk_t[0])
                 t.state = st._replace(
                     vectors=st.vectors.at[0].set(v0),
                     active=st.active.at[0].set(True),
                     start=jnp.int32(0), n_total=jnp.int32(1))
                 self._ext_loc[chunk_i[0]] = ("rw", 0)
                 chunk_i, chunk_v, slots = chunk_i[1:], chunk_v[1:], slots[1:] + 0
+                chunk_b, chunk_t = chunk_b[1:], chunk_t[1:]
                 t.n = 1
                 if not chunk_i:
                     continue
@@ -923,8 +1093,9 @@ class FreshDiskANN:
                 self.stats.flush_prune_rows += min(
                     pj_h.size, self.cfg.temp_capacity)
                 st = mem.insert_apply_delta(st, pj, pp, self.temp_cfg)
-            for s, e in zip(slots, chunk_i):
+            for j, (s, e) in enumerate(zip(slots, chunk_i)):
                 t.ext_ids[s] = e
+                t.labels.set_row(int(s), chunk_b[j], chunk_t[j])
             t.state = st
             for s, e in zip(slots, chunk_i):
                 self._ext_loc[e] = ("rw", int(s))
@@ -1010,6 +1181,8 @@ class FreshDiskANN:
         del_snapshot = set(self.deleted_ext)
         vecs = np.zeros((max(staged, 1), icfg.dim), np.float32)
         exts = np.full(max(staged, 1), -1, np.int64)
+        sbits = np.zeros((max(staged, 1), self._n_label_words), np.uint32)
+        sten = np.full(max(staged, 1), NO_TENANT, np.int32)
         w = 0
         for t in ro:
             sl = np.nonzero(t.ext_ids >= 0)[0][:t.n]
@@ -1019,6 +1192,9 @@ class FreshDiskANN:
                 if e in del_snapshot:
                     continue
                 vecs[w], exts[w] = row, e
+                if t.labels is not None:   # labels follow the point
+                    sbits[w] = t.labels.bits[s]
+                    sten[w] = t.labels.tenant[s]
                 w += 1
         valid = np.zeros(max(staged, 1), bool)
         valid[:w] = True
@@ -1063,15 +1239,21 @@ class FreshDiskANN:
             if e >= 0 and self._ext_loc.get(e, ("?",))[0] == "lti":
                 del self._ext_loc[e]     # removed from the LTI this cycle
         new_ids[dmask] = -1
+        # Labels follow the same deleted-rows-out / staged-rows-in rebuild
+        # as the ext-id table, scattered at the merge-assigned slots.
+        new_labels = self.lti_labels.copy()
+        new_labels.clear_rows(dmask)
         slots = np.asarray(stats.slots)
         ok = valid & (slots >= 0)
-        for s, e in zip(slots[ok], exts[ok]):
+        for i, (s, e) in zip(np.nonzero(ok)[0], zip(slots[ok], exts[ok])):
             new_ids[s] = e
+            new_labels.bits[s] = sbits[i]
+            new_labels.tenant[s] = sten[i]
             self._ext_loc[e] = ("lti", int(s))
-        # One-shot generation swap (graph + ext table together), then
-        # retire exactly the RO snapshots this merge consumed — anything
-        # appended by a concurrent rollover stays.
-        self._lti_pair = (new_lti, new_ids)
+        # One-shot generation swap (graph + ext table + labels together),
+        # then retire exactly the RO snapshots this merge consumed —
+        # anything appended by a concurrent rollover stays.
+        self._lti_pair = (new_lti, new_ids, new_labels)
         with self._ro_lock:
             self.ro = self.ro[len(ro):]
             self._merge_inflight = 0
@@ -1079,6 +1261,7 @@ class FreshDiskANN:
         self._fanout_cache = None  # retired RO stacks must not stay resident
         self._frozen_cache = None
         self._drop_cache = None
+        self._filter_cache = None
         self._shard_place = None   # the old LTI's sharded copy likewise
         if self.cfg.storage_dir:
             # Delta-patch the live layout: only the adjacency rows this
@@ -1153,7 +1336,7 @@ class FreshDiskANN:
         n = self.cfg.reach_probe_samples
         if n <= 0:
             return
-        lti, _ = self._lti_pair
+        lti = self._lti_pair[0]
         frac = unreachable_fraction(lti.graph, self.cfg.index, samples=n,
                                     seed=self.stats.reach_probes)
         self.stats.unreachable_frac = frac
@@ -1179,7 +1362,7 @@ class FreshDiskANN:
 
         with self._merge_lock:
             icfg = self.cfg.index
-            lti, table = self._lti_pair
+            lti, table, labels = self._lti_pair
             del_snapshot = set(self.deleted_ext)
             dmask = np.zeros(icfg.capacity, bool)
             if del_snapshot:
@@ -1214,11 +1397,14 @@ class FreshDiskANN:
                 if e >= 0 and self._ext_loc.get(e, ("?",))[0] == "lti":
                     del self._ext_loc[e]
             new_ids[dmask] = -1
+            new_labels = labels.copy()
+            new_labels.clear_rows(dmask)
             self._lti_pair = (LTIState(new_g, lti.codes, lti.codebook),
-                              new_ids)
+                              new_ids, new_labels)
             self._tuned_w = None
             self._fanout_cache = None
             self._drop_cache = None
+            self._filter_cache = None
             self._shard_place = None
             if self.cfg.storage_dir:
                 self._sync_storage(adj_changed=changed)
@@ -1244,16 +1430,20 @@ class FreshDiskANN:
         self.close_storage()
         path = self._storage_path()
         os.makedirs(self.cfg.storage_dir, exist_ok=True)
-        lti, table = self._lti_pair
+        lti, table, labels = self._lti_pair
         if slay.is_layout(path):
             ps = slay.patch_layout(path, lti.graph, codes=lti.codes,
-                                   ext_ids=table, adj_changed=adj_changed)
+                                   ext_ids=table, adj_changed=adj_changed,
+                                   label_bits=labels.bits,
+                                   label_tenant=labels.tenant)
             self.stats.storage_rows_patched += ps.adj_rows
             self.stats.storage_blocks_patched += ps.adj_blocks
             self.stats.storage_bytes_written += ps.bytes_written
         else:
             lay = slay.write_layout(path, lti.graph, codes=lti.codes,
-                                    codebook=lti.codebook, ext_ids=table)
+                                    codebook=lti.codebook, ext_ids=table,
+                                    label_bits=labels.bits,
+                                    label_tenant=labels.tenant)
             self.stats.storage_bytes_written += (
                 lay.capacity * (lay.row_bytes + lay.dim * 4 + lay.m))
             lay.close()
@@ -1280,7 +1470,8 @@ class FreshDiskANN:
 
     def search_disk(self, queries: np.ndarray, k: int,
                     L: Optional[int] = None,
-                    beam_width: Optional[int] = None
+                    beam_width: Optional[int] = None,
+                    filter: Optional[FilterSpec] = None
                     ) -> tuple[np.ndarray, np.ndarray]:
         """The §5.2 fan-out with the LTI lane served OFF THE LAYOUT: PQ
         navigation on in-memory codes, adjacency rows streamed from
@@ -1297,6 +1488,8 @@ class FreshDiskANN:
         if not self.cfg.storage_dir:
             raise ValueError("search_disk needs SystemConfig.storage_dir")
         self._flush_inserts()
+        fspec = filter if filter is not None and not filter.is_empty \
+            else None
         L = L or self.cfg.index.L_search
         if k > L:
             raise ValueError(f"search(k={k}, L={L}): k must be <= L")
@@ -1305,6 +1498,11 @@ class FreshDiskANN:
         q = np.asarray(queries, np.float32)
         B = q.shape[0]
         self.stats.searches += B
+        if fspec is not None:
+            self.stats.filtered_searches += B
+            if fspec.tenant is not None:
+                self.stats.tenant_searches[fspec.tenant] = (
+                    self.stats.tenant_searches.get(fspec.tenant, 0) + B)
         if B == 0:
             return (np.zeros((0, k), np.int64),
                     np.zeros((0, k), np.float32))
@@ -1329,13 +1527,25 @@ class FreshDiskANN:
             self.stats.io_cache_hits += delta("cache_hits")
             self.stats.io_prefetch_hits += delta("prefetch_hits")
             self.stats.io_bytes_read += delta("bytes_read")
-            cands.append((self._map_ext(ids, s.layout.ext_ids), d))
+            # Filter against the LAYOUT's own label side tables (the
+            # generation this lane searched), not the live in-memory pair.
+            lay_labels = None
+            if s.layout.label_tenant is not None:
+                lay_labels = LabelTable(
+                    s.layout.capacity,
+                    0 if s.layout.label_bits is None
+                    else s.layout.label_bits.shape[1],
+                    s.layout.label_bits, s.layout.label_tenant)
+            cands.append((self._map_ext(ids, s.layout.ext_ids),
+                          self._slot_filter(ids, d, lay_labels, fspec)))
         for t in ([rw_t] if rw_t is not None else []) + ro_temps:
             ids, d, _, _ = mem.search(t.state, q, self.temp_cfg, k=kk,
                                       L=L, beam_width=W)
             self.stats.search_dispatches += 1
-            cands.append((self._map_ext(np.asarray(ids), t.ext_ids),
-                          np.asarray(d)))
+            ids = np.asarray(ids)
+            cands.append((self._map_ext(ids, t.ext_ids),
+                          self._slot_filter(ids, np.asarray(d),
+                                            t.labels, fspec)))
         return self._aggregate(cands, k, B)
 
     # ------------------------------------------------------------ snapshots
@@ -1361,7 +1571,9 @@ class FreshDiskANN:
                                self.lti.graph, codes=self.lti.codes,
                                codebook=self.lti.codebook,
                                ext_ids=self.lti_ext_ids,
-                               generation=self.stats.merges)
+                               generation=self.stats.merges,
+                               label_bits=self.lti_labels.bits,
+                               label_tenant=self.lti_labels.tenant)
             lay.close()
         else:
             np.savez_compressed(
@@ -1370,11 +1582,18 @@ class FreshDiskANN:
                    self.lti.graph._asdict().items()},
                 codes=np.asarray(self.lti.codes),
                 centroids=np.asarray(self.lti.codebook.centroids),
-                ext_ids=self.lti_ext_ids)
-        ro_blob = [(t.state, t.ext_ids, t.n) for t in self.ro + [self.rw]]
+                ext_ids=self.lti_ext_ids,
+                label_bits=self.lti_labels.bits,
+                label_tenant=self.lti_labels.tenant)
+        # Temp entries are 5-tuples since labels landed; load() still
+        # accepts the historical 3-tuples (label-free snapshots).
+        ro_blob = [(t.state, t.ext_ids, t.n, t.labels)
+                   for t in self.ro + [self.rw]]
         with open(os.path.join(path, "temps.pkl"), "wb") as f:
-            pickle.dump([(jax.tree.map(np.asarray, s), e, n)
-                         for s, e, n in ro_blob], f)
+            pickle.dump([(jax.tree.map(np.asarray, s), e, n,
+                          None if lb is None else lb.bits,
+                          None if lb is None else lb.tenant)
+                         for s, e, n, lb in ro_blob], f)
         # Record how much of the WAL (and which log epoch) this snapshot
         # already covers, so recovery replays only the suffix (no
         # double-apply).
@@ -1391,6 +1610,7 @@ class FreshDiskANN:
     def load(cls, path: str, cfg: SystemConfig) -> "FreshDiskANN":
         from ..storage.layout import is_layout, open_layout
         lay_path = os.path.join(path, "layout")
+        lti_label_bits = lti_label_tenant = None
         if is_layout(lay_path):
             # Decoupled snapshot (saved with cfg.storage_dir set): the LTI
             # comes back from the layout files; construction re-syncs the
@@ -1398,6 +1618,8 @@ class FreshDiskANN:
             lay = open_layout(lay_path)
             lti = lay.lti_state()
             ext_ids = lay.ext_ids.copy()
+            lti_label_bits = lay.label_bits
+            lti_label_tenant = lay.label_tenant
             lay.close()
         else:
             z = np.load(os.path.join(path, "lti.npz"))
@@ -1406,11 +1628,27 @@ class FreshDiskANN:
             lti = LTIState(g, jnp.asarray(z["codes"]),
                            pqm.PQCodebook(jnp.asarray(z["centroids"])))
             ext_ids = z["ext_ids"].copy()
+            if "label_tenant" in z.files:   # label-free snapshots lack these
+                lti_label_bits = z["label_bits"]
+                lti_label_tenant = z["label_tenant"]
         sys = cls(cfg, lti=lti, lti_ext_ids=ext_ids)
+        if lti_label_tenant is not None:
+            lb = sys.lti_labels
+            lb.tenant[:] = lti_label_tenant
+            if lti_label_bits is not None and lti_label_bits.size:
+                w = min(lb.n_words, lti_label_bits.shape[1])
+                lb.bits[:, :w] = lti_label_bits[:, :w]
         with open(os.path.join(path, "temps.pkl"), "rb") as f:
             temps = pickle.load(f)
-        for i, (s, e, n) in enumerate(temps):
-            t = _Temp(GraphState(*[jnp.asarray(x) for x in s]), e.copy(), n)
+        for i, entry in enumerate(temps):
+            s, e, n = entry[:3]
+            t = _Temp(GraphState(*[jnp.asarray(x) for x in s]), e.copy(), n,
+                      labels=LabelTable(len(e), cfg.filter_words))
+            if len(entry) >= 5 and entry[4] is not None:
+                t.labels.tenant[:] = entry[4]
+                if entry[3] is not None and entry[3].size:
+                    w = min(t.labels.n_words, entry[3].shape[1])
+                    t.labels.bits[:, :w] = entry[3][:, :w]
             # Last snapshot entry is the RW index, earlier ones are frozen RO
             # snapshots — tag them apart, matching the live-system tags.
             is_rw = i == len(temps) - 1
@@ -1452,6 +1690,7 @@ class FreshDiskANN:
                 restored.wal.close()
             self.lti = restored.lti
             self.lti_ext_ids = restored.lti_ext_ids
+            self.lti_labels = restored.lti_labels
             self.rw = restored.rw
             self.ro = restored.ro
             self.deleted_ext = restored.deleted_ext
@@ -1479,11 +1718,19 @@ class FreshDiskANN:
             records = list(replay(wal_path, start))
             wal, self.wal = self.wal, None
             try:
+                from .graph import unpack_labels
+                from .wal import OP_DELETE, OP_INSERT
                 for op, ext_id, vec in records:
-                    if op == 0:
+                    if op == OP_INSERT:
                         self.insert(ext_id, vec)
-                    else:
+                    elif op == OP_DELETE:
                         self.delete(ext_id)
+                    else:       # labeled insert: (vec, tenant, bits)
+                        self.insert(
+                            ext_id, vec.vec,
+                            labels=unpack_labels(vec.bits),
+                            tenant=(None if vec.tenant == NO_TENANT
+                                    else vec.tenant))
                     n += 1
                 self._flush_inserts()
             finally:
@@ -1523,9 +1770,22 @@ class FreshDiskANN:
 
 
 def bootstrap_system(vectors: np.ndarray, ext_ids: np.ndarray,
-                     cfg: SystemConfig, **build_kw) -> FreshDiskANN:
-    """Build the initial static LTI (paper: start from a DiskANN build)."""
+                     cfg: SystemConfig, labels=None, tenants=None,
+                     **build_kw) -> FreshDiskANN:
+    """Build the initial static LTI (paper: start from a DiskANN build).
+
+    ``labels`` (per-point iterables of label bit indices) and ``tenants``
+    (per-point tenant ids) optionally tag the bootstrap points — the build
+    assigns slots densely in input order, so row i's labels land in slot i.
+    """
     lti = build_lti(vectors, cfg.index, cfg.pq, **build_kw)
     table = np.full(cfg.index.capacity, -1, np.int64)
     table[:len(ext_ids)] = ext_ids
-    return FreshDiskANN(cfg, lti=lti, lti_ext_ids=table)
+    sys = FreshDiskANN(cfg, lti=lti, lti_ext_ids=table)
+    if labels is not None:
+        lb = sys.lti_labels
+        for i, ls in enumerate(labels):
+            lb.bits[i] = pack_labels(ls, lb.n_words)
+    if tenants is not None:
+        sys.lti_labels.tenant[:len(tenants)] = np.asarray(tenants, np.int32)
+    return sys

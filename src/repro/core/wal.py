@@ -7,19 +7,34 @@ rebuild the RW-TempIndex and DeleteList.
 
 Record format (little-endian):
     u8 op (0=insert, 1=delete) | i64 external_id | f32[dim] vector (insert only)
+
+Op 2 (labeled insert — filtered/multi-tenant points) extends op 0 with the
+point's label sidecar between the id and the vector:
+    u8 op=2 | i64 ext_id | i32 tenant | u8 n_words | u32[n_words] bits
+    | f32[dim] vector
+Logs containing only ops 0/1 are exactly the historical format, so old logs
+replay unchanged and label-free systems never write op 2.
 """
 from __future__ import annotations
 
 import os
 import struct
-from typing import Iterator, Optional
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 
 _HDR = struct.Struct("<4sIQ")   # magic, dim, start_seqno
 _REC = struct.Struct("<BQ")     # op, ext_id
+_LBL = struct.Struct("<iB")     # tenant, n_words (labeled-insert sidecar)
 MAGIC = b"FDWL"
-OP_INSERT, OP_DELETE = 0, 1
+OP_INSERT, OP_DELETE, OP_INSERT_LABELED = 0, 1, 2
+
+
+class LabeledVec(NamedTuple):
+    """Payload of an OP_INSERT_LABELED record (replay's third element)."""
+    vec: np.ndarray
+    tenant: int
+    bits: np.ndarray  # uint32[n_words] packed label bitset
 
 
 class WriteAheadLog:
@@ -39,6 +54,15 @@ class WriteAheadLog:
 
     def log_insert(self, ext_id: int, vec: np.ndarray) -> None:
         self._f.write(_REC.pack(OP_INSERT, ext_id))
+        self._f.write(np.asarray(vec, np.float32).tobytes())
+        self._flush()
+
+    def log_insert_labeled(self, ext_id: int, vec: np.ndarray, tenant: int,
+                           bits: np.ndarray) -> None:
+        bits = np.asarray(bits, np.uint32)
+        self._f.write(_REC.pack(OP_INSERT_LABELED, ext_id))
+        self._f.write(_LBL.pack(int(tenant), bits.size))
+        self._f.write(bits.tobytes())
         self._f.write(np.asarray(vec, np.float32).tobytes())
         self._flush()
 
@@ -88,6 +112,18 @@ def replay(path: str, start: Optional[int] = None
                 if len(vraw) < vec_bytes:
                     break
                 yield op, ext_id, np.frombuffer(vraw, np.float32).copy()
+            elif op == OP_INSERT_LABELED:
+                lraw = f.read(_LBL.size)
+                if len(lraw) < _LBL.size:
+                    break
+                tenant, n_words = _LBL.unpack(lraw)
+                braw = f.read(4 * n_words)
+                vraw = f.read(vec_bytes)
+                if len(braw) < 4 * n_words or len(vraw) < vec_bytes:
+                    break
+                yield op, ext_id, LabeledVec(
+                    np.frombuffer(vraw, np.float32).copy(), tenant,
+                    np.frombuffer(braw, np.uint32).copy())
             else:
                 yield op, ext_id, None
 

@@ -73,17 +73,21 @@ class ReplicaSet:
     def search_batch(self, queries: np.ndarray, k: int,
                      L: Optional[int] = None,
                      beam_width: Optional[int] = None,
-                     replica: Optional[int] = None
+                     replica: Optional[int] = None,
+                     filter=None
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Serve a query batch through the replica set.
 
         Identical contract to ``system.search_batch`` — same L/W/kk
         resolution, same ``batch_queries`` fixed-shape chunking with a
-        zero-padded tail, bit-identical per-query results — except each
-        micro-batch is dispatched to a replica: round-robin by default,
-        or pinned with ``replica=r``."""
+        zero-padded tail, same ``filter`` (FilterSpec) semantics,
+        bit-identical per-query results — except each micro-batch is
+        dispatched to a replica: round-robin by default, or pinned with
+        ``replica=r``."""
         sys_ = self.system
         sys_._flush_inserts()
+        fspec = filter if filter is not None and not filter.is_empty \
+            else None
         L = L or sys_.cfg.index.L_search
         if k > L:
             raise ValueError(
@@ -95,28 +99,33 @@ class ReplicaSet:
         q = np.asarray(queries, np.float32)
         B = q.shape[0]
         sys_.stats.searches += B
+        if fspec is not None:
+            sys_.stats.filtered_searches += B
+            if fspec.tenant is not None:
+                sys_.stats.tenant_searches[fspec.tenant] = (
+                    sys_.stats.tenant_searches.get(fspec.tenant, 0) + B)
         if B == 0:
             return (np.zeros((0, k), np.int64),
                     np.zeros((0, k), np.float32))
         bq = sys_.cfg.batch_queries
         if not bq or B <= bq:
-            return self._dispatch_sliced(q, bq, k, kk, L, W, replica)
+            return self._dispatch_sliced(q, bq, k, kk, L, W, replica, fspec)
         outs = []
         for lo in range(0, B, bq):
             chunk = q[lo:lo + bq]
             outs.append(self._dispatch_sliced(chunk, bq, k, kk, L, W,
-                                              replica))
+                                              replica, fspec))
         return (np.concatenate([o[0] for o in outs]),
                 np.concatenate([o[1] for o in outs]))
 
-    def _dispatch_sliced(self, chunk, bq, k, kk, L, W, replica):
+    def _dispatch_sliced(self, chunk, bq, k, kk, L, W, replica, fspec=None):
         """Pad one chunk to the compiled width, dispatch, slice pads off."""
         n = len(chunk)
         if bq and n < bq:
             qp = np.zeros((bq, chunk.shape[1]), np.float32)
             qp[:n] = chunk
             chunk = qp
-        ids, d = self._dispatch(chunk, k, kk, L, W, replica)
+        ids, d = self._dispatch(chunk, k, kk, L, W, replica, fspec)
         return ids[:n], d[:n]
 
     def _next_replica(self) -> int:
@@ -125,7 +134,7 @@ class ReplicaSet:
         return r
 
     # ------------------------------------------------------------- dispatch
-    def _dispatch(self, queries, k, kk, L, W, replica):
+    def _dispatch(self, queries, k, kk, L, W, replica, fspec=None):
         """Serve ONE fixed-shape micro-batch on one replica's device group.
 
         Mirrors ``system._search_dispatch``: same lane capture, same
@@ -147,9 +156,13 @@ class ReplicaSet:
                   if sys_.cfg.batch_fanout else None)
         if bundle is None or lti_entry is None:
             self.dispatches[r] += 1     # routed, served on the system path
-            return sys_._search_dispatch(queries, k, kk, L, W)
-        key, stack, t_tabs, l_tab, tables_np = bundle
-        t_drop, l_drop = sys_._drop_mask(key, tables_np)
+            return sys_._search_dispatch(queries, k, kk, L, W, fspec)
+        key, stack, t_tabs, l_tab, tables_np, label_tabs = bundle
+        if fspec is None:
+            t_drop, l_drop = sys_._drop_mask(key, tables_np)
+        else:
+            t_drop, l_drop = sys_._filter_drop(key, tables_np, label_tabs,
+                                               fspec)
         do_rerank = sys_.cfg.rerank
         step, sstack = self._replica_program(
             r, stack, k=k, kk=kk, L=L, W=W, rerank=do_rerank)

@@ -30,6 +30,17 @@ Queue growth under overload is bounded: submissions past
 ``SystemConfig.serve_queue_capacity`` are SHED — ``submit`` returns None
 and ``SystemStats.shed_requests`` counts them — so saturation surfaces as
 explicit rejections instead of unbounded latency.
+
+Filtered and multi-tenant traffic rides the same queue: ``submit`` takes an
+optional ``FilterSpec`` and a closed micro-batch contains only tickets that
+share the OLDEST queued ticket's spec (a batch is ONE ``search_batch``
+call, and the filter is a per-call argument — mixing specs in one batch is
+impossible, so the scheduler de-interleaves them while preserving per-spec
+FIFO order).  When ``SystemConfig.tenant_quota`` > 0, a tenant may hold at
+most that many queued tickets; submissions past the quota are shed with
+the same explicit contract (``submit`` returns None) and counted per
+tenant in ``SystemStats.tenant_sheds`` as well as ``shed_requests`` — one
+tenant's burst cannot crowd every other tenant out of the bounded queue.
 """
 from __future__ import annotations
 
@@ -84,13 +95,15 @@ class Ticket:
     scheduler's clock; ``missed`` is the deadline verdict recorded at
     completion."""
 
-    __slots__ = ("query", "arrival", "deadline", "ids", "dists",
+    __slots__ = ("query", "arrival", "deadline", "fspec", "ids", "dists",
                  "completion", "missed", "done")
 
-    def __init__(self, query: np.ndarray, arrival: float, deadline: float):
+    def __init__(self, query: np.ndarray, arrival: float, deadline: float,
+                 fspec=None):
         self.query = query
         self.arrival = arrival
         self.deadline = deadline
+        self.fspec = fspec
         self.ids: Optional[np.ndarray] = None
         self.dists: Optional[np.ndarray] = None
         self.completion: Optional[float] = None
@@ -157,6 +170,8 @@ class BatchScheduler:
         self.batch_queries = cfg.batch_queries
         self.capacity = cfg.serve_queue_capacity
         self.slo = cfg.slo_ms / 1e3 if cfg.slo_ms > 0 else None
+        self.tenant_quota = max(cfg.tenant_quota, 0)
+        self._queued_by_tenant: dict = {}
         self.clock: Clock = clock or cfg.clock or WallClock()
         self.dispatch_estimate = max(cfg.dispatch_estimate_ms, 0.0) / 1e3
         self._serve = serve or system.search_batch
@@ -171,19 +186,36 @@ class BatchScheduler:
         self._batches = 0
 
     # ------------------------------------------------------------- requests
-    def submit(self, query: np.ndarray) -> Optional[Ticket]:
+    def submit(self, query: np.ndarray, filter=None) -> Optional[Ticket]:
         """Admit one query (shape [dim]) or shed it.
 
-        Returns the caller's ``Ticket``, or None when the bounded queue is
-        full — the shed is counted, never silently dropped."""
+        ``filter`` is an optional ``FilterSpec`` carried on the ticket and
+        applied to the micro-batch that serves it.  Returns the caller's
+        ``Ticket``, or None when the bounded queue is full OR the ticket's
+        tenant already holds ``cfg.tenant_quota`` queued tickets — every
+        shed is counted (``shed_requests``; quota sheds additionally in
+        ``tenant_sheds[tenant]``), never silently dropped."""
         q = np.asarray(query, np.float32)
+        fspec = filter if filter is not None and not filter.is_empty \
+            else None
+        tenant = fspec.tenant if fspec is not None else None
         with self._cond:
             if len(self._queue) >= self.capacity:
                 self.stats.shed_requests += 1
                 return None
+            if (self.tenant_quota and tenant is not None
+                    and self._queued_by_tenant.get(tenant, 0)
+                    >= self.tenant_quota):
+                self.stats.shed_requests += 1
+                self.stats.tenant_sheds[tenant] = (
+                    self.stats.tenant_sheds.get(tenant, 0) + 1)
+                return None
             now = self.clock.now()
             deadline = now + self.slo if self.slo is not None else np.inf
-            t = Ticket(q, now, deadline)
+            t = Ticket(q, now, deadline, fspec)
+            if tenant is not None:
+                self._queued_by_tenant[tenant] = (
+                    self._queued_by_tenant.get(tenant, 0) + 1)
             self._queue.append(t)
             self.stats.scheduled_requests += 1
             self.stats.queue_depth = len(self._queue)
@@ -231,8 +263,31 @@ class BatchScheduler:
             return self._take_locked()
 
     def _take_locked(self) -> list[Ticket]:
-        n = min(len(self._queue), self.batch_queries)
-        batch = [self._queue.popleft() for _ in range(n)]
+        """Pop the next micro-batch: up to ``batch_queries`` tickets that
+        share the OLDEST queued ticket's filter spec, in FIFO order.  A
+        batch is one ``search_batch`` call and the filter is a per-call
+        argument, so mixed-spec arrivals de-interleave into same-spec
+        batches; tickets with other specs keep their queue positions."""
+        if not self._queue:
+            return []
+        spec = self._queue[0].fspec
+        batch: list[Ticket] = []
+        rest: list[Ticket] = []
+        while self._queue and len(batch) < self.batch_queries:
+            t = self._queue.popleft()
+            if t.fspec == spec:
+                batch.append(t)
+            else:
+                rest.append(t)
+        for t in reversed(rest):
+            self._queue.appendleft(t)
+        for t in batch:
+            if t.fspec is not None and t.fspec.tenant is not None:
+                left = self._queued_by_tenant.get(t.fspec.tenant, 0) - 1
+                if left > 0:
+                    self._queued_by_tenant[t.fspec.tenant] = left
+                else:
+                    self._queued_by_tenant.pop(t.fspec.tenant, None)
         self.stats.queue_depth = len(self._queue)
         return batch
 
@@ -250,8 +305,13 @@ class BatchScheduler:
             return
         qs = np.stack([t.query for t in batch])
         t0 = self.clock.now()
+        kw = {}
+        if batch[0].fspec is not None:
+            # Filter rides as a kwarg only when set, so label-free serve
+            # callables (and pre-filter test doubles) keep their signature.
+            kw["filter"] = batch[0].fspec
         ids, dists = self._serve(qs, self.k, L=self.L,
-                                 beam_width=self.beam_width)
+                                 beam_width=self.beam_width, **kw)
         t1 = self.clock.now()
         # EWMA toward the measured dispatch; on a virtual clock the
         # measurement is the test's advance (0 unless it models compute),

@@ -89,6 +89,10 @@ class StorageLayout:
     deleted: np.ndarray         # [capacity] bool
     ext_ids: np.ndarray         # [capacity] int64, -1 free
     centroids: Optional[np.ndarray]  # [m, ksub, dsub] f32 PQ codebook
+    label_bits: Optional[np.ndarray] = None   # [capacity, n_words] uint32
+    #   packed per-point label bitsets (filtered search side table)
+    label_tenant: Optional[np.ndarray] = None  # [capacity] int32 tenant
+    #   ids, -1 untenanted — None on layouts written before labels landed
 
     @property
     def row_bytes(self) -> int:
@@ -150,13 +154,18 @@ def _write_header(path: str, hdr: dict) -> None:
     fsync_dir(path)
 
 
-def _write_meta(path: str, active, deleted, ext_ids, centroids) -> None:
+def _write_meta(path: str, active, deleted, ext_ids, centroids,
+                label_bits=None, label_tenant=None) -> None:
     tmp = os.path.join(path, META + ".tmp")
     blobs = {"active": np.asarray(active, bool),
              "deleted": np.asarray(deleted, bool),
              "ext_ids": np.asarray(ext_ids, np.int64)}
     if centroids is not None:
         blobs["centroids"] = np.asarray(centroids, np.float32)
+    if label_bits is not None:
+        blobs["label_bits"] = np.asarray(label_bits, np.uint32)
+    if label_tenant is not None:
+        blobs["label_tenant"] = np.asarray(label_tenant, np.int32)
     with open(tmp, "wb") as f:
         np.savez(f, **blobs)
         f.flush()
@@ -166,7 +175,9 @@ def _write_meta(path: str, active, deleted, ext_ids, centroids) -> None:
 
 def write_layout(path: str, graph, *, codes=None, codebook=None,
                  ext_ids: Optional[np.ndarray] = None,
-                 generation: int = 0) -> StorageLayout:
+                 generation: int = 0,
+                 label_bits: Optional[np.ndarray] = None,
+                 label_tenant: Optional[np.ndarray] = None) -> StorageLayout:
     """Serialize a ``GraphState`` (plus optional PQ codes/codebook) into a
     fresh decoupled layout at ``path`` and return it opened.
 
@@ -201,7 +212,7 @@ def write_layout(path: str, graph, *, codes=None, codebook=None,
         f.flush()
         os.fsync(f.fileno())
     _write_meta(tmp, np.asarray(graph.active), np.asarray(graph.deleted),
-                ext_ids, cents)
+                ext_ids, cents, label_bits, label_tenant)
     hdr = _header_dict(capacity, R, vecs.shape[1], m, vecs.dtype.name,
                        int(graph.start), int(graph.n_total), generation)
     with open(os.path.join(tmp, HEADER), "w") as f:
@@ -239,17 +250,24 @@ def open_layout(path: str, mode: str = "r") -> StorageLayout:
         ext_ids = meta["ext_ids"].copy()
         centroids = (meta["centroids"].copy()
                      if "centroids" in meta.files else None)
+        label_bits = (meta["label_bits"].copy()
+                      if "label_bits" in meta.files else None)
+        label_tenant = (meta["label_tenant"].copy()
+                        if "label_tenant" in meta.files else None)
     return StorageLayout(
         path=path, capacity=cap, R=R, dim=dim, m=m,
         vec_dtype=hdr["vec_dtype"], start=hdr["start"],
         n_total=hdr["n_total"], generation=hdr["generation"],
         adjacency=adjacency, vectors=vectors, codes=codes,
         active=active, deleted=deleted, ext_ids=ext_ids,
-        centroids=centroids)
+        centroids=centroids, label_bits=label_bits,
+        label_tenant=label_tenant)
 
 
 def patch_layout(path: str, graph, *, codes=None, ext_ids=None,
-                 adj_changed: Optional[np.ndarray] = None) -> PatchStats:
+                 adj_changed: Optional[np.ndarray] = None,
+                 label_bits: Optional[np.ndarray] = None,
+                 label_tenant: Optional[np.ndarray] = None) -> PatchStats:
     """DGAI-style delta topology patch: rewrite only the adjacency rows that
     differ from what is on disk (plus vector/code rows of newly staged
     slots), update the side tables, and bump the header generation LAST —
@@ -301,7 +319,10 @@ def patch_layout(path: str, graph, *, codes=None, ext_ids=None,
         _write_meta(path, np.asarray(graph.active),
                     np.asarray(graph.deleted),
                     ext_ids if ext_ids is not None else lay.ext_ids,
-                    lay.centroids)
+                    lay.centroids,
+                    label_bits if label_bits is not None else lay.label_bits,
+                    label_tenant if label_tenant is not None
+                    else lay.label_tenant)
         _write_header(path, _header_dict(
             lay.capacity, lay.R, lay.dim, lay.m, lay.vec_dtype,
             int(graph.start), int(graph.n_total), stats.generation))

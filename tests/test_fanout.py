@@ -211,7 +211,7 @@ def test_lane_stack_keeps_lti_at_own_capacity(points, queries):
     sys_ = _three_tier_system(points)
     sys_._flush_inserts()              # buffered tail -> RW lane is live
     bundle = sys_._lane_bundle(*sys_._capture_lanes())
-    _, bstack, t_tabs, l_tab, _ = bundle
+    _, bstack, t_tabs, l_tab, _, _ = bundle
     assert bstack.temps.vectors.shape[1] == sys_.cfg.temp_capacity
     assert bstack.lti.vectors.shape[0] == sys_.cfg.index.capacity
     assert t_tabs.shape == (3, sys_.cfg.temp_capacity)

@@ -1,0 +1,255 @@
+"""Filtered & multi-tenant search against a brute-force filtered oracle.
+
+The label subsystem folds a ``FilterSpec`` into the cached drop mask that
+``unified_search`` already applies POST-search — one extra AND, no new
+kernel — so two contracts anchor this suite:
+
+  * validity is absolute: a filtered search NEVER returns an id that fails
+    the predicate (label bits or tenant), at any selectivity, before or
+    after merges, on the in-memory and the on-disk path alike;
+  * selectivity = 1.0 is free: a filter every live point matches must be
+    bit-identical (ids, dists, dispatch counters) to the unfiltered call —
+    pinned as a regression so the filter path can never perturb the
+    unfiltered one.
+
+Recall floors at lower selectivities are measured against the brute-force
+oracle restricted to matching points; the search is post-filtering, so the
+floors scale L with 1/selectivity (the paper's standard filtered-search
+accommodation) rather than expecting fixed-L recall to survive a 100x
+candidate thinning.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.config import IndexConfig, PQConfig, SystemConfig
+from repro.core.graph import FilterSpec, LabelTable, filter_match, pack_labels
+from repro.core.system import bootstrap_system
+
+from conftest import DIM
+
+N_BOOT = 400
+N_STREAM = 100
+N_TENANTS = 4
+
+# label bit -> fraction of points carrying it (the selectivity ladder)
+SEL_BITS = {0: 1.0, 1: 0.5, 2: 0.1, 3: 0.01}
+
+
+def _labels_for(i: int) -> list:
+    ls = [0]
+    if i % 2 == 0:
+        ls.append(1)
+    if i % 10 == 0:
+        ls.append(2)
+    if i % 100 == 0:
+        ls.append(3)
+    return ls
+
+
+def _cfg(tmp=None, **kw):
+    base = dict(
+        index=IndexConfig(capacity=2048, dim=DIM, R=24, L_build=32,
+                          L_search=64, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=8, ksub=32, kmeans_iters=4),
+        ro_snapshot_points=128, merge_threshold=256,
+        temp_capacity=512, insert_batch=64,
+        filter_words=1, wal_dir=str(tmp) if tmp else None)
+    base.update(kw)
+    return SystemConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def labeled(points):
+    """System over conftest points: labeled bootstrap + labeled streaming
+    inserts (so filters are exercised on the LTI lane AND the temp lanes),
+    plus the side truth tables the oracle filters by."""
+    sys_ = bootstrap_system(
+        points[:N_BOOT], np.arange(N_BOOT), _cfg(),
+        labels=[_labels_for(i) for i in range(N_BOOT)],
+        tenants=[i % N_TENANTS for i in range(N_BOOT)])
+    truth = {i: (points[i], _labels_for(i), i % N_TENANTS)
+             for i in range(N_BOOT)}
+    for j in range(N_STREAM):
+        i, e = N_BOOT + j, 1000 + j
+        sys_.insert(e, points[i], labels=_labels_for(i),
+                    tenant=i % N_TENANTS)
+        truth[e] = (points[i], _labels_for(i), i % N_TENANTS)
+    sys_._flush_inserts()
+    return sys_, truth
+
+
+def _oracle(truth, pred, queries, k):
+    """Brute-force filtered ground truth: top-k over points passing pred."""
+    keys = np.asarray([e for e in sorted(truth) if pred(*truth[e][1:])])
+    mat = np.stack([truth[e][0] for e in keys])
+    d = ((mat[None, :, :] - np.asarray(queries)[:, None, :]) ** 2).sum(-1)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return keys[order]
+
+
+def _recall(ids, gt):
+    hits = total = 0
+    for row, g in zip(np.asarray(ids), gt):
+        hits += len(set(int(x) for x in row if x >= 0)
+                    & set(int(x) for x in g))
+        total += len(g)
+    return hits / total
+
+
+# ------------------------------------------------------------ selectivity
+@pytest.mark.parametrize("bit,sel", sorted(SEL_BITS.items()))
+def test_filtered_recall_vs_oracle(labeled, queries, bit, sel):
+    """Post-filtering semantics: the drop mask infs non-matching points out
+    of the ALREADY-searched candidates, so a client widens k/L by ~1/sel
+    and takes the leading k rows (matching ids sort first, -1 pads last) —
+    the standard filtered-search accommodation this suite anchors."""
+    sys_, truth = labeled
+    k = 5
+    k_eff = k if sel == 1.0 else min(256, int(np.ceil(k / sel * 1.5)))
+    L = min(max(64, 2 * k_eff), 1024)
+    spec = FilterSpec(all_of=(bit,))
+    ids, dists = sys_.search_batch(queries, k_eff, L=L, filter=spec)
+    ids = np.asarray(ids)[:, :k]
+    # validity: every returned id carries the bit — zero false positives
+    for row in ids:
+        for e in (int(x) for x in row if x >= 0):
+            assert bit in truth[e][1], (
+                f"id {e} returned without label bit {bit} (sel={sel})")
+    gt = _oracle(truth, lambda ls, t: bit in ls, queries, k)
+    floor = {1.0: 0.80, 0.5: 0.60, 0.1: 0.50, 0.01: 0.50}[sel]
+    rec = _recall(ids, gt)
+    assert rec >= floor, f"filtered recall {rec:.3f} < {floor} (sel={sel})"
+
+
+def test_selectivity_one_bit_parity(labeled, queries):
+    """THE pinned regression: a filter every point matches is bit-identical
+    to no filter at all — ids, dists, and dispatch accounting."""
+    sys_, _ = labeled
+    d0 = sys_.stats.search_dispatches
+    ids_u, dist_u = sys_.search_batch(queries, 10)
+    du = sys_.stats.search_dispatches - d0
+    d0 = sys_.stats.search_dispatches
+    ids_f, dist_f = sys_.search_batch(queries, 10,
+                                      filter=FilterSpec(all_of=(0,)))
+    df = sys_.stats.search_dispatches - d0
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(dist_f), np.asarray(dist_u))
+    assert df == du, (df, du)
+
+
+def test_empty_filterspec_is_unfiltered(labeled, queries):
+    """FilterSpec() constrains nothing: resolved to the unfiltered path
+    (same cached drop mask, not merely equal results)."""
+    sys_, _ = labeled
+    f0 = sys_.stats.filtered_searches
+    ids_u, dist_u = sys_.search_batch(queries, 5)
+    ids_e, dist_e = sys_.search_batch(queries, 5, filter=FilterSpec())
+    np.testing.assert_array_equal(np.asarray(ids_e), np.asarray(ids_u))
+    np.testing.assert_array_equal(np.asarray(dist_e), np.asarray(dist_u))
+    assert sys_.stats.filtered_searches == f0    # not counted as filtered
+
+
+# ------------------------------------------------------------- tenants
+def test_tenant_filter_vs_oracle(labeled, queries):
+    sys_, truth = labeled
+    for tenant in range(N_TENANTS):
+        spec = FilterSpec(tenant=tenant)
+        ids, _ = sys_.search_batch(queries, 5, L=128, filter=spec)
+        for row in np.asarray(ids):
+            for e in (int(x) for x in row if x >= 0):
+                assert truth[e][2] == tenant, (
+                    f"cross-tenant leak: id {e} (tenant {truth[e][2]}) "
+                    f"returned for tenant {tenant}")
+        gt = _oracle(truth, lambda ls, t: t == tenant, queries, 5)
+        assert _recall(ids, gt) >= 0.5
+
+
+def test_tenant_and_label_compose(labeled, queries):
+    """tenant + label in one spec: the AND of both predicates."""
+    sys_, truth = labeled
+    spec = FilterSpec(all_of=(1,), tenant=2)
+    ids, _ = sys_.search_batch(queries, 5, L=256, filter=spec)
+    for row in np.asarray(ids):
+        for e in (int(x) for x in row if x >= 0):
+            assert 1 in truth[e][1] and truth[e][2] == 2
+
+
+def test_tenant_search_accounting(labeled, queries):
+    sys_, _ = labeled
+    before = dict(sys_.stats.tenant_searches)
+    sys_.search_batch(queries, 3, filter=FilterSpec(tenant=1))
+    after = sys_.stats.tenant_searches
+    assert after[1] - before.get(1, 0) == len(queries)
+    assert sys_.stats.filtered_searches > 0
+
+
+# -------------------------------------------------------- lifecycle
+def test_filters_survive_delete_and_merge(points, queries):
+    """Labels follow points through delete + StreamingMerge: the merged LTI
+    answers filtered searches with the same validity guarantee, and the
+    deleted ids are gone from filtered results too."""
+    sys_ = bootstrap_system(
+        points[:200], np.arange(200), _cfg(),
+        labels=[_labels_for(i) for i in range(200)],
+        tenants=[i % N_TENANTS for i in range(200)])
+    for j in range(60):
+        sys_.insert(1000 + j, points[200 + j],
+                    labels=_labels_for(200 + j),
+                    tenant=(200 + j) % N_TENANTS)
+    victims = [4, 8, 1000, 1004]
+    for e in victims:
+        sys_.delete(e)
+    sys_.merge()
+    sys_.wait_merge()
+    for tenant in range(N_TENANTS):
+        ids, _ = sys_.search_batch(queries, 5, L=128,
+                                   filter=FilterSpec(tenant=tenant))
+        for row in np.asarray(ids):
+            for e in (int(x) for x in row if x >= 0):
+                assert e not in victims
+                i = e - 1000 + 200 if e >= 1000 else e
+                assert i % N_TENANTS == tenant, (
+                    f"cross-tenant leak after merge: {e}")
+
+
+def test_filtered_search_disk(points, queries, tmp_path):
+    """The decoupled on-disk path honors the same FilterSpec: labels ride
+    the layout's meta side tables and filter the LTI lane served off disk."""
+    cfg = _cfg(tmp_path, storage_dir=str(tmp_path / "store"))
+    sys_ = bootstrap_system(
+        points[:200], np.arange(200), cfg,
+        labels=[_labels_for(i) for i in range(200)],
+        tenants=[i % N_TENANTS for i in range(200)])
+    ids, _ = sys_.search_disk(queries[:8], 5, filter=FilterSpec(tenant=1))
+    for row in np.asarray(ids):
+        for e in (int(x) for x in row if x >= 0):
+            assert e % N_TENANTS == 1, f"disk-path tenant leak: {e}"
+    sys_.close_storage()
+
+
+# ------------------------------------------------------ unit: bit packing
+def test_pack_unpack_roundtrip():
+    from repro.core.graph import unpack_labels
+    row = pack_labels([0, 3, 31, 32, 63], 2)
+    assert row.dtype == np.uint32 and row.shape == (2,)
+    assert sorted(unpack_labels(row)) == [0, 3, 31, 32, 63]
+    with pytest.raises(ValueError):
+        pack_labels([64], 2)                      # out of range for 2 words
+
+
+def test_filter_match_semantics():
+    tab = LabelTable(4, 1)
+    tab.set_row(0, pack_labels([0, 1], 1), 7)
+    tab.set_row(1, pack_labels([1], 1), 7)
+    tab.set_row(2, pack_labels([0], 1), 8)
+    # row 3 untouched: no labels, no tenant
+    m = filter_match(tab, FilterSpec(all_of=(0, 1)))
+    assert m.tolist() == [True, False, False, False]
+    m = filter_match(tab, FilterSpec(any_of=(0, 1)))
+    assert m.tolist() == [True, True, True, False]
+    m = filter_match(tab, FilterSpec(tenant=7))
+    assert m.tolist() == [True, True, False, False]
+    m = filter_match(tab, FilterSpec(all_of=(0,), tenant=8))
+    assert m.tolist() == [False, False, True, False]

@@ -174,6 +174,169 @@ def test_no_truncate_without_snapshot_dir(tmp_path, points):
     assert crashed.size == twin.size == N0 + 160
 
 
+# ---------------------------------------------------------------------------
+# Label/tenant durability: the same crash matrix with every inserted point
+# carrying a label bitset + tenant id.  Labels ride the WAL as op-2 records,
+# snapshots as LTI/temp side tables, and the decoupled layout's meta blobs —
+# each crash epoch must reproduce them bit-for-bit (asserted through filtered
+# search parity against the never-crashed twin, plus direct table equality).
+# ---------------------------------------------------------------------------
+N_TEN = 3
+
+
+def _labeled_traffic(points, start, n, id0):
+    return [("il", id0 + i, points[start + i], [i % 4], (id0 + i) % N_TEN)
+            for i in range(n)]
+
+
+def _apply_labeled(sys_, ops):
+    for op in ops:
+        if op[0] == "il":
+            sys_.insert(op[1], op[2], labels=op[3], tenant=op[4])
+        elif op[0] == "i":
+            sys_.insert(op[1], op[2])
+        else:
+            sys_.delete(op[1])
+
+
+def _label_map(sys_):
+    """ext_id -> (tenant, bits) across every live tier — the durability
+    ground truth, independent of which tier a copy landed in."""
+    sys_._flush_inserts()
+    out = {}
+    tiers = [(sys_.lti_ext_ids, sys_.lti_labels)]
+    tiers += [(t.ext_ids, t.labels) for t in [sys_.rw] + list(sys_.ro)]
+    for ext, tab in tiers:
+        for slot in np.nonzero(ext >= 0)[0]:
+            e = int(ext[slot])
+            if e in sys_.deleted_ext:
+                continue
+            out[e] = (int(tab.tenant[slot]), tuple(tab.bits[slot].tolist()))
+    return out
+
+
+def _assert_filter_twinned(recovered, twin, queries):
+    """Unfiltered searches stay bit-twinned; labels are compared as exact
+    per-id maps rather than through filtered-search bit-parity — recovery
+    replays the suffix into a FRESH RW tier, so the recovered system's
+    temp-tier split can legitimately differ from the twin's rollover
+    history, which shifts kk-deep (post-filter-visible) candidates without
+    any label having been lost.  Filtered results must still be leak-free
+    on both systems."""
+    from repro.core.graph import FilterSpec, filter_match, LabelTable
+    _assert_twinned(recovered, twin, queries)
+    m_r, m_t = _label_map(recovered), _label_map(twin)
+    assert m_r == m_t, "label/tenant tables diverged after recovery"
+    for spec in (FilterSpec(tenant=1), FilterSpec(all_of=(2,)),
+                 FilterSpec(all_of=(0,), tenant=0)):
+        for sys_ in (recovered, twin):
+            ids, _ = sys_.search_batch(queries[:8], 5, filter=spec)
+            for row in np.asarray(ids):
+                for e in (int(x) for x in row if x >= 0):
+                    ten, bits = m_r[e]
+                    tab = LabelTable(1, len(bits),
+                                     bits=np.asarray([bits], np.uint32),
+                                     tenant=np.asarray([ten], np.int32))
+                    assert filter_match(tab, spec)[0], (
+                        f"filter leak after recovery: id {e} vs {spec}")
+
+
+def _boot_labeled(points, cfg):
+    return bootstrap_system(
+        points[:N0], np.arange(N0), cfg,
+        labels=[[i % 4] for i in range(N0)],
+        tenants=[i % N_TEN for i in range(N0)])
+
+
+def test_labels_survive_wal_replay(tmp_path, points, queries):
+    """Crash before any merge: labeled op-2 records in the WAL suffix replay
+    with their bitsets and tenants intact."""
+    cfg = _cfg(tmp_path, filter_words=1)
+    live = _boot_labeled(points, cfg)
+    twin = _boot_labeled(points, _cfg(tmp_path, wal=None, filter_words=1))
+    pre = _labeled_traffic(points, N0, 40, 5000)
+    _apply_labeled(live, pre)
+    _apply_labeled(twin, pre)
+    live.save(str(tmp_path / "snap"))
+    post = _labeled_traffic(points, N0 + 40, 30, 6000) + [("d", 5003)]
+    _apply_labeled(live, post)
+    _apply_labeled(twin, post)
+
+    crashed = FreshDiskANN(cfg)
+    n = crashed.recover(str(tmp_path / "snap"))
+    assert n == len(post)
+    _assert_filter_twinned(crashed, twin, queries)
+    np.testing.assert_array_equal(crashed.lti_labels.bits,
+                                  twin.lti_labels.bits)
+    np.testing.assert_array_equal(crashed.lti_labels.tenant,
+                                  twin.lti_labels.tenant)
+
+
+def test_labels_survive_merge_truncate(tmp_path, points, queries):
+    """Crash after a snapshot-before-truncate merge: the merged LTI's label
+    side tables (scattered to merge-assigned slots) plus the fresh-epoch
+    op-2 suffix reproduce every bitset."""
+    cfg = _cfg(tmp_path, snaps="snaps", merge_threshold=128, filter_words=1)
+    live = _boot_labeled(points, cfg)
+    twin = _boot_labeled(points, _cfg(tmp_path, wal=None,
+                                      merge_threshold=128, filter_words=1))
+    pre = _labeled_traffic(points, N0, 160, 5000)  # crosses the threshold
+    _apply_labeled(live, pre)
+    _apply_labeled(twin, pre)
+    assert live.stats.merges >= 1
+    post = _labeled_traffic(points, N0 + 160, 25, 7000) + [("d", 7001)]
+    _apply_labeled(live, post)
+    _apply_labeled(twin, post)
+
+    crashed = FreshDiskANN(cfg)
+    n = crashed.recover()
+    assert n == (160 - 128) + len(post)
+    _assert_filter_twinned(crashed, twin, queries)
+    # The merge moved labeled points INTO the LTI: their slots carry bits.
+    merged = np.isin(crashed.lti_ext_ids, [op[1] for op in pre])
+    assert merged.any()
+    assert (crashed.lti_labels.tenant[merged] >= 0).all()
+
+
+def test_labels_survive_decoupled_layout(tmp_path, points, queries):
+    """Crash after a decoupled-layout merge snapshot: labels ride the
+    layout's meta side tables and come back through open_layout — filtered
+    search agrees with the twin on the in-memory AND the disk path."""
+    from repro.core.graph import FilterSpec
+    from repro.storage.layout import open_layout
+
+    cfg = _cfg(tmp_path, snaps="snaps", merge_threshold=128,
+               storage_dir=str(tmp_path / "store"), adjacency_cache_mb=0,
+               filter_words=1)
+    live = _boot_labeled(points, cfg)
+    twin = _boot_labeled(points, _cfg(tmp_path, wal=None,
+                                      merge_threshold=128, filter_words=1))
+    pre = _labeled_traffic(points, N0, 160, 5000)
+    _apply_labeled(live, pre)
+    _apply_labeled(twin, pre)
+    assert live.stats.merges >= 1
+    snap = live.latest_snapshot()
+    lay = open_layout(os.path.join(snap, "layout"))
+    assert lay.label_bits is not None and lay.label_tenant is not None
+    post = _labeled_traffic(points, N0 + 160, 25, 7000)
+    _apply_labeled(live, post)
+    _apply_labeled(twin, post)
+    live.close_storage()
+    live.wal.close()
+
+    crashed = FreshDiskANN(cfg)
+    n = crashed.recover()
+    assert n == (160 - 128) + len(post)
+    _assert_filter_twinned(crashed, twin, queries)
+    # Disk path, filtered: validity straight off the recovered layout.
+    ids_d, _ = crashed.search_disk(queries[:8], 5,
+                                   filter=FilterSpec(tenant=1))
+    for row in np.asarray(ids_d):
+        for e in (int(x) for x in row if x >= 0):
+            assert e % N_TEN == 1, f"disk-path tenant leak after crash: {e}"
+    crashed.close_storage()
+
+
 def test_recover_from_decoupled_layout_snapshot(tmp_path, points, queries):
     """With ``storage_dir`` set, the merge snapshot saves the LTI as the
     decoupled on-disk layout (``layout/`` directory) instead of a monolithic

@@ -262,6 +262,43 @@ def test_replica_round_robin_accounting(points, queries):
         rs.search_batch(queries[:2], k=5, replica=7)
 
 
+def test_replica_set_filter_parity(points, queries):
+    """Filtered micro-batches through the replica router are bit-identical
+    to the system's own filtered ``search_batch`` — the filter folds into
+    the same drop mask on both paths, so replica routing cannot perturb a
+    filtered result (the 4-fake-device half is ``scripts/filter_probe.py``).
+    Stats accounting (filtered/tenant counters) accrues on either path."""
+    from repro.core.graph import FilterSpec
+    from repro.serving import ReplicaSet
+    sys_ = bootstrap_system(
+        points[:400], np.arange(400), _sys_cfg(batch_queries=4,
+                                               filter_words=1),
+        labels=[[i % 3] for i in range(400)],
+        tenants=[i % 2 for i in range(400)])
+    for i in range(60):
+        sys_.insert(2000 + i, points[500 + i], labels=[i % 3],
+                    tenant=i % 2)
+    for e in (0, 5, 2000):
+        sys_.delete(e)
+    rs = ReplicaSet(sys_, 1)
+    for spec in (FilterSpec(tenant=1), FilterSpec(all_of=(1,)),
+                 FilterSpec(all_of=(0,), tenant=0)):
+        ref_ids, ref_d = sys_.search_batch(queries[:12], k=5, filter=spec)
+        ids, d = rs.search_batch(queries[:12], k=5, filter=spec)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+    f0 = sys_.stats.filtered_searches
+    rs.search_batch(queries[:4], k=5, filter=FilterSpec(tenant=1))
+    assert sys_.stats.filtered_searches - f0 == 4
+    assert sys_.stats.tenant_searches.get(1, 0) >= 4
+    # unfiltered requests through the same router stay on the cached
+    # unfiltered drop mask — parity with the direct path is unchanged
+    ref_ids, ref_d = sys_.search_batch(queries[:8], k=5)
+    ids, d = rs.search_batch(queries[:8], k=5)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(d, ref_d)
+
+
 def test_replica_set_degrades_to_device_census(points):
     """Asking for more replicas x shards than devices exist degrades (cap
     shards, then replicas) instead of raising — same posture as

@@ -275,6 +275,127 @@ def test_reachability_gauge_low_rate_cycles():
     assert sys_.stats.repair_escalations <= sys_.stats.global_repairs + 1
 
 
+# ---------------------------------------------------------------------------
+# Tenant isolation: random multi-tenant interleavings must NEVER return a
+# cross-tenant id, and one tenant's deletes must not perturb another tenant
+# beyond shared-topology recall equivalence.
+# ---------------------------------------------------------------------------
+N_TENANTS = 3
+
+
+def _tenant_cfg(**kw):
+    # Small capacity: the isolation campaign replays hundreds of fresh
+    # systems, and identical shapes keep every replay on cached programs.
+    base = dict(
+        index=IndexConfig(capacity=256, dim=DIM, R=12, L_build=20,
+                          L_search=24, alpha=1.2),
+        pq=PQConfig(dim=DIM, m=4, ksub=16, kmeans_iters=2),
+        ro_snapshot_points=16, merge_threshold=32,
+        temp_capacity=96, insert_batch=8, filter_words=1)
+    base.update(kw)
+    return SystemConfig(**base)
+
+
+def run_tenant_interleaving(seed: int, n_ops: int = 16) -> None:
+    """One random multi-tenant op stream; raises on any cross-tenant leak."""
+    from repro.core.graph import FilterSpec
+    rng = np.random.default_rng(seed)
+    n0 = 24
+    base = rng.standard_normal((n0, DIM)).astype(np.float32)
+    owner = {e: e % N_TENANTS for e in range(n0)}
+    sys_ = bootstrap_system(base, np.arange(n0), _tenant_cfg(),
+                            tenants=[owner[e] for e in range(n0)])
+    live = dict(owner)
+    next_id = 1000
+
+    def check_isolation():
+        t = int(rng.integers(0, N_TENANTS))
+        q = rng.standard_normal((2, DIM)).astype(np.float32)
+        ids, _ = sys_.search_batch(q, 3, filter=FilterSpec(tenant=t))
+        for row in np.asarray(ids):
+            for e in (int(x) for x in row if x >= 0):
+                assert owner.get(e) == t, (
+                    f"cross-tenant leak: id {e} (tenant {owner.get(e)}) "
+                    f"returned for tenant {t} (seed {seed})")
+                assert e in live, (
+                    f"deleted id {e} returned for tenant {t} (seed {seed})")
+
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.5:
+            t = int(rng.integers(0, N_TENANTS))
+            sys_.insert(next_id, _mk_vec(rng), tenant=t)
+            owner[next_id] = t
+            live[next_id] = t
+            next_id += 1
+        elif r < 0.65 and len(live) > 6:
+            e = int(rng.choice(sorted(live)))
+            sys_.delete(e)
+            del live[e]
+        elif r < 0.72:
+            sys_.merge()
+            sys_.wait_merge()
+        else:
+            check_isolation()
+    check_isolation()
+
+
+def test_tenant_isolation_campaign():
+    """The 200-interleaving zero-leak campaign: every generated multi-tenant
+    stream, across flushes, rollovers and merges, returns only the filter's
+    tenant.  Fixed shapes keep all 200 replays on cached device programs."""
+    for seed in range(200):
+        run_tenant_interleaving(seed, n_ops=12)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.integers(8, 24))
+    @settings(max_examples=10, deadline=None)
+    def test_tenant_isolation_hypothesis(seed, n_ops):
+        run_tenant_interleaving(seed, n_ops=n_ops)
+
+
+def test_tenant_deletes_do_not_perturb_others():
+    """Delete every tenant-0 point (plus a merge); tenant-1's filtered
+    recall against its own oracle must stay equivalent — shared topology
+    may shift individual edges, but isolation means another tenant's churn
+    cannot collapse this tenant's results."""
+    from repro.core.graph import FilterSpec
+    rng = np.random.default_rng(31)
+    n0 = 60
+    base = rng.standard_normal((n0, DIM)).astype(np.float32)
+    mk = lambda: bootstrap_system(
+        base, np.arange(n0), _tenant_cfg(),
+        tenants=[e % N_TENANTS for e in range(n0)])
+    s_keep, s_churn = mk(), mk()
+    for e in range(0, n0, N_TENANTS):          # tenant-0 points
+        s_churn.delete(e)
+    s_churn.merge()
+    s_churn.wait_merge()
+    q = rng.standard_normal((8, DIM)).astype(np.float32)
+
+    t1 = [e for e in range(n0) if e % N_TENANTS == 1]
+    mat = base[t1]
+    gt = np.asarray(brute_force(jnp.asarray(mat), jnp.ones(len(t1), bool),
+                                jnp.asarray(q), 3))
+    gt_ids = np.asarray(t1)[gt]
+
+    def t1_recall(sys_):
+        ids, _ = sys_.search_batch(q, 8, filter=FilterSpec(tenant=1))
+        hits = total = 0
+        for row, g in zip(np.asarray(ids)[:, :3], gt_ids):
+            for e in (int(x) for x in row if x >= 0):
+                assert e % N_TENANTS == 1, f"leak: {e}"
+            hits += len(set(int(x) for x in row if x >= 0)
+                        & set(g.tolist()))
+            total += len(g)
+        return hits / total
+
+    r_keep, r_churn = t1_recall(s_keep), t1_recall(s_churn)
+    assert r_keep >= 0.7, r_keep
+    assert r_churn >= r_keep - 0.2, (r_keep, r_churn)
+
+
 def test_consolidate_standalone():
     """FreshDiskANN.consolidate(): Algorithm 4 on the LTI outside a merge —
     deleted LTI residents leave the graph, the DeleteList retires ids with

@@ -195,10 +195,10 @@ def test_delete_during_inflight_flush_sticks(points, monkeypatch):
     started, release = threading.Event(), threading.Event()
     inner = sys_._flush_compute
 
-    def gated(ids, vecs):
+    def gated(ids, vecs, bits, tens):
         started.set()
         assert release.wait(timeout=30)
-        inner(ids, vecs)
+        inner(ids, vecs, bits, tens)
 
     monkeypatch.setattr(sys_, "_flush_compute", gated)
     victim = 3000
@@ -232,7 +232,7 @@ def test_flush_latency_sampled_once_per_flush(points, monkeypatch):
     inner = sys_._flush_compute
     monkeypatch.setattr(
         sys_, "_flush_compute",
-        lambda ids, vecs: (_time.sleep(0.25), inner(ids, vecs)))
+        lambda ids, vecs, bits, tens: (_time.sleep(0.25), inner(ids, vecs, bits, tens)))
     n = sys_.cfg.insert_batch * 2
     for i in range(n):
         sys_.insert(4000 + i, points[300 + i])
